@@ -1,0 +1,55 @@
+"""Shared benchmark utilities: timing, CSV emission, cached CSNN training."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock microseconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return 1e6 * sorted(times)[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def trained_csnn(steps: int = 400, n_train: int = 3000, seed: int = 0):
+    """Train (or load cached) paper-CSNN on synth digits; returns
+    (cfg, float_params, train/test arrays)."""
+    from repro.configs.csnn_paper import FULL as cfg
+    from repro.core.conversion import fit_ann, normalize_params
+    from repro.core.csnn import init_params
+    from repro.data.synthetic import synth_digits
+
+    cache = RESULTS / "csnn_params.npz"
+    xtr, ytr = synth_digits(n_train, seed=seed)
+    xte, yte = synth_digits(1000, seed=seed + 1)
+    if cache.exists():
+        raw = np.load(cache)
+        params = {}
+        for k in raw.files:
+            layer, leaf = k.rsplit("/", 1)
+            params.setdefault(layer, {})[leaf] = jnp.asarray(raw[k])
+        return cfg, params, (xtr, ytr, xte, yte)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    params = fit_ann(params, cfg, xtr, ytr, steps=steps, log_every=0)
+    params = normalize_params(params, jnp.asarray(xtr[:256]), cfg)
+    cache.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(cache, **{f"{layer}/{leaf}": np.asarray(v)
+                       for layer, d in params.items() for leaf, v in d.items()})
+    return cfg, params, (xtr, ytr, xte, yte)

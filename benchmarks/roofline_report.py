@@ -1,0 +1,72 @@
+"""Render the dry-run cell JSONs into the EXPERIMENTS.md roofline table
+and rank hillclimb candidates.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--tag baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(tag: str = "baseline") -> list[dict]:
+    cells = []
+    for f in sorted(RESULTS.glob(f"*__{tag}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def fmt_t(sec: float) -> str:
+    return f"{sec * 1e3:.0f}" if sec < 99 else f"{sec:.1f}k"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.tag)
+    rows = []
+    print("| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | bottleneck "
+          "| useful FLOPs | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in sorted(cells, key=lambda c: (c["arch"], SHAPE_ORDER.index(c["shape"]),
+                                          c["mesh"])):
+        key = f'| {c["arch"]} | {c["shape"]} | {c["mesh"]} '
+        if c["status"] == "skipped":
+            print(key + f'| — | — | — | skipped: {c["reason"][:48]} | — | — |')
+            continue
+        if c["status"] != "ok":
+            print(key + f'| ERR | {c["error"][:60]} |')
+            continue
+        r = c["roofline"]
+        tc, tm, tx = r["t_compute"], r["t_memory"], r["t_collective"]
+        dom = max(tc, tm, tx)
+        # roofline fraction: compute term / dominant term — how close the
+        # step is to being limited by the MXU rather than memory/wire
+        frac = tc / dom if dom else 0.0
+        ratio = r["useful_flops_ratio"]
+        print(key + f'| {fmt_t(tc)} | {fmt_t(tm)} | {fmt_t(tx)} | {r["bottleneck"]} '
+              f'| {ratio:.2f} | {frac:.2f} |')
+        rows.append((c["arch"], c["shape"], c["mesh"], tc, tm, tx, frac))
+
+    print("\n-- hillclimb candidates (single-pod) --")
+    single = [r for r in rows if r[2] == "single"]
+    worst = sorted(single, key=lambda r: r[6])[:5]
+    print("worst roofline fraction:")
+    for r in worst:
+        print(f"  {r[0]} x {r[1]}: frac {r[6]:.3f} (c {fmt_t(r[3])} m {fmt_t(r[4])} "
+              f"x {fmt_t(r[5])} ms)")
+    coll = sorted(single, key=lambda r: -(r[5] / max(r[3] + r[4] + r[5], 1e-12)))[:5]
+    print("most collective-bound:")
+    for r in coll:
+        print(f"  {r[0]} x {r[1]}: t_coll {fmt_t(r[5])} ms "
+              f"({100 * r[5] / (r[3] + r[4] + r[5]):.0f}% of total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark harness: one module per paper table. Prints
+``name,us_per_call,derived`` CSV rows (see each module's docstring for
+the paper table it reproduces)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (table1_parallelism, table2_roofline,
+                   table3_sparsity_utilization, table4_accuracy,
+                   table5_throughput)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table4_accuracy, table3_sparsity_utilization,
+                table1_parallelism, table5_throughput, table2_roofline):
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

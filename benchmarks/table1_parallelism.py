@@ -1,0 +1,79 @@
+"""Paper Table I: throughput/efficiency vs degree of parallelism.
+
+The FPGA replicates whole processing units (AEQs + conv cores +
+thresholding units) xP.  The TPU analogue sweeps the two replication
+axes of our implementation: ``channel_block`` (output channels per
+MemPot pass — intra-unit lanes) and sample batching via vmap (unit
+replication).  We report wall-clock throughput [samples/s] on this CPU
+host (relative scaling is the claim; absolute FPS belongs to the FPGA)
+plus the cycle-model FPS at the paper's 333 MHz for the faithful
+comparison with Table I.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csnn import encode_input, snn_apply
+from repro.core.pipeline_sim import simulate_layer, throughput_fps
+
+from .common import emit, timeit, trained_csnn
+
+
+def cycle_model_fps(cfg, params, images) -> float:
+    """Cycle-accurate FPS of the x1 FPGA configuration on our CSNN."""
+    from repro.core.aeq import build_aeq
+    from repro.core.csnn import ConvSpec
+
+    spikes = np.asarray(encode_input(jnp.asarray(images[:1]), cfg))[0]  # (T,H,W,1)
+    total = 0
+    x = spikes
+    _, stats = snn_apply(params, jnp.asarray(spikes), cfg, capacity=784)
+    hw = cfg.input_hw
+    conv_idx = 0
+    for spec in cfg.layers:
+        if not isinstance(spec, ConvSpec):
+            continue
+        st = stats[conv_idx]
+        counts = np.asarray(st.in_spike_counts)  # (T, C_in)
+        evs = [[np.zeros((int(c), 2), np.int64) for c in t_row] for t_row in counts]
+        rep = simulate_layer(evs, c_out=spec.channels, fmap_hw=hw)
+        total += rep.total_cycles
+        if spec.pool:
+            hw = (-(-hw[0] // spec.pool), -(-hw[1] // spec.pool))
+        conv_idx += 1
+    return 333e6 / max(total, 1)
+
+
+def main():
+    cfg, params, (xtr, ytr, xte, yte) = trained_csnn()
+    img = jnp.asarray(xte[:8])
+    spikes = encode_input(img, cfg)
+
+    # parallelism sweep: channel_block x batch
+    base_us = None
+    for cb in [1, 2, 4, 8, 16]:
+        fn = jax.jit(jax.vmap(lambda s: snn_apply(
+            params, s, cfg, capacity=256, channel_block=cb, collect_stats=False)))
+        us = timeit(fn, spikes)
+        per_sample = us / spikes.shape[0]
+        if base_us is None:
+            base_us = per_sample
+        emit(f"table1/channel_block_x{cb}", per_sample,
+             f"speedup={base_us / per_sample:.2f};samples_per_s={1e6 / per_sample:.0f}")
+
+    for b in [1, 2, 4, 8]:
+        fn = jax.jit(jax.vmap(lambda s: snn_apply(
+            params, s, cfg, capacity=256, channel_block=8, collect_stats=False)))
+        sp = encode_input(jnp.asarray(xte[:b]), cfg)
+        us = timeit(fn, sp)
+        emit(f"table1/batch_x{b}", us / b, f"samples_per_s={1e6 * b / us:.0f}")
+
+    fps = cycle_model_fps(cfg, params, xte)
+    emit("table1/cycle_model_fps_x1", 1e6 / fps,
+         f"fps={fps:.0f};paper_x1=3077")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table II analogue: resource report.
+
+The FPGA table (LUT/FF/BRAM/DSP) has no TPU counterpart; the TPU-native
+"synthesis report" is the roofline table produced by the multi-pod
+dry-run (deliverable g).  This benchmark summarizes results/dryrun/*.json
+as CSV — one row per (arch x shape x mesh) — and flags the dominant term.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import RESULTS, emit
+
+
+def main():
+    cells = sorted((RESULTS / "dryrun").glob("*__final.json"))
+    if not cells:
+        cells = sorted((RESULTS / "dryrun").glob("*__baseline.json"))
+    if not cells:
+        emit("table2/no_dryrun_results", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in cells:
+        d = json.loads(f.read_text())
+        key = f"table2/{d['arch']}__{d['shape']}__{d['mesh']}"
+        if d["status"] == "skipped":
+            emit(key, 0.0, f"skipped={d['reason'][:60]}")
+            continue
+        if d["status"] != "ok":
+            emit(key, 0.0, f"ERROR={d['error'][:80]}")
+            continue
+        r = d["roofline"]
+        t_dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        emit(key, 1e6 * t_dom,
+             f"bottleneck={r['bottleneck']};t_c={r['t_compute']:.3f}s;"
+             f"t_m={r['t_memory']:.3f}s;t_x={r['t_collective']:.3f}s;"
+             f"useful_flops={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)}")
+
+
+if __name__ == "__main__":
+    main()

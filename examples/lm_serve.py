@@ -1,0 +1,36 @@
+"""Serve a small LM with batched requests: prefill + jit-compiled decode
+loop with greedy/temperature sampling and EOS masking (the production
+decode path of repro.serve.engine, single-host scale).
+
+Run:  PYTHONPATH=src python examples/lm_serve.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    cfg = dataclasses.replace(ARCHS["gemma3-1b"].SMOKE, vocab=512)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {model.n_params() / 1e6:.2f}M params, "
+          f"sliding window {cfg.sliding_window} @ 1:{cfg.global_every} global")
+
+    engine = Engine(model, params, max_seq=128,
+                    cfg=ServeConfig(max_new_tokens=16, temperature=0.8))
+    rng = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(rng, (4, 12), 0, cfg.vocab, jnp.int32)
+    out = engine.generate(prompts, jax.random.PRNGKey(2))
+    for i, row in enumerate(out):
+        toks = row.tolist()
+        print(f"  request {i}: prompt={toks[:12]} -> generated={toks[12:]}")
+    print("batched decode OK (4 requests x 16 tokens)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: Sparsely-Active CSNN Acceleration (Sommer et al., TCAD 2022)
+rebuilt as a multi-pod JAX training/inference framework.
+
+Subpackages: core (the paper), kernels (Pallas TPU), models (10-arch zoo),
+configs, sharding, train, serve, checkpoint, runtime, launch, data.
+See README.md / DESIGN.md / EXPERIMENTS.md at the repo root.
+"""

@@ -1,0 +1,24 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+Sommer et al., "Efficient Hardware Acceleration of Sparsely Active
+Convolutional Spiking Neural Networks" (TCAD 2022), adapted FPGA -> TPU:
+
+* aeq          — Address-Event-Queue compaction + memory interlacing (C1, C3)
+* event_conv   — event-driven convolution, halo-padded, channel-vectorized (C2)
+* threshold    — bias + threshold + OR-max-pool sweep (C5)
+* scheduler    — Algorithm-1 channel-multiplexed execution (C4)
+* neuron       — IF / m-TTFS / TTFS cells (C6)
+* encoding     — multi-threshold m-TTFS input binarization (C6)
+* quantization — saturating 8/16-bit datapaths (C7)
+* conversion   — ANN->SNN threshold balancing + weight quantization (C9)
+* csnn         — model assembly (ANN train path + SNN inference paths)
+* pipeline_sim — cycle-level FPGA pipeline model for PE utilization (C8)
+"""
+from .aeq import EventQueue, build_aeq, calibrate_capacity, column_index, deinterlace, interlace, scatter_aeq
+from .csnn import CSNNConfig, ConvSpec, FCSpec, ann_apply, encode_input, init_params, snn_apply, snn_apply_dense
+from .encoding import mttfs_thresholds, multi_threshold_encode, rate_encode, spike_sparsity
+from .event_conv import apply_events, apply_events_blocked, crop_vm, dense_conv, pad_vm, rotate_kernel
+from .neuron import IFState, if_reset_step, mttfs_step, ttfs_slope_step
+from .quantization import QuantSpec, calibrate_scale, dequantize, fake_quant, quantize, saturating_add
+from .scheduler import LayerStats, run_conv_layer, run_conv_layer_dense, run_fc_head
+from .threshold import ThresholdResult, or_pool, threshold_unit

@@ -1,0 +1,152 @@
+"""ANN -> SNN conversion (paper Sec. VII; Rueckauer et al. style).
+
+The paper trains a conventional CNN with the clamped-ReLU activation,
+retrains with quantization-aware training, converts the weights with the
+SNN-Toolbox (data-based activation normalization) and quantizes to
+8/16 bit.  This module reproduces that flow natively in JAX:
+
+* ``normalize_params`` — data-based threshold balancing: each layer's
+  weights/biases are rescaled by lambda_{l-1}/lambda_l where lambda_l is a
+  high percentile of the layer's ANN activations on a calibration batch,
+  so a firing threshold of V_t = 1 is correct for every layer;
+* ``quantize_params`` — symmetric per-layer weight/bias quantization to
+  the requested bit width (the datapath then runs saturating integer
+  arithmetic, see core/quantization.py).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .csnn import CSNNConfig, ConvSpec, _max_pool
+from .quantization import QuantSpec, calibrate_scale, quantize
+
+
+def layer_activations(params: dict, images: jax.Array, cfg: CSNNConfig) -> list[jax.Array]:
+    """ANN forward that records each conv layer's post-ReLU activations."""
+    acts, x = [], images
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            p = params[f"conv{idx}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jnp.clip(x + p["b"], 0.0, cfg.relu_clamp)
+            acts.append(x)
+            if spec.pool:
+                x = _max_pool(x, spec.pool)
+    return acts
+
+
+def normalize_params(params: dict, images: jax.Array, cfg: CSNNConfig,
+                     percentile: float = 99.9) -> dict:
+    """Data-based weight normalization so that V_t = 1 holds in every layer.
+
+    w_l <- w_l * lambda_{l-1} / lambda_l ; b_l <- b_l / lambda_l
+    with lambda_l = percentile(activations_l).  With clamped ReLU at 1.0
+    the lambdas are already ~1; the general rescaling is kept so that
+    unclamped networks convert correctly too.
+    """
+    acts = layer_activations(params, images, cfg)
+    lambdas = [max(float(jnp.percentile(a, percentile)), 1e-6) for a in acts]
+    out, prev = dict(params), 1.0
+    ai = 0
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            lam = lambdas[ai]
+            p = params[f"conv{idx}"]
+            out[f"conv{idx}"] = {"w": p["w"] * (prev / lam), "b": p["b"] / lam}
+            prev, ai = lam, ai + 1
+    return out
+
+
+def quantize_params(params: dict, bits: int, v_t: float = 1.0) -> tuple[dict, "QuantSpec"]:
+    """Shared-scale symmetric quantization; returns (int_params, spec).
+
+    One fixed-point format serves every conv layer (as on the FPGA
+    datapath) so a single integer firing threshold is valid everywhere.
+    The threshold is folded into the calibration range with 2x headroom —
+    otherwise a small weight scale could push the integer threshold past
+    the saturation point and silence the network forever.
+    """
+    vals = jnp.concatenate([jnp.concatenate([p["w"].ravel(), p["b"].ravel()])
+                            for p in params.values()]
+                           + [jnp.array([2.0 * v_t], jnp.float32)])
+    spec = QuantSpec(bits=bits, scale=calibrate_scale(vals, bits))
+    q_params = {name: {"w": quantize(p["w"], spec), "b": quantize(p["b"], spec)}
+                for name, p in params.items()}
+    return q_params, spec
+
+
+def quantized_threshold(v_t: float, spec: QuantSpec) -> int:
+    return int(round(v_t / spec.scale))
+
+
+# ---------------------------------------------------------------------------
+# ANN training (paper Sec. VII: train a clamped-ReLU CNN, then convert)
+# ---------------------------------------------------------------------------
+
+
+def fit_ann(params: dict, cfg: CSNNConfig, images, labels, *, steps: int = 300,
+            batch: int = 64, lr: float = 2e-3, seed: int = 0,
+            log_every: int = 0) -> dict:
+    """Minibatch Adam training of the clamped-ReLU CNN (jit-compiled)."""
+    import numpy as np
+
+    from repro.train.optimizer import AdamWConfig, adamw_update, init_state
+    from .csnn import ann_apply
+
+    ocfg = AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                       weight_decay=0.0, clip_norm=1.0)
+    state = init_state(params, ocfg)
+
+    def loss_fn(p, x, y):
+        logits = ann_apply(p, x, cfg)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step_fn(st, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(st.params, x, y)
+        return adamw_update(st, grads, ocfg), loss
+
+    rng = np.random.default_rng(seed)
+    n = images.shape[0]
+    for step in range(steps):
+        idx = rng.integers(0, n, batch)
+        state, loss = step_fn(state, jnp.asarray(images[idx]), jnp.asarray(labels[idx]))
+        if log_every and (step + 1) % log_every == 0:
+            print(f"  ann step {step + 1}: loss {float(loss):.4f}")
+    return state.params
+
+
+def ann_accuracy(params: dict, cfg: CSNNConfig, images, labels, batch: int = 256) -> float:
+    from .csnn import ann_apply
+    import numpy as np
+
+    correct = 0
+    for i in range(0, images.shape[0], batch):
+        logits = ann_apply(params, jnp.asarray(images[i:i + batch]), cfg)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(labels[i:i + batch])).sum())
+    return correct / images.shape[0]
+
+
+def snn_accuracy(params: dict, cfg: CSNNConfig, images, labels, *,
+                 capacity: int = 256, batch: int = 32, sat_bits=None,
+                 channel_block: int = 1, collect_sparsity: bool = False):
+    """m-TTFS event-driven SNN accuracy (vmapped over samples)."""
+    import numpy as np
+
+    from .csnn import encode_input, snn_apply
+
+    run = jax.jit(jax.vmap(lambda s: snn_apply(
+        params, s, cfg, capacity=capacity, channel_block=channel_block,
+        sat_bits=sat_bits, collect_stats=False)))
+    correct, spars = 0, []
+    for i in range(0, images.shape[0], batch):
+        spikes = encode_input(jnp.asarray(images[i:i + batch]), cfg)
+        logits = run(spikes)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(labels[i:i + batch])).sum())
+    return correct / images.shape[0]

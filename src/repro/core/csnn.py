@@ -1,0 +1,156 @@
+"""CSNN model assembly: the paper's 28x28-32C3-32C3-P3-10C3-F10 network.
+
+Two execution paths share one parameter pytree:
+
+* ``ann_apply``     — the clamped-ReLU CNN used for training (paper
+  Sec. VII trains a conventional CNN and converts it);
+* ``snn_apply``     — T-step m-TTFS spiking inference through the
+  event-driven scheduler (Algorithm 1), the system under study;
+* ``snn_apply_dense`` — frame-based spiking oracle (dense baseline).
+
+Parameters are plain dicts of jnp arrays; layer specs are tiny frozen
+dataclasses so a config file can describe any CSNN in one line.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .encoding import mttfs_thresholds, multi_threshold_encode
+from .scheduler import LayerStats, run_conv_layer, run_conv_layer_dense, run_fc_head
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    channels: int
+    kernel: int = 3
+    pool: Optional[int] = None  # OR-max-pool window applied after this layer
+
+
+@dataclass(frozen=True)
+class FCSpec:
+    features: int
+
+
+@dataclass(frozen=True)
+class CSNNConfig:
+    """`28x28-32C3-32C3-P3-10C3-F10` == the paper's network (defaults)."""
+
+    input_hw: tuple[int, int] = (28, 28)
+    layers: Sequence = field(default_factory=lambda: (
+        ConvSpec(32), ConvSpec(32, pool=3), ConvSpec(10), FCSpec(10)))
+    t_steps: int = 5          # paper: T=5 gave the best accuracy
+    v_t: float = 1.0          # firing threshold after conversion
+    relu_clamp: float = 1.0   # clamped-ReLU ceiling used during ANN training
+
+
+def conv_out_hw(hw: tuple[int, int], spec: ConvSpec) -> tuple[int, int]:
+    h, w = hw  # SAME padding keeps H, W; pooling ceil-divides
+    if spec.pool:
+        return (-(-h // spec.pool), -(-w // spec.pool))
+    return (h, w)
+
+
+def init_params(rng: jax.Array, cfg: CSNNConfig, dtype=jnp.float32) -> dict:
+    params = {}
+    hw, c_in = cfg.input_hw, 1
+    for idx, spec in enumerate(cfg.layers):
+        key = jax.random.fold_in(rng, idx)
+        if isinstance(spec, ConvSpec):
+            fan_in = spec.kernel * spec.kernel * c_in
+            params[f"conv{idx}"] = {
+                "w": jax.random.normal(key, (spec.kernel, spec.kernel, c_in, spec.channels),
+                                       dtype) * (2.0 / fan_in) ** 0.5,
+                "b": jnp.zeros((spec.channels,), dtype),
+            }
+            hw, c_in = conv_out_hw(hw, spec), spec.channels
+        else:
+            d = hw[0] * hw[1] * c_in
+            params[f"fc{idx}"] = {
+                "w": jax.random.normal(key, (d, spec.features), dtype) * (1.0 / d) ** 0.5,
+                "b": jnp.zeros((spec.features,), dtype),
+            }
+    return params
+
+
+def ann_apply(params: dict, images: jax.Array, cfg: CSNNConfig) -> jax.Array:
+    """Clamped-ReLU CNN forward (training path). images: (B, H, W, 1) in [0,1]."""
+    x = images
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            p = params[f"conv{idx}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = x + p["b"]
+            x = jnp.clip(x, 0.0, cfg.relu_clamp)  # clamped ReLU (Rueckauer)
+            if spec.pool:
+                x = _max_pool(x, spec.pool)
+        else:
+            p = params[f"fc{idx}"]
+            x = x.reshape(x.shape[0], -1) @ p["w"] + p["b"]
+    return x
+
+
+def _max_pool(x: jax.Array, window: int) -> jax.Array:
+    pads = [(0, 0), (0, -x.shape[1] % window), (0, -x.shape[2] % window), (0, 0)]
+    x = jnp.pad(x, pads, constant_values=-jnp.inf)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1), (1, window, window, 1), "VALID")
+
+
+def encode_input(images: jax.Array, cfg: CSNNConfig) -> jax.Array:
+    """(B, H, W, 1) floats in [0,1] -> (B, T, H, W, 1) m-TTFS input spikes."""
+    thresholds = mttfs_thresholds(cfg.t_steps)
+    enc = lambda img: multi_threshold_encode(img, thresholds, cfg.t_steps)
+    return jax.vmap(enc)(images)
+
+
+def snn_apply(
+    params: dict,
+    in_spikes: jax.Array,
+    cfg: CSNNConfig,
+    *,
+    capacity: int | Sequence[int] = 256,
+    channel_block: int = 1,
+    sat_bits: Optional[int] = None,
+    collect_stats: bool = True,
+):
+    """Event-driven m-TTFS inference for ONE sample.
+
+    in_spikes: (T, H, W, 1) bool.  Returns (logits, [LayerStats, ...]).
+    ``capacity`` may be a single int or one per conv layer (calibrated).
+    vmap over samples for batching; the paper's xP parallelism sweep maps
+    to batching + channel_block.
+    """
+    conv_specs = [s for s in cfg.layers if isinstance(s, ConvSpec)]
+    caps = ([capacity] * len(conv_specs) if isinstance(capacity, int) else list(capacity))
+    vm_dtype = {None: jnp.float32, 8: jnp.int8, 16: jnp.int16}[sat_bits]
+    x, stats, ci = in_spikes, [], 0
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            p = params[f"conv{idx}"]
+            x, st = run_conv_layer(
+                x, p["w"], p["b"], cfg.v_t, capacity=caps[ci], pool=spec.pool,
+                channel_block=channel_block, sat_bits=sat_bits, vm_dtype=vm_dtype)
+            stats.append(st)
+            ci += 1
+        else:
+            p = params[f"fc{idx}"]
+            logits = run_fc_head(x, p["w"], p["b"])
+    return (logits, stats) if collect_stats else logits
+
+
+def snn_apply_dense(params: dict, in_spikes: jax.Array, cfg: CSNNConfig) -> jax.Array:
+    """Frame-based spiking oracle (per sample); bit-exact vs snn_apply."""
+    x = in_spikes
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            p = params[f"conv{idx}"]
+            x = run_conv_layer_dense(x, p["w"], p["b"], cfg.v_t, pool=spec.pool)
+        else:
+            p = params[f"fc{idx}"]
+            logits = run_fc_head(x, p["w"], p["b"])
+    return logits

@@ -1,0 +1,51 @@
+"""Input encoding: real-valued frames -> binary spike trains (paper Sec. VII).
+
+The paper binarizes integer input frames with a strictly increasing set of
+thresholds ``P = (p_1, ..., p_{T-1})`` "to mimic m-TTFS encoding": bright
+pixels must spike *early* and — because the code is m-TTFS — keep spiking
+afterwards.  We therefore apply the thresholds in decreasing order over
+time: at t=0 only pixels above the largest threshold spike; each following
+step lowers the threshold so previous spikers keep firing and dimmer
+pixels join.  The resulting per-pixel spike trains are monotone
+(0...0 1...1), which is exactly the m-TTFS firing pattern.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def mttfs_thresholds(t_steps: int, lo: float = 0.0, hi: float = 1.0) -> jax.Array:
+    """A strictly increasing threshold set P with T-1 entries in (lo, hi)."""
+    if t_steps < 2:
+        raise ValueError("m-TTFS input encoding needs at least 2 time steps")
+    return jnp.linspace(lo, hi, t_steps + 1)[1:-1]  # strictly inside (lo, hi)
+
+
+def multi_threshold_encode(frames: jax.Array, thresholds: jax.Array, t_steps: int) -> jax.Array:
+    """Encode frames into T binary spike maps using threshold set P.
+
+    frames:     (...,) real-valued inputs (any shape).
+    thresholds: (T-1,) strictly increasing.
+    Returns:    (T, ...) boolean spike maps with monotone per-pixel trains.
+    """
+    thresholds = jnp.sort(jnp.asarray(thresholds))
+    if thresholds.shape[0] != t_steps - 1:
+        raise ValueError(f"need {t_steps - 1} thresholds for T={t_steps}, got {thresholds.shape[0]}")
+    # Apply in decreasing order; the final step reuses the lowest threshold so
+    # the monotone (m-TTFS) property holds across all T steps.
+    order = jnp.concatenate([thresholds[::-1], thresholds[:1]])  # (T,)
+    return frames[None, ...] > order.reshape((t_steps,) + (1,) * frames.ndim)
+
+
+def rate_encode(frames: jax.Array, t_steps: int, rng: jax.Array) -> jax.Array:
+    """Bernoulli rate coding baseline: P(spike at t) = pixel intensity in [0,1]."""
+    p = jnp.clip(frames, 0.0, 1.0)
+    return jax.random.bernoulli(rng, p[None, ...], (t_steps,) + frames.shape)
+
+
+def spike_sparsity(spikes: jax.Array) -> jax.Array:
+    """Fraction of zero entries — the paper's 'sparsity' metric (Table III)."""
+    return 1.0 - jnp.mean(spikes.astype(jnp.float32))

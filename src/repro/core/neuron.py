@@ -1,0 +1,72 @@
+"""Integrate-and-fire neuron models (paper Eqs. 1-7).
+
+The paper uses the time-discrete IF model with the m-TTFS neural code of
+Han & Roy: once a neuron's membrane potential has crossed the firing
+threshold ``v_t`` it emits a spike on *every* subsequent algorithmic time
+step until the network is reset.  The "has fired" property is stored as a
+spike-indicator bit alongside the membrane potential (paper Sec. VI-C).
+
+All functions are shape-polymorphic: ``v_m`` may be any array and the
+returned spike map has the same shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class IFState(NamedTuple):
+    """State of a population of IF neurons.
+
+    v_m:   membrane potentials (float or quantized int).
+    fired: m-TTFS spike-indicator bit — True once the neuron has spiked.
+    """
+
+    v_m: jax.Array
+    fired: jax.Array
+
+    @staticmethod
+    def zeros(shape, dtype=jnp.float32) -> "IFState":
+        return IFState(jnp.zeros(shape, dtype), jnp.zeros(shape, jnp.bool_))
+
+
+def if_reset_step(v_m: jax.Array, current: jax.Array, v_t) -> tuple[jax.Array, jax.Array]:
+    """Plain IF step with reset-to-zero (paper Eqs. 1-2); rate-coding baseline.
+
+    Returns ``(new_v_m, spikes)``.  Reset happens on the step *after* the
+    threshold crossing, exactly as written in Eq. (1).
+    """
+    spikes = v_m > v_t
+    v_m = jnp.where(spikes, jnp.zeros_like(v_m), v_m) + current
+    return v_m, spikes
+
+
+def mttfs_step(state: IFState, current: jax.Array, v_t) -> tuple[IFState, jax.Array]:
+    """m-TTFS IF step (paper Eqs. 3-4 + Sec. VI-C spike indicator).
+
+    The membrane potential keeps integrating (no reset); the neuron spikes
+    when ``v_m > v_t`` *or* when it has fired before.  Returns
+    ``(new_state, spikes)`` where ``spikes`` is boolean.
+    """
+    v_m = state.v_m + current
+    spikes = (v_m > jnp.asarray(v_t, v_m.dtype)) | state.fired
+    return IFState(v_m, spikes), spikes
+
+
+def ttfs_slope_step(
+    mu_m: jax.Array, v_m: jax.Array, fired: jax.Array, current: jax.Array, v_t
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Standard (slope-based) TTFS neuron of Rueckauer et al. (paper Eqs. 5-7).
+
+    Implemented for completeness / baseline comparison: the membrane
+    potential grows by the slope ``mu_m`` every step, the slope integrates
+    the weighted input spikes, and each neuron fires at most once.
+    Returns ``(mu_m, v_m, fired, spikes)``.
+    """
+    v_m = v_m + mu_m  # Eq. (6): slope drives the potential
+    mu_m = mu_m + current  # Eq. (5): inputs move the slope
+    spikes = (v_m > jnp.asarray(v_t, v_m.dtype)) & (~fired)  # Eq. (7): only-spike-once
+    fired = fired | spikes
+    return mu_m, v_m, fired, spikes

@@ -1,0 +1,110 @@
+"""Cycle-level model of the 4-stage convolution-unit pipeline (paper Sec. VI-B).
+
+The FPGA convolution unit is pipelined S1..S4 (address calc, MemPot read,
+update, write-back).  Its throughput is 1 event/cycle except for:
+
+* wind-up: 4 cycles until the pipeline is full (per queue start);
+* empty queue columns: 1 wasted cycle each (invalid event read, paper
+  Sec. VI-A);
+* S2-S3 RAW hazards: a 1-cycle stall when two *immediately successive*
+  events touch overlapping 3x3 neighbourhoods.  The interlaced AEQ
+  ordering guarantees same-column events never overlap, so hazards can
+  only occur at column switches.
+
+The thresholding unit then sweeps ceil(H/3)*ceil(W/3) windows per
+(c_out, t) with its own 5-stage wind-up.
+
+This simulator reproduces the paper's "PE utilization" metric (Table III):
+utilization = cycles in which the PEs process a valid event / total
+cycles.  It has no TPU counterpart — it exists to validate our
+reproduction against the paper's own numbers and to quantify how much of
+the FPGA's stall overhead the TPU adaptation removes (the TPU pipeline
+has no hazards because events are applied in program order inside one
+kernel).  Pure numpy on purpose: it models hardware, not math.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+WINDUP_CONV = 4     # S1..S4
+WINDUP_THRESH = 5   # S1..S5
+
+
+@dataclass
+class CycleReport:
+    event_cycles: int       # cycles carrying a valid event (PEs busy)
+    hazard_stalls: int      # S2-S3 stalls
+    empty_queue_cycles: int # wasted reads of empty columns
+    windup_cycles: int      # pipeline fill
+    threshold_cycles: int   # dense thresholding sweeps
+    total_cycles: int
+
+    @property
+    def pe_utilization(self) -> float:
+        """Valid-event cycles / all conv-unit cycles (paper Table III)."""
+        conv_total = (self.event_cycles + self.hazard_stalls
+                      + self.empty_queue_cycles + self.windup_cycles)
+        return self.event_cycles / max(conv_total, 1)
+
+
+def _columns_of(events: np.ndarray) -> np.ndarray:
+    return (events[:, 0] % 3) * 3 + (events[:, 1] % 3)
+
+
+def _overlap(a: np.ndarray, b: np.ndarray) -> bool:
+    """Do the 3x3 neighbourhoods of two events overlap?"""
+    return bool(abs(int(a[0]) - int(b[0])) <= 2 and abs(int(a[1]) - int(b[1])) <= 2)
+
+
+def simulate_conv_queue(events: np.ndarray) -> tuple[int, int, int, int]:
+    """Simulate one (c_in, t) queue pass through the conv unit.
+
+    events: (N, 2) int array of (i, j), already in interlaced column order
+    (aeq.build_aeq order).  Returns (event_cycles, hazard_stalls,
+    empty_queue_cycles, windup_cycles).
+    """
+    n = len(events)
+    cols_present = set(_columns_of(events).tolist()) if n else set()
+    empty = 9 - len(cols_present)
+    hazards = 0
+    if n > 1:
+        cols = _columns_of(events)
+        for a in range(1, n):
+            # hazard only possible when the column changed (same-column
+            # events are >=3 apart by construction -> no overlap)
+            if cols[a] != cols[a - 1] and _overlap(events[a - 1], events[a]):
+                hazards += 1
+    windup = WINDUP_CONV if n else 0
+    return n, hazards, empty, windup
+
+
+def simulate_layer(
+    per_cin_t_events: list[list[np.ndarray]],
+    c_out: int,
+    fmap_hw: tuple[int, int],
+) -> CycleReport:
+    """Cycle model of Algorithm 1 for one layer.
+
+    per_cin_t_events[t][c_in] = (N,2) events of the input AEQ.
+    The conv unit runs for every (c_out, t, c_in) queue; the thresholding
+    unit sweeps once per (c_out, t).
+    """
+    ev = st = em = wu = 0
+    for t_events in per_cin_t_events:
+        for q in t_events:
+            e, h, m, w = simulate_conv_queue(np.asarray(q).reshape(-1, 2))
+            ev, st, em, wu = ev + e, st + h, em + m, wu + w
+    # every output channel replays all input queues (Algorithm 1)
+    ev, st, em, wu = ev * c_out, st * c_out, em * c_out, wu * c_out
+    h, w = fmap_hw
+    sweeps = (-(-h // 3)) * (-(-w // 3)) + WINDUP_THRESH
+    thresh = sweeps * c_out * len(per_cin_t_events)
+    total = ev + st + em + wu + thresh
+    return CycleReport(ev, st, em, wu, thresh, total)
+
+
+def throughput_fps(report: CycleReport, clock_hz: float = 333e6, parallelism: int = 1) -> float:
+    """Frames/s at the paper's 333 MHz clock with xP parallel units."""
+    return clock_hz * parallelism / max(report.total_cycles, 1)

@@ -1,0 +1,75 @@
+"""Saturating fixed-point arithmetic (paper Sec. VI-B "Update calculation").
+
+The accelerator stores membrane potentials, weights and biases at 8 or 16
+bit and uses *saturation arithmetic* instead of widening the datapaths:
+overflowing additions clamp to the maximum representable value,
+underflowing ones to the minimum.  The paper argues this is safe for
+m-TTFS coding — saturated-high potentials stay above threshold, and
+saturated-low potentials stay silent.
+
+We model the datapath exactly: values live in int8/int16 arrays, additions
+are performed in int32 and clamped back.  A small symmetric quantizer maps
+trained float weights onto the fixed-point grid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_INT_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Symmetric fixed-point format: value = int * scale."""
+
+    bits: int
+    scale: float
+
+    @property
+    def dtype(self):
+        return _INT_DTYPES[self.bits]
+
+    @property
+    def max_int(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def min_int(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+
+def quantize(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Float -> saturating fixed point integers."""
+    q = jnp.round(x / spec.scale)
+    return jnp.clip(q, spec.min_int, spec.max_int).astype(spec.dtype)
+
+
+def dequantize(q: jax.Array, spec: QuantSpec) -> jax.Array:
+    return q.astype(jnp.float32) * spec.scale
+
+
+def fake_quant(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient (QAT)."""
+    rounded = dequantize(quantize(x, spec), spec)
+    return x + jax.lax.stop_gradient(rounded - x)
+
+
+def saturating_add(a: jax.Array, b: jax.Array, bits: int) -> jax.Array:
+    """a + b with saturation at the int<bits> range; inputs int, output int<bits>.
+
+    Mirrors the PE adders: the sum is formed wide (int32) and clamped, so a
+    single addition can never wrap around (paper: "checking a single bit").
+    """
+    wide = a.astype(jnp.int32) + b.astype(jnp.int32)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return jnp.clip(wide, lo, hi).astype(_INT_DTYPES[bits])
+
+
+def calibrate_scale(x: jax.Array, bits: int, percentile: float = 100.0) -> float:
+    """Pick the symmetric scale that covers |x| up to the given percentile."""
+    amax = jnp.percentile(jnp.abs(x), percentile)
+    amax = jnp.maximum(amax, 1e-8)
+    return float(amax / (2 ** (bits - 1) - 1))

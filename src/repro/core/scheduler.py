@@ -1,0 +1,194 @@
+"""Channel-multiplexed layer scheduling (paper Sec. V-D, Algorithm 1).
+
+The accelerator holds membrane potentials for only a *single* channel in
+MemPot and reuses that buffer across all output channels: for each
+``c_out`` it simulates all T time steps, walking the input AEQ of every
+``c_in`` each step, then thresholds and emits the output AEQ for
+``(c_out, t)``.  Memory therefore scales with one fmap, not with
+``C_out`` fmaps.
+
+TPU adaptation: the sequential "one channel at a time" schedule is kept
+(via ``lax.map`` over output-channel *blocks*) but each block is
+vectorized over the lane dimension — MemPot becomes an
+(H+2, W+2, block) VMEM-resident tile.  ``channel_block=1`` reproduces the
+paper's schedule exactly; larger blocks are the beyond-paper throughput
+knob (benchmarks/table1_parallelism.py sweeps it, the analogue of the
+paper's xP parallelization sweep).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .aeq import EventQueue, build_aeq
+from .event_conv import apply_events, crop_vm, dense_conv, pad_vm
+from .threshold import threshold_unit
+
+
+class LayerStats(NamedTuple):
+    """Per-layer observability used for Table III and capacity calibration."""
+
+    in_spike_counts: jax.Array   # (T, C_in) events fed to the conv unit
+    out_spike_counts: jax.Array  # (T, C_out) spikes after thresholding (pre-pool)
+    in_sparsity: jax.Array       # () fraction of zeros in the input activations
+
+
+def _build_all_aeqs(spikes_in: jax.Array, capacity: int) -> EventQueue:
+    """Compact (T, H, W, C_in) binary activations into per-(t, c_in) queues.
+
+    Capacity is padded to a multiple of 64 so the Pallas event-block grid
+    divides evenly (the extra slots carry valid=False)."""
+    capacity = -(-capacity // 64) * 64 if capacity > 64 else capacity
+    t_steps, h, w, c_in = spikes_in.shape
+    flat = spikes_in.transpose(0, 3, 1, 2).reshape(t_steps * c_in, h, w)
+    q = jax.vmap(lambda f: build_aeq(f, capacity))(flat)
+    return EventQueue(
+        coords=q.coords.reshape(t_steps, c_in, capacity, 2),
+        valid=q.valid.reshape(t_steps, c_in, capacity),
+        count=q.count.reshape(t_steps, c_in),
+    )
+
+
+def run_conv_layer(
+    spikes_in: jax.Array,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    *,
+    capacity: int,
+    pool: Optional[int] = None,
+    channel_block: int = 1,
+    sat_bits: Optional[int] = None,
+    vm_dtype=jnp.float32,
+    backend: str = "jax",
+) -> tuple[jax.Array, LayerStats]:
+    """Run one spiking conv layer for all T steps, Algorithm-1 style.
+
+    spikes_in: (T, H, W, C_in) bool — the previous layer's output spikes.
+    kernels:   (3, 3, C_in, C_out) — *unrotated* trained weights.
+    bias:      (C_out,) — integrated once per time step by the threshold unit.
+    capacity:  AEQ depth per (t, c_in) queue.
+    pool:      OR-max-pool window (None = no pooling).
+    channel_block: output channels processed per MemPot buffer (1 = paper).
+    backend: "jax" (pure scan reference) or "pallas" (the event_conv TPU
+        kernel in interpret mode — the production compute path).
+
+    Returns (spikes_out (T, H', W', C_out) bool, LayerStats).
+    """
+    t_steps, h, w, c_in = spikes_in.shape
+    c_out = kernels.shape[-1]
+    if c_out % channel_block != 0:
+        # snap to the largest divisor of C_out <= requested (the xP unit
+        # count is a throughput knob, never a correctness constraint)
+        channel_block = max(d for d in range(1, channel_block + 1)
+                            if c_out % d == 0)
+    queues = _build_all_aeqs(spikes_in, capacity)
+
+    def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
+        # kernel_block: (3, 3, C_in, B); bias_block: (B,)
+        block = kernel_block.shape[-1]
+        vm0 = pad_vm(jnp.zeros((h, w, block), vm_dtype))  # MemPot, reused (Alg. 1 l.2)
+        fired0 = jnp.zeros((h, w, block), jnp.bool_)
+
+        def time_step(carry, t):
+            vm, fired = carry
+
+            def per_cin(ci, vm):
+                if backend == "pallas":
+                    from repro.kernels.event_conv.kernel import event_conv_pallas
+                    block_e = min(64, queues.coords.shape[2])
+                    return event_conv_pallas(
+                        vm, queues.coords[t, ci], queues.valid[t, ci],
+                        kernel_block[:, :, ci, :].astype(vm.dtype),
+                        block_e=block_e)
+                q = EventQueue(queues.coords[t, ci], queues.valid[t, ci],
+                               queues.count[t, ci])
+                return apply_events(vm, q, kernel_block[:, :, ci, :])
+
+            vm = jax.lax.fori_loop(0, c_in, per_cin, vm)
+            inner = crop_vm(vm)
+
+            def thresh_one(v, f, b):
+                r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=sat_bits)
+                return r.v_m, r.fired, r.spikes
+
+            v_new, fired, spk = jax.vmap(thresh_one, in_axes=(2, 2, 0), out_axes=2)(
+                inner, fired, bias_block)
+            vm = vm.at[1:-1, 1:-1, :].set(v_new)
+            return (vm, fired), spk
+
+        (_, _), spikes = jax.lax.scan(time_step, (vm0, fired0), jnp.arange(t_steps))
+        return spikes  # (T, H, W, B)
+
+    kb = kernels.reshape(3, 3, c_in, c_out // channel_block, channel_block)
+    kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, 3, 3, C_in, B)
+    bb = bias.reshape(c_out // channel_block, channel_block)
+    spikes_blocks = jax.lax.map(lambda kb_bb: run_block(*kb_bb), (kb, bb))
+    spikes_out = jnp.moveaxis(spikes_blocks, 0, 3)  # (T, H, W, n_blocks, B)
+    spikes_out = spikes_out.reshape(t_steps, h, w, c_out)
+
+    stats = LayerStats(
+        in_spike_counts=queues.count,
+        out_spike_counts=jnp.sum(spikes_out, axis=(1, 2)).astype(jnp.int32),
+        in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32)),
+    )
+    if pool is not None:
+        return _pool_all(spikes_out, pool), stats
+    return spikes_out, stats
+
+
+def _pool_all(spikes: jax.Array, window: int) -> jax.Array:
+    """OR-max-pool (T, H, W, C) binary maps over non-overlapping windows."""
+    t, h, w, c = spikes.shape
+    ph, pw = -h % window, -w % window
+    s = jnp.pad(spikes.astype(bool), ((0, 0), (0, ph), (0, pw), (0, 0)))
+    hh, ww = s.shape[1:3]
+    s = s.reshape(t, hh // window, window, ww // window, window, c)
+    return jnp.any(s, axis=(2, 4))
+
+
+def run_conv_layer_dense(
+    spikes_in: jax.Array,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    *,
+    pool: Optional[int] = None,
+    vm_dtype=jnp.float32,
+) -> jax.Array:
+    """Frame-based oracle for run_conv_layer (sliding-window conv; SIES-style).
+
+    Used (a) as the correctness oracle in tests and (b) as the dense
+    baseline the paper compares against.
+    """
+    t_steps, h, w, c_in = spikes_in.shape
+    c_out = kernels.shape[-1]
+
+    def step(carry, x_t):
+        vm, fired = carry
+        x = x_t.astype(vm_dtype)[None]  # (1, H, W, C_in)
+        u = jax.lax.conv_general_dilated(
+            x, kernels.astype(vm_dtype), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+        vm = vm + u + bias.astype(vm_dtype)
+        spikes = (vm > jnp.asarray(v_t, vm_dtype)) | fired
+        return (vm, spikes), spikes
+
+    vm0 = jnp.zeros((h, w, c_out), vm_dtype)
+    fired0 = jnp.zeros((h, w, c_out), jnp.bool_)
+    (_, _), spikes = jax.lax.scan(step, (vm0, fired0), spikes_in)
+    return _pool_all(spikes, pool) if pool is not None else spikes
+
+
+def run_fc_head(spikes_in: jax.Array, weights: jax.Array, bias: jax.Array) -> jax.Array:
+    """Classification unit (paper Sec. V-A): integrate-only FC readout.
+
+    spikes_in: (T, ...) binary; weights: (D, n_classes).  The output
+    neurons integrate weighted spikes plus bias every step and are never
+    thresholded; the class is the argmax of the final membrane potential.
+    """
+    t_steps = spikes_in.shape[0]
+    flat = spikes_in.reshape(t_steps, -1).astype(weights.dtype)
+    return flat.sum(0) @ weights + t_steps * bias

@@ -1,0 +1,71 @@
+"""Thresholding unit (paper Secs. V-C / VI-C).
+
+After the convolution unit has accumulated all events of a time step into
+the membrane potentials, the thresholding unit sweeps every neuron once:
+
+  1. add the (scalar, per-output-channel) bias, with saturation;
+  2. compare against the firing threshold V_t; a neuron spikes when it
+     crosses V_t *or* its m-TTFS spike-indicator bit is already set;
+  3. optionally 3x3 max-pool the binary spike map, which for binary maps
+     reduces to OR-ing each non-overlapping 3x3 window (paper Fig. 1);
+  4. emit the resulting address events (compaction happens in aeq.py, the
+     runtime analogue of the AEQ write circuitry).
+
+Unlike the convolution unit this stage is *dense* — every neuron must be
+visited to receive its bias — which the paper implements as a stride-3
+3x3-window sweep.  On TPU the whole sweep is one fused elementwise +
+window-reduce pass (see kernels/threshold_pool for the Pallas version).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import saturating_add
+
+
+class ThresholdResult(NamedTuple):
+    v_m: jax.Array        # bias-updated membrane potentials (H, W)
+    fired: jax.Array      # updated spike-indicator bits (H, W)
+    spikes: jax.Array     # binary output map (H, W) or pooled (H/p, W/p)
+
+
+def or_pool(spikes: jax.Array, window: int = 3) -> jax.Array:
+    """Non-overlapping max-pool of a binary map == OR over each window."""
+    h, w = spikes.shape
+    ph, pw = -h % window, -w % window
+    s = jnp.pad(spikes.astype(bool), ((0, ph), (0, pw)))
+    hh, ww = s.shape
+    s = s.reshape(hh // window, window, ww // window, window)
+    return jnp.any(s, axis=(1, 3))
+
+
+def threshold_unit(
+    v_m: jax.Array,
+    bias,
+    v_t,
+    fired: jax.Array,
+    *,
+    pool: Optional[int] = None,
+    sat_bits: Optional[int] = None,
+) -> ThresholdResult:
+    """One thresholding-unit sweep over a single channel's membrane potentials.
+
+    v_m:      (H, W) potentials (float, or int when ``sat_bits`` is set).
+    bias:     scalar bias of the current output channel; added *every*
+              time step (SNN-conversion semantics: the bias integrates).
+    fired:    (H, W) m-TTFS spike indicator bits.
+    pool:     optional OR-max-pool window (paper uses 3).
+    sat_bits: if set, perform the bias add in saturating int<sat_bits>.
+    """
+    if sat_bits is not None:
+        bias_arr = jnp.broadcast_to(jnp.asarray(bias, v_m.dtype), v_m.shape)
+        v_m = saturating_add(v_m, bias_arr, sat_bits)
+    else:
+        v_m = v_m + jnp.asarray(bias, v_m.dtype)
+    spikes = (v_m > jnp.asarray(v_t, v_m.dtype)) | fired
+    fired = spikes
+    out = or_pool(spikes, pool) if pool is not None else spikes
+    return ThresholdResult(v_m=v_m, fired=fired, spikes=out)

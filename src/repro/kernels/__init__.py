@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships three files: kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling, validated in interpret mode), ops.py (jit'd public wrapper with
+padding/tiling glue), ref.py (pure-jnp oracle the tests sweep against).
+
+* event_conv      — the convolution unit (paper Sec. VI-B): VMEM-resident
+                    membrane-potential tile, grid over AEQ event blocks,
+                    channel-lane parallelism, saturating int8/16 adders.
+* threshold_pool  — the thresholding unit (Sec. VI-C): fused bias +
+                    compare + m-TTFS indicator + 3x3 OR-max-pool.
+
+Both are wired into the Algorithm-1 scheduler via
+core.scheduler.run_conv_layer(backend="pallas").
+"""

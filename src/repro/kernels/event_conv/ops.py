@@ -1,0 +1,55 @@
+"""Jitted public wrapper around the event_conv Pallas kernel.
+
+Handles: halo padding, event padding to the block size, channel tiling to
+the lane width, and the queue-exhausted early exit (the self-timed
+analogue — see DESIGN.md Sec. 2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aeq import EventQueue
+from repro.core.event_conv import crop_vm, pad_vm
+
+from .kernel import event_conv_pallas
+from .ref import event_conv_ref
+
+
+def _pad_events(queue: EventQueue, block_e: int) -> tuple[jax.Array, jax.Array]:
+    e = queue.capacity
+    pad = -e % block_e
+    coords = jnp.pad(queue.coords, ((0, pad), (0, 0)))
+    valid = jnp.pad(queue.valid, (0, pad))
+    return coords, valid
+
+
+@partial(jax.jit, static_argnames=("block_e", "use_kernel", "interpret"))
+def event_conv(
+    vm: jax.Array,
+    queue: EventQueue,
+    kernel: jax.Array,
+    *,
+    block_e: int = 128,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Event-driven 3x3 conv accumulation onto an *unpadded* (H, W, C) vm.
+
+    The Pallas kernel (or the jnp oracle when ``use_kernel=False``) sees
+    the halo-padded tile; this wrapper crops it back.
+    """
+    if vm.ndim == 2:
+        out = event_conv(vm[:, :, None], queue, kernel[:, :, None],
+                         block_e=block_e, use_kernel=use_kernel, interpret=interpret)
+        return out[:, :, 0]
+    coords, valid = _pad_events(queue, block_e)
+    vm_p = pad_vm(vm)
+    if use_kernel:
+        out = event_conv_pallas(vm_p, coords, valid, kernel,
+                                block_e=block_e, interpret=interpret)
+    else:
+        out = event_conv_ref(vm_p, coords, valid, kernel)
+    return crop_vm(out)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the event_conv Pallas kernel.
+
+Semantics: for every valid event (i, j), add the 180deg-rotated kernel
+into vm_padded[i:i+3, j:j+3, :] (the +1 halo makes the event coordinate
+(i, j) land at padded centre (i+1, j+1)).  Integer dtypes saturate at the
+storage width after every event, matching the FPGA PE adders — note that
+saturating per-event is NOT the same as clipping once at the end, so the
+oracle replays events one by one too.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
+
+
+def event_conv_ref(vm_padded: jax.Array, coords: jax.Array, valid: jax.Array,
+                   kernel: jax.Array) -> jax.Array:
+    k_rot = kernel[::-1, ::-1, :].astype(vm_padded.dtype)
+    zero = jnp.zeros_like(k_rot)
+    sat = _SAT_RANGE.get(vm_padded.dtype)
+
+    def body(e, vm):
+        v = valid[e]
+        i = jnp.where(v, coords[e, 0], 0)
+        j = jnp.where(v, coords[e, 1], 0)
+        contrib = jnp.where(v, k_rot, zero)
+        patch = jax.lax.dynamic_slice(vm, (i, j, 0), (3, 3, vm.shape[2]))
+        if sat is not None:
+            wide = patch.astype(jnp.int32) + contrib.astype(jnp.int32)
+            patch = jnp.clip(wide, sat[0], sat[1]).astype(vm.dtype)
+        else:
+            patch = patch + contrib
+        return jax.lax.dynamic_update_slice(vm, patch, (i, j, 0))
+
+    return jax.lax.fori_loop(0, coords.shape[0], body, vm_padded)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused thresholding unit (paper Secs. V-C / VI-C).
+
+One VMEM pass per channel block fuses the paper's 5-stage thresholding
+pipeline: bias add (saturating for integer datapaths), threshold compare,
+m-TTFS spike-indicator OR, and the 3x3 OR-max-pool reduction.  The dense
+sweep of the FPGA (stride-3 3x3 windows, 9 comparators) becomes one
+vectorized tile op; the pool is a reshape-reduce over sublanes.
+
+Grid: over channel blocks (channels are independent).  The firing
+threshold V_t is layer-static and baked into the kernel as a constant —
+exactly like the synthesized comparator constant on the FPGA.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
+
+
+def _threshold_pool_kernel(vm_ref, bias_ref, fired_ref, vm_out_ref, spikes_ref,
+                           pooled_ref, *, v_t, pool):
+    vm = vm_ref[...]
+    bias = bias_ref[...]  # (1, 1, block_c) broadcast over the tile
+    sat = _SAT_RANGE.get(vm.dtype)
+    if sat is not None:
+        wide = vm.astype(jnp.int32) + bias.astype(jnp.int32)
+        vm_new = jnp.clip(wide, sat[0], sat[1]).astype(vm.dtype)
+    else:
+        vm_new = vm + bias
+    spikes = (vm_new > jnp.asarray(v_t, vm_new.dtype)) | (fired_ref[...] != 0)
+    vm_out_ref[...] = vm_new
+    spikes_ref[...] = spikes.astype(jnp.int8)
+    if pool is not None:
+        h, w, c = spikes.shape
+        s = spikes.reshape(h // pool, pool, w // pool, pool, c)
+        pooled = jnp.any(jnp.any(s, axis=3), axis=1)
+        pooled_ref[...] = pooled.astype(jnp.int8)
+    else:
+        pooled_ref[...] = spikes.astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("v_t", "pool", "block_c", "interpret"))
+def threshold_pool_pallas(
+    vm: jax.Array,
+    bias: jax.Array,
+    fired: jax.Array,
+    *,
+    v_t: float,
+    pool: int | None,
+    block_c: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused threshold unit over (H, W, C) membrane potentials.
+
+    vm:    (H, W, C); H and W must already be multiples of ``pool``.
+    bias:  (C,) per-output-channel bias (paper applies it every step).
+    fired: (H, W, C) int8 m-TTFS indicator bits.
+
+    Returns (vm_out, spikes int8 (H,W,C), pooled int8 (H/p, W/p, C)); when
+    ``pool`` is None the third output duplicates ``spikes``.
+    """
+    h, w, c = vm.shape
+    if pool is not None and (h % pool or w % pool):
+        raise ValueError(f"H,W=({h},{w}) must be multiples of pool={pool} (pad first)")
+    if c % block_c != 0:
+        raise ValueError(f"C={c} must be a multiple of block_c={block_c} (pad first)")
+    ph, pw = (h // pool, w // pool) if pool is not None else (h, w)
+    grid = (c // block_c,)
+    return pl.pallas_call(
+        partial(_threshold_pool_kernel, v_t=v_t, pool=pool),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+            pl.BlockSpec((1, 1, block_c), lambda b: (0, 0, b)),
+            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+            pl.BlockSpec((ph, pw, block_c), lambda b: (0, 0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w, c), vm.dtype),
+            jax.ShapeDtypeStruct((h, w, c), jnp.int8),
+            jax.ShapeDtypeStruct((ph, pw, c), jnp.int8),
+        ],
+        interpret=interpret,
+    )(vm, bias.reshape(1, 1, c), fired)

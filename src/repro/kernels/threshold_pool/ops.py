@@ -1,0 +1,53 @@
+"""Jitted public wrapper for the threshold_pool kernel: pads H/W to the
+pool window and C to the lane block, dispatches kernel vs oracle, crops."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import threshold_pool_pallas
+from .ref import threshold_pool_ref
+
+_NEG = {jnp.float32.dtype: -3e38, jnp.bfloat16.dtype: -3e38,
+        jnp.int8.dtype: -128, jnp.int16.dtype: -32768}
+
+
+@partial(jax.jit, static_argnames=("v_t", "pool", "block_c", "use_kernel", "interpret"))
+def threshold_pool(
+    vm: jax.Array,
+    bias: jax.Array,
+    fired: jax.Array,
+    *,
+    v_t: float,
+    pool: int | None = None,
+    block_c: int = 128,
+    use_kernel: bool = True,
+    interpret: bool = True,
+):
+    """Fused bias + threshold + m-TTFS indicator + optional OR-max-pool.
+
+    vm: (H, W, C) any supported dtype; bias: (C,); fired: (H, W, C) bool/int8.
+    Returns (vm_out (H,W,C), fired_out bool (H,W,C), spikes_out bool
+    (H,W,C) or pooled (ceil(H/p), ceil(W/p), C)).
+    """
+    h, w, c = vm.shape
+    pw = pool if pool is not None else 1
+    pad_h, pad_w = -h % pw, -w % pw
+    pad_c = -c % block_c
+    neg = _NEG[vm.dtype]  # padded cells must never spike
+    vm_p = jnp.pad(vm, ((0, pad_h), (0, pad_w), (0, pad_c)), constant_values=neg)
+    bias_p = jnp.pad(bias, (0, pad_c))
+    fired_p = jnp.pad(fired.astype(jnp.int8), ((0, pad_h), (0, pad_w), (0, pad_c)))
+    fn = threshold_pool_pallas if use_kernel else threshold_pool_ref
+    kwargs = dict(v_t=v_t, pool=pool)
+    if use_kernel:
+        kwargs.update(block_c=block_c, interpret=interpret)
+    vm_out, spikes, pooled = fn(vm_p, bias_p, fired_p, **kwargs)
+    vm_out = vm_out[:h, :w, :c]
+    fired_out = spikes[:h, :w, :c] != 0
+    if pool is None:
+        return vm_out, fired_out, fired_out
+    oh, ow = -(-h // pool), -(-w // pool)
+    return vm_out, fired_out, pooled[:oh, :ow, :c] != 0

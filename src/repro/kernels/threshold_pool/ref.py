@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the threshold_pool Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
+
+
+def threshold_pool_ref(vm: jax.Array, bias: jax.Array, fired: jax.Array, *,
+                       v_t: float, pool: int | None):
+    sat = _SAT_RANGE.get(vm.dtype)
+    b = bias.reshape(1, 1, -1)
+    if sat is not None:
+        wide = vm.astype(jnp.int32) + b.astype(jnp.int32)
+        vm_new = jnp.clip(wide, sat[0], sat[1]).astype(vm.dtype)
+    else:
+        vm_new = vm + b
+    spikes = (vm_new > jnp.asarray(v_t, vm_new.dtype)) | (fired != 0)
+    if pool is not None:
+        h, w, c = spikes.shape
+        s = spikes.reshape(h // pool, pool, w // pool, pool, c)
+        pooled = jnp.any(s, axis=(1, 3))
+    else:
+        pooled = spikes
+    return vm_new, spikes.astype(jnp.int8), pooled.astype(jnp.int8)

@@ -1,0 +1,505 @@
+"""HLO-text cost model with while-loop trip-count multipliers.
+
+Why this exists: ``compiled.cost_analysis()`` (HloCostAnalysis) visits a
+``while`` body ONCE, so any lax.scan-based model (all of ours: layer
+scans, q-block attention, chunked CE, linear-attention chunk scans) has
+its FLOPs / bytes / collectives undercounted by the trip count (measured
+22x on stablelm train).  XLA:CPU records ``known_trip_count`` in each
+while's backend_config, so an exact fix is to walk the HLO call graph
+ourselves and multiply.
+
+Cost semantics (documented proxies, used consistently across all cells):
+* flops      — 2 * prod(output dims) * prod(lhs contracting dims) per
+               dot; convolutions approximated as dots; elementwise ops
+               ignored (<1% of any transformer's FLOPs).
+* hbm_bytes  — TPU-fusion approximation: only *materializing* ops touch
+               HBM (dot/conv, reduces, data movement: copy/gather/
+               scatter/(dynamic-)slice/dus/transpose/concat/pad/sort,
+               and collectives), counted as operand+output bytes; pure
+               elementwise chains (adds, converts, broadcasts, compares,
+               selects — including the single-op kLoop fusions XLA:CPU
+               wraps them in) are free, as a TPU would fuse them into
+               neighboring kernels.  This slightly undercounts real
+               fusion boundaries and is used consistently across cells.
+* collective wire bytes — same ring multipliers as launch/roofline.py,
+               with replica-group sizes parsed per op.
+* while      — body x N, condition x (N+1); call/conditional x 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+# ops whose operands/outputs really move HBM bytes on a fused (TPU) backend
+_MATERIALIZING = {"dot", "convolution", "reduce", "reduce-window", "sort",
+                  "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+                  "copy", "copy-start", "transpose", "concatenate", "pad",
+                  "reverse", "slice", "select-and-scatter", "cholesky",
+                  "triangular-solve", "rng", "rng-bit-generator",
+                  "custom-call"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _dtype_width(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    return _DTYPE_BYTES.get(m.group(1), 0) if m else 0
+_OP_RE = re.compile(r"^(?:ROOT )?%([\w.\-]+) = (.+?) ([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\)? -> .*\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    """Dims of the FIRST array shape in the string."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    shape: str
+    kind: str
+    operands: list
+    attrs: str
+    arg_str: str = ""  # raw operand text (holds e.g. the parameter index)
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_wire: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "CompCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire += other.wire * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] = self.coll_wire.get(k, 0.0) + v * mult
+
+
+class HloCostModel:
+    """See module docstring. ``bytes_by_kind()`` attributes the byte proxy
+    per op kind (with trip multipliers) for perf debugging."""
+
+    def __init__(self, hlo_text: str, n_devices: int):
+        self.n_devices = n_devices
+        self.comps: dict[str, list[OpLine]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: dict[str, CompCost] = {}
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            m = _COMP_RE.match(raw)  # computations start at col 0
+            if m and raw[0] != " " and "{" in raw:
+                cur = m.group(1)
+                self.comps[cur] = []
+                if raw.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None or not line or line == "}":
+                if line == "}":
+                    cur = None
+                continue
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            name, shape, kind, rest = om.groups()
+            # operands: %names inside the first (...) group
+            depth, i, args = 1, 0, rest
+            while i < len(args) and depth:
+                if args[i] == "(":
+                    depth += 1
+                elif args[i] == ")":
+                    depth -= 1
+                i += 1
+            operand_str, attrs = args[: i - 1], args[i:]
+            operands = re.findall(r"%([\w.\-]+)", operand_str)
+            self.comps[cur].append(OpLine(name, shape, kind, operands, attrs,
+                                          operand_str))
+
+    def _symtab(self, comp: str) -> dict:
+        return {op.name: op.shape for op in self.comps[comp]}
+
+    def _eff_bytes_map(self, comp: str) -> dict:
+        """name -> effective operand bytes, looking through converts.
+
+        XLA:CPU upcasts bf16 dots to f32 via explicit converts; a TPU
+        would read the bf16 buffer directly.  Charge the pre-convert
+        dtype so mixed-precision accounting matches the target hardware.
+        """
+        memo = self.__dict__.setdefault("_eff_memo", {})
+        if comp in memo:
+            return memo[comp]
+        sym = self._symtab(comp)
+        eff = {}
+        for op in self.comps[comp]:
+            out_b = _shape_bytes(op.shape)
+            if op.kind == "convert" and op.operands:
+                src = _shape_bytes(sym.get(op.operands[0], ""))
+                eff[op.name] = min(out_b, src) if src else out_b
+            elif op.kind == "fusion":
+                called = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                w_out = _dtype_width(op.shape)
+                w_eff = w_out
+                if called:
+                    w_in = self._fusion_narrow_width(called.group(1))
+                    if w_in is not None:
+                        w_eff = min(w_out, w_in)
+                eff[op.name] = (out_b * w_eff // w_out) if w_out else out_b
+            else:
+                eff[op.name] = out_b
+        memo[comp] = eff
+        return eff
+
+    def _fusion_narrow_width(self, comp: str):
+        """Narrowest convert-result width inside a fused computation, or
+        None if it contains no converts.  A value that passed through a
+        bf16 rounding is stored bf16 on the target backend even though
+        XLA:CPU keeps it f32 for its (upcasting) dot implementation."""
+        widths = []
+        for op in self.comps.get(comp, []):
+            if op.kind == "convert":
+                w = _dtype_width(op.shape)
+                if w:
+                    widths.append(w)
+        return min(widths) if widths else None
+
+    # ------------------------------------------------------------- costing
+    def comp_cost(self, comp: str) -> CompCost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = CompCost()
+        self._memo[comp] = total  # break cycles defensively
+        sym = self._symtab(comp)
+        eff = self._eff_bytes_map(comp)
+        for op in self.comps[comp]:
+            if op.kind in _FREE_OPS:
+                continue
+            out_bytes = _shape_bytes(op.shape)
+            opd_bytes = sum(eff.get(o, _shape_bytes(sym.get(o, "")))
+                            for o in op.operands)
+            if op.kind == "fusion":
+                # recurse for flops; bytes only if the fused computation
+                # contains a materializing op (else: elementwise chain, free)
+                called = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if called and called.group(1) in self.comps:
+                    cname = called.group(1)
+                    sub = self.comp_cost(cname)
+                    total.flops += sub.flops
+                    if self._materializes(cname):
+                        upd = self._dus_root_update_bytes(cname)
+                        eff_out = 2 * upd if upd is not None else out_bytes
+                        total.bytes += eff_out + self._fusion_operand_bytes(
+                            cname, op, sym, eff)
+                continue
+            if op.kind == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                trip = 1.0
+                tm = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', op.attrs)
+                if tm:
+                    trip = float(tm.group(1))
+                if body and body.group(1) in self.comps:
+                    total.add(self.comp_cost(body.group(1)), trip)
+                if cond and cond.group(1) in self.comps:
+                    total.add(self.comp_cost(cond.group(1)), trip + 1)
+                continue
+            if op.kind in ("call", "async-start"):
+                called = re.search(r"(?:to_apply|called_computation)=%?([\w.\-]+)",
+                                   op.attrs)
+                if called and called.group(1) in self.comps:
+                    total.add(self.comp_cost(called.group(1)))
+                total.bytes += out_bytes
+                continue
+            if op.kind == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", op.attrs)
+                names = re.findall(r"%([\w.\-]+)", branches[0]) if branches else []
+                if names:
+                    worst = CompCost()
+                    for nm in names:
+                        if nm in self.comps:
+                            c = self.comp_cost(nm)
+                            if c.flops + c.bytes > worst.flops + worst.bytes:
+                                worst = c
+                    total.add(worst)
+                total.bytes += out_bytes
+                continue
+            if op.kind == "dot":
+                lhs_shape = sym.get(op.operands[0], "") if op.operands else ""
+                lhs_dims = _shape_dims(lhs_shape)
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+                contract = 1
+                if cm and cm.group(1):
+                    for d in cm.group(1).split(","):
+                        contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+                out_elems = 1
+                for d in _shape_dims(op.shape):
+                    out_elems *= d
+                total.flops += 2.0 * out_elems * contract
+                total.bytes += out_bytes + opd_bytes
+                continue
+            if op.kind == "convolution":
+                out_elems = 1
+                for d in _shape_dims(op.shape):
+                    out_elems *= d
+                k_dims = _shape_dims(sym.get(op.operands[1], "")) if len(op.operands) > 1 else []
+                k_elems = 1
+                for d in k_dims[:-1]:  # kernel spatial x in-channels
+                    k_elems *= d
+                total.flops += 2.0 * out_elems * k_elems
+                total.bytes += out_bytes + opd_bytes
+                continue
+            base = op.kind[:-len("-start")] if op.kind.endswith("-start") else op.kind
+            if base in _COLLECTIVES:
+                n = self._group_size(op.attrs)
+                if n > 1:
+                    frac = (n - 1) / n
+                    if base == "all-reduce":
+                        w = 2.0 * out_bytes * frac
+                    elif base == "all-gather":
+                        w = out_bytes * frac
+                    elif base == "reduce-scatter":
+                        w = out_bytes * (n - 1)
+                    elif base == "all-to-all":
+                        w = out_bytes * frac
+                    else:
+                        w = out_bytes
+                    total.wire += w
+                    total.coll_counts[base] = total.coll_counts.get(base, 0) + 1
+                    total.coll_wire[base] = total.coll_wire.get(base, 0.0) + w
+                total.bytes += out_bytes
+                continue
+            if op.kind in ("dynamic-slice", "gather"):
+                # a slice reads only the sliced bytes, not the source buffer
+                total.bytes += 2 * out_bytes
+                continue
+            if op.kind == "dynamic-update-slice":
+                # read-modify-write of the update region; the target buffer
+                # aliases in place (donation) — full-buffer copy never happens
+                upd = (_shape_bytes(sym.get(op.operands[1], ""))
+                       if len(op.operands) > 1 else out_bytes)
+                total.bytes += 2 * upd
+                continue
+            if op.kind in _MATERIALIZING:
+                total.bytes += out_bytes + opd_bytes
+            # remaining elementwise ops: fused away, free
+        return total
+
+    def _dus_root_update_bytes(self, cname: str):
+        """If the fused computation's root is a dynamic-update-slice (through
+        converts/bitcasts/copies), return the update operand's bytes: with
+        buffer donation the full-size output aliases in place and only the
+        updated region moves.  None if the root is not a dus."""
+        inner = self.comps.get(cname, [])
+        sym = {o.name: o for o in inner}
+        root = next((o for o in inner if o.kind != "parameter"), None)
+        for o in inner:
+            # the ROOT marker is lost in parsing; take the last op as root
+            root = o
+        seen = 0
+        while root is not None and root.kind in ("convert", "bitcast", "copy") \
+                and root.operands and seen < 8:
+            root = sym.get(root.operands[0])
+            seen += 1
+        if root is not None and root.kind == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            upd = sym.get(root.operands[1])
+            return _shape_bytes(upd.shape) if upd is not None else None
+        return None
+
+    def _fusion_operand_bytes(self, cname: str, op: OpLine, sym: dict,
+                              eff: dict) -> float:
+        """Operand bytes of a fusion, honoring slice semantics: a fusion
+        parameter consumed ONLY by dynamic-slice/gather reads just the
+        sliced bytes; a dus target parameter aliases (0 read)."""
+        inner = self.comps.get(cname, [])
+        param_names = {}
+        for iop in inner:
+            if iop.kind == "parameter" and iop.arg_str.strip().isdigit():
+                param_names[int(iop.arg_str.strip())] = iop.name
+        consumers: dict[str, list] = {}
+        for iop in inner:
+            for o in iop.operands:
+                consumers.setdefault(o, []).append(iop)
+        total = 0.0
+        for i, operand in enumerate(op.operands):
+            full = eff.get(operand, _shape_bytes(sym.get(operand, "")))
+            pname = param_names.get(i)
+            cons = consumers.get(pname, []) if pname else []
+            if not cons:
+                total += full
+                continue
+            # transitive walk through dtype/layout chains: XLA:CPU wraps dus
+            # targets in full-buffer convert round-trips a TPU wouldn't emit
+            acc = 0.0
+            stack = [(pname, c) for c in cons]
+            hops = 0
+            while stack and acc < full and hops < 64:
+                hops += 1
+                src, c = stack.pop()
+                if c.kind in ("convert", "bitcast", "copy"):
+                    stack.extend((c.name, c2) for c2 in consumers.get(c.name, []))
+                elif c.kind in ("dynamic-slice", "gather"):
+                    acc += _shape_bytes(c.shape)
+                elif (c.kind == "dynamic-update-slice" and c.operands
+                      and c.operands[0] == src):
+                    acc += 0.0  # dus target: aliased in place
+                else:
+                    acc = full
+            total += min(acc, full)
+        return total
+
+    def _materializes(self, comp: str) -> bool:
+        """Does the fused computation contain any HBM-moving op?"""
+        memo = self.__dict__.setdefault("_mat_memo", {})
+        if comp in memo:
+            return memo[comp]
+        memo[comp] = False  # break recursion defensively
+        out = False
+        for op in self.comps.get(comp, []):
+            if op.kind in _MATERIALIZING:
+                out = True
+                break
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if m and self._materializes(m.group(1)):
+                    out = True
+                    break
+        memo[comp] = out
+        return out
+
+    def _group_size(self, attrs: str) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", attrs)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+        if m:
+            return len(m.group(1).split(","))
+        return self.n_devices
+
+    def entry_cost(self) -> CompCost:
+        # ENTRY reaches whiles/fusions via direct ops; nested computations are
+        # reached through their callers, so costing ENTRY covers the program.
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found in HLO text")
+        return self.comp_cost(self.entry)
+
+
+    def bytes_by_kind(self) -> dict:
+        """Entry-weighted byte attribution per op kind (debug/perf tool)."""
+        mult: dict[str, float] = {}
+
+        def walk(comp: str, m: float):
+            mult[comp] = mult.get(comp, 0.0) + m
+            for op in self.comps[comp]:
+                if op.kind == "while":
+                    body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                    trip = 1.0
+                    tm = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', op.attrs)
+                    if tm:
+                        trip = float(tm.group(1))
+                    if body and body.group(1) in self.comps:
+                        walk(body.group(1), m * trip)
+                elif op.kind == "call":
+                    called = re.search(r"to_apply=%?([\w.\-]+)", op.attrs)
+                    if called and called.group(1) in self.comps:
+                        walk(called.group(1), m)
+
+        walk(self.entry, 1.0)
+        agg: dict[str, float] = {}
+        for comp, m in mult.items():
+            sym = self._symtab(comp)
+            for op in self.comps[comp]:
+                if op.kind in _FREE_OPS or op.kind == "while":
+                    continue
+                b = _shape_bytes(op.shape)
+                if op.kind not in ("call", "conditional"):
+                    b += sum(_shape_bytes(sym.get(o, "")) for o in op.operands)
+                agg[op.kind] = agg.get(op.kind, 0.0) + b * m
+        return dict(sorted(agg.items(), key=lambda kv: -kv[1]))
+
+    def top_buffers(self, n: int = 12) -> list:
+        """Entry-weighted top byte contributors [(bytes, kind, shape, op_name)]
+        under the same accounting rules as entry_cost (perf debugging)."""
+        mult: dict[str, float] = {}
+
+        def walk(comp, mm):
+            mult[comp] = mult.get(comp, 0.0) + mm
+            for op in self.comps[comp]:
+                if op.kind == "while":
+                    b = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                    tm = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', op.attrs)
+                    t = float(tm.group(1)) if tm else 1.0
+                    if b and b.group(1) in self.comps:
+                        walk(b.group(1), mm * t)
+                elif op.kind == "call":
+                    c = re.search(r"to_apply=%?([\w.\-]+)", op.attrs)
+                    if c and c.group(1) in self.comps:
+                        walk(c.group(1), mm)
+
+        walk(self.entry, 1.0)
+        agg: dict = {}
+        for comp, mm in mult.items():
+            sym = self._symtab(comp)
+            eff = self._eff_bytes_map(comp)
+            for op in self.comps[comp]:
+                b = None
+                if op.kind == "fusion":
+                    mo = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                    if not (mo and self._materializes(mo.group(1))):
+                        continue
+                    upd = self._dus_root_update_bytes(mo.group(1))
+                    out_b = 2 * upd if upd is not None else _shape_bytes(op.shape)
+                    b = out_b + self._fusion_operand_bytes(mo.group(1), op, sym, eff)
+                elif op.kind in ("dynamic-slice", "gather"):
+                    b = 2 * _shape_bytes(op.shape)
+                elif op.kind == "dynamic-update-slice":
+                    upd = (_shape_bytes(sym.get(op.operands[1], ""))
+                           if len(op.operands) > 1 else 0)
+                    b = 2 * upd
+                elif op.kind in _MATERIALIZING:
+                    b = _shape_bytes(op.shape) + sum(
+                        eff.get(o, _shape_bytes(sym.get(o, ""))) for o in op.operands)
+                if b is None:
+                    continue
+                meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                nm = (meta.group(1) if meta else "?")[-70:]
+                key = (op.kind, op.shape.split("{")[0][:40], nm)
+                agg[key] = agg.get(key, 0.0) + b * mm
+        return sorted(((v,) + k for k, v in agg.items()), reverse=True)[:n]

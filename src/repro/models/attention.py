@@ -1,0 +1,358 @@
+"""Attention blocks: GQA/MQA (full, sliding-window, cross) and DeepSeek MLA.
+
+Each block exposes:
+  *_specs(cfg)                      — ParamSpec tree for one layer
+  *_forward(p, x, ...)              — full-sequence (train / prefill)
+  *_decode(p, x, cache, pos, ...)   — single-token step against a KV cache
+
+Caches are plain dicts of arrays so they shard/checkpoint like params.
+Sliding-window layers use a ring-buffer cache of exactly ``window`` slots
+(the reason gemma3-style models stay cheap at 500k context).
+MLA decode uses the *absorbed* low-rank form: only the 512-dim latent and
+the 64-dim shared rope key are cached, and W_UK/W_UV are folded into the
+score/output projections — the memory-bound shape the roofline rewards.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, apply_mrope, apply_rope, causal_mask, rms_norm, sliding_mask
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(d_model: int, n_heads: int, n_kv: int, d_head: int,
+              use_qk_norm: bool = False) -> dict:
+    s = {
+        "wq": ParamSpec((d_model, n_heads, d_head), ("embed", "heads", "head_dim"), "scaled"),
+        "wk": ParamSpec((d_model, n_kv, d_head), ("embed", "kv_heads", "head_dim"), "scaled"),
+        "wv": ParamSpec((d_model, n_kv, d_head), ("embed", "kv_heads", "head_dim"), "scaled"),
+        "wo": ParamSpec((n_heads, d_head, d_model), ("heads", "head_dim", "embed"), "scaled"),
+    }
+    if use_qk_norm:
+        s["q_norm"] = ParamSpec((d_head,), ("head_dim",), "zeros")
+        s["k_norm"] = ParamSpec((d_head,), ("head_dim",), "zeros")
+    return s
+
+
+def _project_qkv(p: dict, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array]):
+    """q: (B,Sq,H,D); k,v: (B,Sk,Kv,D); mask: (Sq,Sk) or (B,Sq,Sk) or None."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    q = q.reshape(b, sq, kv, group, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        scores = jnp.where(m[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+Q_BLOCK = 1024
+_BLOCKED_MIN_SEQ = 2048  # below this the plain (S, S) path is cheaper
+
+
+def _attend_qblocks(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: Optional[int] = None, q_block: int = Q_BLOCK):
+    """Causal GQA attention scanned over query blocks.
+
+    Bounds live score memory to (B, H, q_block, L) where L = Sk (full) or
+    window + q_block (sliding — the KV slice is narrowed per block, so
+    sliding layers are O(S*w) compute AND memory; this is what makes the
+    gemma3-style 5:1 pattern and 32k prefills feasible).  The backward
+    pass recomputes per block (scan remat).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    pad = -sq % q_block
+    if pad:  # padded query rows see only kv[0], get cropped after
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (sq + pad) // q_block
+    qb = q.reshape(b, nb, q_block, h, d).swapaxes(0, 1)       # (nb,B,blk,H,D)
+    use_slice = window is not None and window + q_block < sk
+    l_kv = window + q_block if use_slice else sk
+
+    @jax.checkpoint  # backward recomputes per-block scores: without this the
+    # scan stacks every block's softmax weights = the full (S, S) matrix
+    def one_block(carry, xs):
+        i, qi_blk = xs
+        start_q = i * q_block
+        if use_slice:
+            start_k = jnp.clip(start_q + q_block - l_kv, 0, sk - l_kv)
+            kk = jax.lax.dynamic_slice(k, (0, start_k, 0, 0),
+                                       (b, l_kv, k.shape[2], d))
+            vv = jax.lax.dynamic_slice(v, (0, start_k, 0, 0),
+                                       (b, l_kv, v.shape[2], v.shape[3]))
+        else:
+            start_k = jnp.asarray(0, jnp.int32)
+            kk, vv = k, v
+        qi = start_q + jnp.arange(q_block)[:, None]
+        kj = start_k + jnp.arange(l_kv)[None, :]
+        m = kj <= qi
+        if window is not None:
+            m &= kj > qi - window
+        out = _gqa_attend(qi_blk, kk, vv, jnp.broadcast_to(m[None], (b,) + m.shape))
+        return carry, out
+
+    _, outs = jax.lax.scan(one_block, (),
+                           (jnp.arange(nb, dtype=jnp.int32), qb))
+    out = outs.swapaxes(0, 1).reshape(b, sq + pad, h, v.shape[-1])
+    return out[:, :sq]
+
+
+def attend_causal(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: Optional[int] = None, q_offset: int = 0):
+    """Causal (optionally sliding-window) attention; picks the blocked path
+    for long sequences.  q_offset: absolute position of q[0] (vlm concat)."""
+    sq = q.shape[1]
+    if sq >= _BLOCKED_MIN_SEQ and q_offset == 0 and sq == k.shape[1]:
+        return _attend_qblocks(q, k, v, window=window)
+    sk = k.shape[1]
+    mask = (sliding_mask(sq, sk, window, q_offset) if window is not None
+            else causal_mask(sq, sk, q_offset))
+    return _gqa_attend(q, k, v, mask)
+
+
+def gqa_forward(p: dict, x: jax.Array, *, positions: jax.Array,
+                rope_theta: float = 10000.0, window: Optional[int] = None,
+                mrope_sections: Optional[tuple] = None,
+                mrope_positions: Optional[jax.Array] = None,
+                bidirectional: bool = False, use_rope: bool = True) -> jax.Array:
+    """Full-sequence GQA. x: (B,S,D); positions: (B,S) int32."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x)
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, mrope_positions, mrope_sections, rope_theta)
+    elif use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if bidirectional:
+        out = _gqa_attend(q, k, v, None)
+    else:
+        out = attend_causal(q, k, v, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_init_cache(n_layers: int, batch: int, max_seq: int, n_kv: int, d_head: int,
+                   window: Optional[int] = None, dtype=jnp.bfloat16) -> dict:
+    """Stacked (over layers) KV cache; ring-buffer when ``window`` is set."""
+    slots = min(window, max_seq) if window is not None else max_seq
+    cache = {
+        "k": jnp.zeros((n_layers, batch, slots, n_kv, d_head), dtype),
+        "v": jnp.zeros((n_layers, batch, slots, n_kv, d_head), dtype),
+    }
+    if window is not None:
+        cache["slot_pos"] = jnp.full((n_layers, slots), -1, jnp.int32)
+    return cache
+
+
+def cache_axes(window: Optional[int] = None) -> dict:
+    """Logical axes of one stacked GQA cache (for sharding rules)."""
+    kv = {"k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+          "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim")}
+    if window is not None:
+        kv["slot_pos"] = ("layers", "cache_seq")
+    return kv
+
+
+def gqa_fill_cache(p: dict, x: jax.Array, *, positions, rope_theta=10000.0,
+                   window: Optional[int] = None, max_seq: int = 0,
+                   mrope_sections=None, mrope_positions=None, use_rope: bool = True):
+    """Prefill: run full-seq attention AND return this layer's cache entries."""
+    q, k, v = _project_qkv(p, x)
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, mrope_positions, mrope_sections, rope_theta)
+    elif use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    s = x.shape[1]
+    out = attend_causal(q, k, v, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if window is not None:  # ring layout: absolute pos t lives at slot t % window
+        b, _, n_kv, d_head = k.shape
+        take = min(window, s)
+        t_abs = jnp.arange(s - take, s, dtype=jnp.int32)
+        idx = t_abs % window
+        k_c = jnp.zeros((b, window, n_kv, d_head), k.dtype).at[:, idx].set(k[:, s - take:])
+        v_c = jnp.zeros((b, window, n_kv, d_head), v.dtype).at[:, idx].set(v[:, s - take:])
+        slot_abs = jnp.full((window,), -1, jnp.int32).at[idx].set(t_abs)
+        return out, {"k": k_c, "v": v_c, "slot_pos": slot_abs}
+    pad = max_seq - s
+    k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, {"k": k_c, "v": v_c}
+
+
+def gqa_decode(p: dict, x: jax.Array, layer_cache: dict, pos: jax.Array, *,
+               rope_theta=10000.0, window: Optional[int] = None,
+               mrope_sections=None, mrope_positions=None, use_rope: bool = True):
+    """One-token step. x: (B,1,D); pos: () int32 current position.
+
+    Returns (out (B,1,D), updated layer cache).
+    """
+    q, k, v = _project_qkv(p, x)
+    pos_arr = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, mrope_positions, mrope_sections, rope_theta)
+    elif use_rope:
+        q = apply_rope(q, pos_arr, rope_theta)
+        k = apply_rope(k, pos_arr, rope_theta)
+    slots = layer_cache["k"].shape[1]
+    slot = (pos % slots) if window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        layer_cache["k"], k.astype(layer_cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        layer_cache["v"], v.astype(layer_cache["v"].dtype), (0, slot, 0, 0))
+    new_cache = {"k": k_cache, "v": v_cache}
+    if window is not None:
+        slot_pos = jax.lax.dynamic_update_slice(
+            layer_cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+        new_cache["slot_pos"] = slot_pos
+        valid = (slot_pos >= 0) & (slot_pos > pos - window) & (slot_pos <= pos)
+        mask = valid[None, None, :]                       # (1,1,slots)
+    else:
+        mask = (jnp.arange(slots) <= pos)[None, None, :]
+    out = _gqa_attend(q, k_cache, v_cache, jnp.broadcast_to(mask, (x.shape[0], 1, slots)))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_forward(p: dict, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array):
+    """x: (B,S,D); enc_k/enc_v: (B,T,Kv,D) precomputed from encoder output."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = _gqa_attend(q, enc_k, enc_v, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_encode_kv(p: dict, enc_out: jax.Array):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): multi-head latent attention
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+              qk_nope: int, qk_rope: int, v_dim: int) -> dict:
+    return {
+        "wq_a": ParamSpec((d_model, q_lora), ("embed", "q_lora"), "scaled"),
+        "q_norm": ParamSpec((q_lora,), ("q_lora",), "zeros"),
+        "wq_b": ParamSpec((q_lora, n_heads, qk_nope + qk_rope),
+                          ("q_lora", "heads", "head_dim"), "scaled"),
+        "wkv_a": ParamSpec((d_model, kv_lora + qk_rope), ("embed", "kv_lora"), "scaled"),
+        "kv_norm": ParamSpec((kv_lora,), ("kv_lora",), "zeros"),
+        "wk_b": ParamSpec((kv_lora, n_heads, qk_nope), ("kv_lora", "heads", "head_dim"), "scaled"),
+        "wv_b": ParamSpec((kv_lora, n_heads, v_dim), ("kv_lora", "heads", "head_dim"), "scaled"),
+        "wo": ParamSpec((n_heads, v_dim, d_model), ("heads", "head_dim", "embed"), "scaled"),
+    }
+
+
+def _mla_qkv(p: dict, x: jax.Array, positions, rope_theta, qk_nope: int, qk_rope: int):
+    c_q = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = jnp.einsum("bsq,qhk->bshk", c_q, p["wq_b"])
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : p["kv_norm"].shape[0]], p["kv_norm"])  # (B,S,kv_lora)
+    k_rope = kv_a[..., p["kv_norm"].shape[0]:][:, :, None, :]          # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p: dict, x: jax.Array, *, positions, rope_theta: float,
+                qk_nope: int, qk_rope: int) -> jax.Array:
+    """Full-sequence MLA, expanded form (train / prefill), q-blocked when
+    long: q/k = [nope | rope] per head (the 1/sqrt(nope+rope) scale falls
+    out of the concatenated head dim), v has its own dim."""
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, positions, rope_theta, qk_nope, qk_rope)
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsc,chv->bshv", c_kv, p["wv_b"])
+    h = q_nope.shape[2]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (b, s, h, qk_rope))], axis=-1)
+    out = attend_causal(q, k, v)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+
+
+def mla_init_cache(n_layers: int, batch: int, max_seq: int, kv_lora: int,
+                   qk_rope: int, dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((n_layers, batch, max_seq, kv_lora), dtype),
+        "k_rope": jnp.zeros((n_layers, batch, max_seq, qk_rope), dtype),
+    }
+
+
+def mla_cache_axes() -> dict:
+    return {"c_kv": ("layers", "batch", "cache_seq", "kv_lora"),
+            "k_rope": ("layers", "batch", "cache_seq", None)}
+
+
+def mla_fill_cache(p: dict, x: jax.Array, *, positions, rope_theta, qk_nope,
+                   qk_rope, max_seq: int):
+    out = mla_forward(p, x, positions=positions, rope_theta=rope_theta,
+                      qk_nope=qk_nope, qk_rope=qk_rope)
+    _, _, c_kv, k_rope = _mla_qkv(p, x, positions, rope_theta, qk_nope, qk_rope)
+    pad = max_seq - x.shape[1]
+    return out, {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+    }
+
+
+def mla_decode(p: dict, x: jax.Array, layer_cache: dict, pos: jax.Array, *,
+               rope_theta: float, qk_nope: int, qk_rope: int):
+    """Absorbed-form single-token MLA: cache only (c_kv, k_rope).
+
+    scores_t = q_nope W_UK c_kv_t + q_rope k_rope_t  (W_UK absorbed into q)
+    out      = (attn @ c_kv) W_UV                    (W_UV absorbed after)
+    """
+    b = x.shape[0]
+    pos_arr = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(
+        p, x, pos_arr, rope_theta, qk_nope, qk_rope)
+    c_cache = jax.lax.dynamic_update_slice(
+        layer_cache["c_kv"], c_kv_new.astype(layer_cache["c_kv"].dtype), (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(
+        layer_cache["k_rope"], k_rope_new.astype(layer_cache["k_rope"].dtype),
+        (0, pos, 0))
+    q_eff = jnp.einsum("bshk,chk->bshc", q_nope, p["wk_b"])   # absorb W_UK
+    scale = 1.0 / jnp.sqrt(jnp.asarray(qk_nope + qk_rope, jnp.float32))
+    scores = (jnp.einsum("bshc,btc->bhst", q_eff, c_cache)
+              + jnp.einsum("bshk,btk->bhst", q_rope, r_cache)).astype(jnp.float32) * scale
+    slots = c_cache.shape[1]
+    mask = (jnp.arange(slots) <= pos)[None, None, None, :]
+    w = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1).astype(x.dtype)
+    out_c = jnp.einsum("bhst,btc->bshc", w, c_cache)          # (B,1,H,kv_lora)
+    out = jnp.einsum("bshc,chv->bshv", out_c, p["wv_b"])      # absorb W_UV
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

@@ -1,0 +1,213 @@
+"""Shared model machinery: parameter specs, norms, RoPE, losses.
+
+Models are pure functions over pytrees.  Every parameter leaf is declared
+by a ``ParamSpec`` carrying its shape, initializer and **logical axis
+names** (e.g. ("embed", "mlp")); the same spec tree yields
+
+* real initialized arrays            (smoke tests, examples),
+* ShapeDtypeStruct stand-ins          (multi-pod dry-run, no allocation),
+* NamedShardings via the logical->mesh rules in repro/sharding/specs.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                 # normal | zeros | ones | scaled
+    scale: float = 1.0                   # stddev multiplier for "normal"/"scaled"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(rng: jax.Array, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "scaled":  # fan-in scaled normal
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return std * jax.random.normal(rng, spec.shape, dtype)
+    return spec.scale * 0.02 * jax.random.normal(rng, spec.shape, dtype)
+
+
+def init_tree(rng: jax.Array, specs: Any, dtype=jnp.float32) -> Any:
+    """Materialize a spec tree into real parameter arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(r, s, dtype) for r, s in zip(rngs, leaves)])
+
+
+def abstract_tree(specs: Any, dtype=jnp.bfloat16) -> Any:
+    """Spec tree -> ShapeDtypeStruct tree (no allocation; dry-run path)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=is_spec)
+
+
+def logical_axes_tree(specs: Any) -> Any:
+    """Spec tree -> tree of logical-axis tuples (consumed by sharding rules)."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs: Any) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def stack_specs(spec_tree: Any, n: int, axis_name: Optional[str] = "layers") -> Any:
+    """Prepend a stacking (scan) dimension to every leaf of a layer's specs."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        spec_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(dt)
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)           # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 10000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the head dim is split into sections that
+    rotate with different position streams (temporal, height, width).
+
+    x: (B, S, H, D); positions: (n_sections, B, S); sum(sections) == D//2.
+    """
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    bounds = jnp.cumsum(jnp.asarray((0,) + sections))
+    sec_id = jnp.searchsorted(bounds, jnp.arange(d // 2), side="right") - 1  # (D/2,)
+    pos = positions[sec_id]                                # (D/2, B, S) gather per freq
+    angles = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy. logits: (B,S,V) or (N,V); labels int.
+
+    The gold logit is picked with an iota-compare reduction rather than
+    take_along_axis: a vocab-sharded logits tensor then reduces locally +
+    all-reduces a scalar, instead of all-gathering the whole vocab axis.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def chunked_softmax_ce(hidden: jax.Array, w: jax.Array, labels: jax.Array,
+                       mask: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross entropy without ever materializing the full (B, S, V) logits.
+
+    hidden: (B, S, D) at the positions that predict ``labels`` (B, S);
+    w: (D, V) output projection.  A scan over sequence chunks computes
+    each chunk's logits, reduces them to (logz, gold) scalars-per-token,
+    and frees them — bounding live logits memory to one chunk (the
+    backward pass recomputes them per chunk, scan-remat style).  This is
+    what keeps 262k-vocab training inside HBM (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = hidden.shape
+    pad = -s % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (s + pad) // chunk
+    hc = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        from repro.sharding.specs import constrain
+        h, l, m = xs
+        h = constrain(h, ("batch", None, None))
+        logits = (h @ w).astype(jnp.float32)                 # (B, chunk, V)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(iota == l[..., None], logits, 0.0), axis=-1)
+        nll = (logz - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), ()
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0) -> jax.Array:
+    """(s_q, s_k) boolean mask; True = attend.  q position i sits at i+q_offset."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return kj <= qi
+
+
+def sliding_mask(s_q: int, s_k: int, window: int, q_offset: int = 0) -> jax.Array:
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (kj > qi - window)

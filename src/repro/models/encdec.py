@@ -1,0 +1,188 @@
+"""Whisper-style encoder-decoder backbone (assigned arch: whisper-medium).
+
+Per the brief the audio conv frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, enc_frames, d_model).  The transformer
+backbone is faithful: pre-LN encoder with bidirectional self-attention
+and learned positions, decoder with causal self-attention + cross
+attention, no RoPE (whisper uses absolute embeddings).
+
+Decode caches: decoder self-attention KV (ring-free, full) plus the
+cross-attention K/V computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from .common import ParamSpec, chunked_softmax_ce, layer_norm, stack_specs
+from .ffn import mlp_specs
+
+
+def _mlp_gelu(p, x):
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+def _mlp_gelu_specs(d_model, d_ff):
+    return {"w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), "scaled"),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), "scaled")}
+
+
+def _ln_specs(d):
+    return {"g": ParamSpec((d,), ("embed",), "ones"),
+            "b": ParamSpec((d,), ("embed",), "zeros")}
+
+
+def _ln(p, x):
+    return layer_norm(x, p["g"], p["b"])
+
+
+def build_param_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    enc_layer = {"ln1": _ln_specs(d), "attn": attn.gqa_specs(d, h, kv, dh),
+                 "ln2": _ln_specs(d), "mlp": _mlp_gelu_specs(d, cfg.d_ff)}
+    dec_layer = {"ln1": _ln_specs(d), "self_attn": attn.gqa_specs(d, h, kv, dh),
+                 "ln2": _ln_specs(d), "cross_attn": attn.gqa_specs(d, h, kv, dh),
+                 "ln3": _ln_specs(d), "mlp": _mlp_gelu_specs(d, cfg.d_ff)}
+    return {
+        "enc_pos": ParamSpec((cfg.enc_frames, d), (None, "embed")),
+        "enc_layers": stack_specs(enc_layer, cfg.n_enc_layers),
+        "enc_norm": _ln_specs(d),
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed")),
+        "dec_pos": ParamSpec((cfg.max_target_positions, d), (None, "embed")),
+        "dec_layers": stack_specs(dec_layer, cfg.n_layers),
+        "dec_norm": _ln_specs(d),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, T, D) stub embeddings -> encoder hidden states."""
+    t = frames.shape[1]
+    x = frames + params["enc_pos"][:t][None]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), frames.shape[:2])
+
+    def body(xc, lp):
+        h = _ln(lp["ln1"], xc)
+        xc = xc + attn.gqa_forward(lp["attn"], h, positions=positions,
+                                   bidirectional=True, use_rope=False)
+        h = _ln(lp["ln2"], xc)
+        return xc + _mlp_gelu(lp["mlp"], h), ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(params["enc_norm"], x)
+
+
+def _decoder(params: dict, tokens: jax.Array, enc_out: jax.Array, cfg: ArchConfig,
+             phase: str, return_hidden: bool = False) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][:s][None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(xc, lp):
+        h = _ln(lp["ln1"], xc)
+        xc = xc + attn.gqa_forward(lp["self_attn"], h, positions=positions,
+                                   use_rope=False)
+        h = _ln(lp["ln2"], xc)
+        ek, ev = attn.cross_encode_kv(lp["cross_attn"], enc_out)
+        xc = xc + attn.cross_forward(lp["cross_attn"], h, ek, ev)
+        h = _ln(lp["ln3"], xc)
+        return xc + _mlp_gelu(lp["mlp"], h), ()
+
+    if cfg.remat and phase == "train":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(params["dec_norm"], x)
+    if return_hidden:
+        return x
+    return x @ params["embed"].T  # whisper ties the output projection
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig):
+    hidden = _decoder(params, batch["tokens"], encode(params, batch["frames"], cfg),
+                      cfg, "train", return_hidden=True)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = chunked_softmax_ce(hidden[:, :-1], params["embed"].T,
+                            jnp.maximum(labels[:, 1:], 0), mask[:, 1:])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def cache_structure(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                    abstract: bool = True):
+    l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else (
+        lambda s, dt: jnp.zeros(s, dt))
+    cache = {
+        "self_k": mk((l, batch, max_seq, kv, dh), dtype),
+        "self_v": mk((l, batch, max_seq, kv, dh), dtype),
+        "cross_k": mk((l, batch, cfg.enc_frames, kv, dh), dtype),
+        "cross_v": mk((l, batch, cfg.enc_frames, kv, dh), dtype),
+    }
+    axes = {
+        "self_k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "self_v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "cross_k": ("layers", "batch", None, "kv_heads", "head_dim"),
+        "cross_v": ("layers", "batch", None, "kv_heads", "head_dim"),
+    }
+    return cache, axes
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, max_seq: int,
+            cache_dtype=jnp.bfloat16):
+    """Encode frames + run the decoder prompt; emit self+cross caches."""
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["dec_pos"][:s][None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(xc, lp):
+        h = _ln(lp["ln1"], xc)
+        a, kvs = attn.gqa_fill_cache(lp["self_attn"], h, positions=positions,
+                                     max_seq=max_seq, use_rope=False)
+        xc = xc + a
+        h = _ln(lp["ln2"], xc)
+        ek, ev = attn.cross_encode_kv(lp["cross_attn"], enc_out)
+        xc = xc + attn.cross_forward(lp["cross_attn"], h, ek, ev)
+        h = _ln(lp["ln3"], xc)
+        xc = xc + _mlp_gelu(lp["mlp"], h)
+        out = {"self_k": kvs["k"].astype(cache_dtype),
+               "self_v": kvs["v"].astype(cache_dtype),
+               "cross_k": ek.astype(cache_dtype), "cross_v": ev.astype(cache_dtype)}
+        return xc, out
+
+    x, cache = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(params["dec_norm"], x)
+    logits = (x[:, -1:, :] @ params["embed"].T)[:, 0]
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig):
+    tokens, pos = batch["tokens"], batch["pos"]
+    b = tokens.shape[0]
+    x = params["embed"][tokens] + jax.lax.dynamic_slice(
+        params["dec_pos"], (pos, 0), (1, cfg.d_model))[None]
+
+    def body(xc, xs):
+        lp, lc = xs
+        h = _ln(lp["ln1"], xc)
+        a, kv_new = attn.gqa_decode(lp["self_attn"], h,
+                                    {"k": lc["self_k"], "v": lc["self_v"]}, pos,
+                                    use_rope=False)
+        xc = xc + a
+        h = _ln(lp["ln2"], xc)
+        xc = xc + attn.cross_forward(lp["cross_attn"], h, lc["cross_k"], lc["cross_v"])
+        h = _ln(lp["ln3"], xc)
+        xc = xc + _mlp_gelu(lp["mlp"], h)
+        out = {"self_k": kv_new["k"], "self_v": kv_new["v"],
+               "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+        return xc, out
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = _ln(params["dec_norm"], x)
+    return (x @ params["embed"].T)[:, 0], new_cache

@@ -1,0 +1,200 @@
+"""Feed-forward blocks: SwiGLU MLP and capacity-bounded Mixture-of-Experts.
+
+The MoE dispatch deliberately reuses the paper's core primitive — compact
+the *active set* into a fixed-capacity buffer and make compute scale with
+it (DESIGN.md Sec. 4): each expert gathers the tokens routed to it into a
+``capacity``-bounded buffer (sort-free ranking via cumsum over the
+routing mask), computes one dense (E, C, d) batch, and scatters back with
+the gate weights.  No (T, E, C) one-hot dispatch einsum is ever built, so
+HLO FLOPs stay proportional to the ACTIVE parameter count — which is what
+makes the MoE rooflines honest.
+
+Sharding: expert tensors carry the "experts" logical axis (mapped to the
+mesh "model" axis). Under pjit, XLA partitions the (E, C, d) expert
+batches across the model axis; the gather/scatter lower to all-to-all-
+free masked ops because routing tensors are replicated on that axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+
+
+def mlp_specs(d_model: int, d_ff: int, gated: bool = True) -> dict:
+    s = {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), "scaled"),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), "scaled"),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((d_model, d_ff), ("embed", "mlp"), "scaled")
+    return s
+
+
+def mlp_forward(p: dict, x: jax.Array) -> jax.Array:
+    if "w_gate" in p:  # SwiGLU
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:  # plain GELU MLP (granite-style)
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def moe_specs(d_model: int, d_ff: int, n_experts: int, n_shared: int = 0) -> dict:
+    s = {
+        "router": ParamSpec((d_model, n_experts), ("embed", "experts"), "scaled"),
+        "we_gate": ParamSpec((n_experts, d_model, d_ff), ("experts", "embed", "expert_mlp"), "scaled"),
+        "we_up": ParamSpec((n_experts, d_model, d_ff), ("experts", "embed", "expert_mlp"), "scaled"),
+        "we_down": ParamSpec((n_experts, d_ff, d_model), ("experts", "expert_mlp", "embed"), "scaled"),
+    }
+    if n_shared:
+        s["shared"] = mlp_specs(d_model, d_ff * n_shared)
+    return s
+
+
+def moe_forward(p: dict, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25,
+                router_softmax: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with per-expert capacity.
+
+    x: (B, S, D).  Returns (out (B,S,D), aux_loss ()).
+
+    Dispatch = the AEQ idea: per expert, rank the tokens routed to it with
+    a cumsum over the routing mask (position-in-queue), drop overflow
+    (capacity), gather into (E, C, D), batch-matmul, scatter-add back.
+    """
+    b, s, d = x.shape
+    n_experts = p["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)           # (T, E)
+    if router_softmax:
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:
+        probs = jax.nn.sigmoid(logits)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)              # (T, k)
+    if router_softmax and top_k > 1:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(max(1, round(t * top_k * capacity_factor / n_experts)))
+    # routing mask (T, k, E) -> position of each (token, slot) inside its
+    # expert's queue, via exclusive cumsum over the flattened (T*k) order.
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(t * top_k, n_experts)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat           # exclusive
+    pos_in_expert = jnp.sum(pos_in_expert * flat, axis=1).reshape(t, top_k)
+    keep = (pos_in_expert < capacity) & (onehot.sum(-1) > 0).astype(bool)
+
+    # gather tokens into (E, C, D) queues; dropped tokens target slot ==
+    # capacity, which mode="drop" discards (never clobbers a real slot).
+    expert_of = idx                                            # (T, k)
+    slot = jnp.where(keep, pos_in_expert, capacity)
+    token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, top_k))
+    buf = jnp.zeros((n_experts, capacity, d), x.dtype)
+    buf = buf.at[expert_of, slot].set(xt[token_ids], mode="drop")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_down"])      # (E, C, D)
+
+    # scatter back with gate weights
+    gathered = out_buf[expert_of, slot]                        # (T, k, D)
+    gathered = gathered * jnp.where(keep, gate_vals, 0.0).astype(x.dtype)[..., None]
+    out = gathered.sum(axis=1).reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], x)
+
+    # load-balancing aux loss (Switch/GShard form)
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = flat.reshape(t, top_k, n_experts).sum(axis=(0, 1)) / max(t * top_k, 1)
+    aux = n_experts * jnp.sum(me * ce)
+    return out, aux
+
+
+def moe_forward_sharded(p: dict, x: jax.Array, *, top_k: int, n_experts: int,
+                        capacity_factor: float = 1.25, router_softmax: bool = True,
+                        mesh=None, expert_axis: str = "model",
+                        batch_axes=("pod", "data")) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map: local-expert masked compaction.
+
+    The pjit global-scatter dispatch in ``moe_forward`` makes XLA
+    all-gather the (T, k, D)-sized scatter indices across the mesh
+    (measured: 128 GB u32 per step on deepseek-v2 train_4k — the single
+    largest collective in the fleet).  Here the routing stays local:
+    tokens are replicated over the expert (model) axis, each shard
+    compacts ONLY the tokens routed to its own experts (the paper's
+    fixed-capacity queue build), computes its expert batch, and the
+    shards' partial outputs are combined with one bf16 psum — the only
+    collective this layer emits.
+
+    x: (B, S, D) sharded batch-over-``batch_axes``; expert tensors
+    sharded (expert_axis, None, None).  Falls back to the dense-dispatch
+    path when no mesh is registered (single-device tests).
+    """
+    if mesh is None:
+        from repro.sharding.specs import _CONSTRAINT_MESH
+        mesh = _CONSTRAINT_MESH[0]
+    if mesh is None or expert_axis not in getattr(mesh, "shape", {}) \
+            or n_experts % mesh.shape[expert_axis] != 0:
+        return moe_forward(p, x, top_k=top_k, capacity_factor=capacity_factor,
+                           router_softmax=router_softmax)
+    from jax.sharding import PartitionSpec as P
+
+    n_shards = mesh.shape[expert_axis]
+    e_loc = n_experts // n_shards
+    b, s, d = x.shape
+    baxes = tuple(a for a in batch_axes if a in mesh.shape)
+
+    def body(xb, router, we_gate, we_up, we_down):
+        t = xb.shape[0] * xb.shape[1]
+        xt = xb.reshape(t, d)
+        logits = (xt @ router).astype(jnp.float32)               # (T_loc, E)
+        probs = jax.nn.softmax(logits, -1) if router_softmax else jax.nn.sigmoid(logits)
+        gate_vals, idx = jax.lax.top_k(probs, top_k)             # (T_loc, k)
+        if router_softmax and top_k > 1:
+            gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+        shard = jax.lax.axis_index(expert_axis)
+        local = idx // e_loc == shard                            # (T_loc, k) mine?
+        idx_loc = jnp.where(local, idx % e_loc, e_loc)           # e_loc = drop slot
+        capacity = int(max(1, round(t * top_k * capacity_factor / n_experts)))
+        onehot = (idx_loc[..., None] ==
+                  jnp.arange(e_loc)[None, None, :]).astype(jnp.int32)  # (T,k,El)
+        flat = onehot.reshape(t * top_k, e_loc)
+        pos = (jnp.cumsum(flat, axis=0) - flat)
+        pos = jnp.sum(pos.reshape(t, top_k, e_loc) * onehot, axis=-1)  # (T, k)
+        keep = local & (pos < capacity)
+        slot = jnp.where(keep, pos, capacity)                    # OOB drops
+        # NOTE (Perf iteration, refuted): scattering per top-k slot to avoid
+        # the (T, k, D) gather measured 8% WORSE — k scatter passes re-read
+        # the token buffer and re-touch buf k times. Single-gather kept.
+        token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, top_k))
+        buf = jnp.zeros((e_loc, capacity, d), xb.dtype)
+        buf = buf.at[jnp.where(keep, idx_loc, e_loc), slot].set(
+            xt[token_ids], mode="drop")
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, we_gate))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, we_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, we_down)
+        gathered = out_buf[jnp.minimum(idx_loc, e_loc - 1), jnp.minimum(slot, capacity - 1)]
+        gathered = gathered * jnp.where(keep, gate_vals, 0.0).astype(xb.dtype)[..., None]
+        out = gathered.sum(axis=1).reshape(xb.shape)
+        out = jax.lax.psum(out, expert_axis)                     # combine shards
+        # local aux estimate (router replicated; idx covers global experts)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((n_experts,)).at[idx.reshape(-1)].add(1.0) / max(t * top_k, 1)
+        aux = n_experts * jnp.sum(me * ce)
+        if baxes:
+            aux = jax.lax.pmean(aux, baxes)  # average the per-shard estimates
+        return out, aux
+
+    in_specs = (P(baxes if baxes else None, None, None), P(),
+                P(expert_axis, None, None), P(expert_axis, None, None),
+                P(expert_axis, None, None))
+    out_specs = (P(baxes if baxes else None, None, None), P())
+    out, aux = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+        x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], x)
+    return out, aux

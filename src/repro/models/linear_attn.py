@@ -1,0 +1,183 @@
+"""Chunked decay linear attention — shared core for Mamba2 (SSD) and RWKV6.
+
+Both architectures are linear RNNs over an outer-product state
+S_t (d_k, d_v) with per-step, per-channel decay w_t in (0, 1]:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = q_t S_t                      (inclusive; Mamba2: q=C, k=B*dt, w=exp(dt*A))
+    o_t = q_t S_{t-1} + (q_t*u . k_t) v_t   (exclusive+bonus; RWKV6: q=r, u=bonus)
+
+The chunked algorithm processes the sequence in chunks of ``chunk``
+steps: within a chunk, outputs come from a masked (T_c, T_c) "attention"
+with per-channel decay factors folded into q~ and k~; across chunks the
+state is carried by a `lax.scan`.  Complexity O(S * (chunk * d_k + d_k *
+d_v)) per head — sub-quadratic in S, which is what qualifies these archs
+for the long_500k shape.
+
+Numerical note: the generic per-channel path folds decays as
+q~ = q * exp(L_t) and k~ = k * exp(-L_s); this is exact only while the
+in-chunk decay span stays within float32 range, so callers choose
+chunk * max|log_w| < ~80 (RWKV6: decay >= -e^1 per step, chunk=16).
+For *scalar-per-head* decays (Mamba2/SSD) use ``chunked_scalar`` below:
+it builds the (T, T) decay matrix from pairwise differences (segsum, the
+official SSD formulation), which is stable for arbitrarily strong decays.
+Tests compare both against the exact recurrent reference.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+MAX_EXP = 80.0  # guard only; callers keep spans below this (see chunk sizes)
+
+
+class LinAttnOut(NamedTuple):
+    out: jax.Array    # (B, S, H, d_v)
+    state: jax.Array  # (B, H, d_k, d_v) final state
+
+
+def recurrent_reference(q, k, v, log_w, *, state0=None, exclusive=False, u=None):
+    """Exact step-by-step recurrence (oracle + decode path).
+
+    q/k: (B,S,H,dk); v: (B,S,H,dv); log_w: (B,S,H,dk) (<= 0).
+    u: (H, dk) bonus for the exclusive (RWKV) form.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    st = jnp.zeros((b, h, dk, dv), jnp.float32) if state0 is None else state0.astype(jnp.float32)
+
+    def step(st, inp):
+        qt, kt, vt, lwt = inp  # (B,H,dk) etc.
+        w = jnp.exp(lwt.astype(jnp.float32))
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        if exclusive:
+            eff = st + (u[None, :, :, None] * kv if u is not None else 0.0)
+            ot = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), eff)
+            st = w[..., None] * st + kv
+        else:
+            st = w[..., None] * st + kv
+            ot = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), st)
+        return st, ot
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), log_w.swapaxes(0, 1))
+    st, outs = jax.lax.scan(step, st, xs)
+    return LinAttnOut(outs.swapaxes(0, 1).astype(v.dtype), st)
+
+
+def single_step(state, q_t, k_t, v_t, log_w_t, *, exclusive=False, u=None):
+    """One decode step. state: (B,H,dk,dv) fp32; q_t/k_t/log_w_t: (B,H,dk); v_t: (B,H,dv)."""
+    w = jnp.exp(log_w_t.astype(jnp.float32))
+    kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+    if exclusive:
+        eff = state + (u[None, :, :, None] * kv if u is not None else 0.0)
+        o = jnp.einsum("bhk,bhkv->bhv", q_t.astype(jnp.float32), eff)
+        state = w[..., None] * state + kv
+    else:
+        state = w[..., None] * state + kv
+        o = jnp.einsum("bhk,bhkv->bhv", q_t.astype(jnp.float32), state)
+    return state, o.astype(v_t.dtype)
+
+
+@partial(jax.jit, static_argnames=("chunk", "exclusive"))
+def chunked(q, k, v, log_w, *, chunk: int = 64, exclusive: bool = False,
+            u: Optional[jax.Array] = None, state0: Optional[jax.Array] = None) -> LinAttnOut:
+    """Chunk-parallel evaluation; matches recurrent_reference.
+
+    Shapes as in recurrent_reference; S must be a multiple of ``chunk``
+    (callers pad).  All state math in fp32.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    pad = -s % chunk
+    if pad:  # zero k/v and log_w=0 leave the state untouched; outputs cropped
+        q, k, v, log_w = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                          for t in (q, k, v, log_w))
+    s_p = s + pad
+    n = s_p // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):  # (B,S,H,*) -> (n, B, T_c, H, *)
+        return x.reshape(b, n, chunk, h, -1).swapaxes(0, 1)
+
+    qc, kc, vc, lwc = map(to_chunks, (q, k, v, log_w))
+    st0 = jnp.zeros((b, h, dk, dv), f32) if state0 is None else state0.astype(f32)
+
+    def chunk_step(st, inp):
+        qt, kt, vt, lw = (x.astype(f32) for x in inp)   # (B,T,H,dk/dv)
+        lcum = jnp.cumsum(lw, axis=1)                    # inclusive L_t
+        lprev = lcum - lw                                # exclusive L_{t-1}
+        l_end = lcum[:, -1:]                             # (B,1,H,dk)
+        l_q = lprev if exclusive else lcum               # decay seen by q_t
+        q_in = qt * jnp.exp(l_q)                         # <= 1
+        k_dec = kt * jnp.exp(jnp.clip(-lcum, None, MAX_EXP))
+        # intra-chunk "attention": scores (B,H,T,T) strictly causal
+        scores = jnp.einsum("bthk,bshk->bhts", q_in, k_dec)
+        ti = jnp.arange(chunk)
+        mask = ti[:, None] > ti[None, :] if exclusive else ti[:, None] >= ti[None, :]
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        o_intra = jnp.einsum("bhts,bshv->bthv", scores, vt)
+        if exclusive and u is not None:  # current-token bonus term
+            diag = jnp.einsum("bthk,hk,bthk->bth", qt, u.astype(f32), kt)
+            o_intra = o_intra + diag[..., None] * vt
+        # inter-chunk: contribution of the carried state
+        o_inter = jnp.einsum("bthk,bhkv->bthv", q_in, st)
+        # state update to chunk end
+        k_end = kt * jnp.exp(l_end - lcum)               # decay s -> chunk end
+        st = jnp.exp(l_end[:, 0])[..., None] * st + jnp.einsum(
+            "bshk,bshv->bhkv", k_end, vt)
+        return st, (o_intra + o_inter)
+
+    st, outs = jax.lax.scan(chunk_step, st0, (qc, kc, vc, lwc))
+    out = outs.swapaxes(0, 1).reshape(b, s_p, h, dv)[:, :s].astype(v.dtype)
+    return LinAttnOut(out, st)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def chunked_scalar(q, k, v, log_w, *, chunk: int = 64,
+                   state0: Optional[jax.Array] = None) -> LinAttnOut:
+    """Chunked linear attention for scalar-per-head decay (Mamba2 / SSD).
+
+    q/k: (B,S,H,dk); v: (B,S,H,dv); log_w: (B,S,H) (<= 0, any magnitude).
+    Inclusive form (o_t sees its own k_t v_t).  The intra-chunk decay
+    matrix is exp(segsum) of pairwise differences, always <= 1 — stable.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    pad = -s % chunk
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0)))
+    s_p = s + pad
+    n = s_p // chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(b, n, chunk, h, dk).swapaxes(0, 1)
+    kc = k.reshape(b, n, chunk, h, dk).swapaxes(0, 1)
+    vc = v.reshape(b, n, chunk, h, dv).swapaxes(0, 1)
+    lwc = log_w.reshape(b, n, chunk, h).swapaxes(0, 1)
+    st0 = jnp.zeros((b, h, dk, dv), f32) if state0 is None else state0.astype(f32)
+    ti = jnp.arange(chunk)
+    causal = ti[:, None] >= ti[None, :]
+
+    def chunk_step(st, inp):
+        qt, kt, vt, lw = (x.astype(f32) for x in inp)
+        lcum = jnp.cumsum(lw, axis=1)                     # (B,T,H) inclusive
+        l_end = lcum[:, -1, :]                            # (B,H)
+        # decay matrix L[t,s] = exp(L_t - L_s), t >= s — differences first
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,T,S,H)
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], diff, -jnp.inf))
+        qk = jnp.einsum("bthk,bshk->bhts", qt, kt)
+        o_intra = jnp.einsum("bhts,btsh,bshv->bthv",
+                             qk, decay, vt)
+        o_inter = jnp.einsum("bthk,bth,bhkv->bthv", qt, jnp.exp(lcum), st)
+        k_end = kt * jnp.exp(l_end[:, None, :] - lcum)[..., None]
+        st = jnp.exp(l_end)[..., None, None] * st + jnp.einsum(
+            "bshk,bshv->bhkv", k_end, vt)
+        return st, (o_intra + o_inter)
+
+    st, outs = jax.lax.scan(chunk_step, st0, (qc, kc, vc, lwc))
+    out = outs.swapaxes(0, 1).reshape(b, s_p, h, dv)[:, :s].astype(v.dtype)
+    return LinAttnOut(out, st)

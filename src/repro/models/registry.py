@@ -1,0 +1,117 @@
+"""Model registry: ArchConfig -> a uniform Model object.
+
+``Model`` bundles the five things every launcher/test/benchmark needs:
+parameter specs (real init / abstract / logical axes), the three step
+functions (loss, prefill, decode), cache structure, and
+``input_specs``/``make_inputs`` for every assigned input shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from . import encdec, transformer
+from .common import abstract_tree, init_tree, logical_axes_tree, param_count
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    specs: Any
+
+    # ---- params ----
+    def init_params(self, rng: jax.Array, dtype=jnp.float32):
+        return init_tree(rng, self.specs, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return abstract_tree(self.specs, dtype)
+
+    def logical_axes(self):
+        return logical_axes_tree(self.specs)
+
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+    # ---- step functions ----
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.loss_fn(params, batch, self.cfg)
+        return transformer.loss_fn(params, batch, self.cfg)
+
+    def prefill(self, params, batch, max_seq: int, cache_dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return encdec.prefill(params, batch, self.cfg, max_seq, cache_dtype)
+        return transformer.prefill(params, batch, self.cfg, max_seq, cache_dtype)
+
+    def decode(self, params, cache, batch):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(params, cache, batch, self.cfg)
+        return transformer.decode_step(params, cache, batch, self.cfg)
+
+    def cache_structure(self, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                        abstract: bool = True):
+        if self.cfg.family == "encdec":
+            return encdec.cache_structure(self.cfg, batch, max_seq, dtype, abstract)
+        return transformer.cache_structure(self.cfg, batch, max_seq, dtype, abstract)
+
+    # ---- inputs ----
+    def input_specs(self, shape: ShapeConfig, act_dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        if shape.phase == "train":
+            batch = {"tokens": sds((b, s), jnp.int32), "labels": sds((b, s), jnp.int32)}
+        elif shape.phase == "prefill":
+            batch = {"tokens": sds((b, s), jnp.int32)}
+        else:  # decode: one new token; the `s`-long context lives in the cache
+            batch = {"tokens": sds((b, 1), jnp.int32), "pos": sds((), jnp.int32)}
+        if cfg.family == "vlm" and shape.phase != "decode":
+            batch["vision_embeds"] = sds((b, cfg.n_vision_tokens, cfg.d_model), act_dtype)
+        if cfg.family == "encdec" and shape.phase != "decode":
+            batch["frames"] = sds((b, cfg.enc_frames, cfg.d_model), act_dtype)
+        return batch
+
+    def make_inputs(self, rng: jax.Array, shape: ShapeConfig,
+                    act_dtype=jnp.float32) -> dict:
+        """Real random inputs matching input_specs (smoke tests / examples)."""
+        cfg = self.cfg
+        specs = self.input_specs(shape, act_dtype)
+        out = {}
+        for name, s in specs.items():
+            rng, k = jax.random.split(rng)
+            if name in ("tokens", "labels"):
+                out[name] = jax.random.randint(k, s.shape, 0, min(cfg.vocab, 1000),
+                                               jnp.int32)
+            elif name == "pos":
+                out[name] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+            else:
+                out[name] = 0.02 * jax.random.normal(k, s.shape, act_dtype)
+        return out
+
+    def input_axes(self, shape: ShapeConfig) -> dict:
+        """Logical axes for each input (consumed by the sharding rules)."""
+        cfg = self.cfg
+        if shape.phase == "decode":
+            axes = {"tokens": ("batch", None), "pos": ()}
+        else:
+            axes = {"tokens": ("batch", "seq")}
+            if shape.phase == "train":
+                axes["labels"] = ("batch", "seq")
+        if cfg.family == "vlm" and shape.phase != "decode":
+            axes["vision_embeds"] = ("batch", None, "embed")
+        if cfg.family == "encdec" and shape.phase != "decode":
+            axes["frames"] = ("batch", None, "embed")
+        return axes
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        specs = encdec.build_param_specs(cfg)
+    else:
+        specs = transformer.build_param_specs(cfg)
+    return Model(cfg=cfg, specs=specs)

@@ -1,0 +1,161 @@
+"""RWKV6 ("Finch") block: attention-free time mixing with data-dependent
+decay + squared-ReLU channel mixing.
+
+Time mixing uses the five-way data-dependent token-shift interpolation
+(ddlerp, low-rank) of the RWKV6 paper, per-channel decays
+w_t = exp(-exp(base + lora(x))) and the current-token bonus u; the linear
+recurrence itself runs through models.linear_attn in the exclusive+bonus
+form.  Decode state per layer: two token-shift vectors + the (H, 64, 64)
+wkv state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, layer_norm
+from .linear_attn import chunked, single_step
+
+_MIX = ("w", "k", "v", "r", "g")
+
+
+class RWKVDims(NamedTuple):
+    d_model: int
+    d_ff: int
+    head_dim: int
+    lora_mix: int
+    lora_decay: int
+
+    @staticmethod
+    def make(d_model: int, d_ff: int, head_dim: int = 64, lora_mix: int = 32,
+             lora_decay: int = 64) -> "RWKVDims":
+        return RWKVDims(d_model, d_ff, head_dim, lora_mix, lora_decay)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_time_mix_specs(dims: RWKVDims) -> dict:
+    d = dims.d_model
+    s = {
+        "maa_x": ParamSpec((d,), ("embed",), "zeros"),
+        "maa_w1": ParamSpec((d, 5 * dims.lora_mix), ("embed", None), "scaled"),
+        "maa_w2": ParamSpec((5, dims.lora_mix, d), (None, None, "embed"), "scaled"),
+        "decay_base": ParamSpec((d,), ("embed",), "zeros"),
+        "decay_w1": ParamSpec((d, dims.lora_decay), ("embed", None), "scaled"),
+        "decay_w2": ParamSpec((dims.lora_decay, d), (None, "embed"), "scaled"),
+        "bonus": ParamSpec((dims.n_heads, dims.head_dim), ("heads", "head_dim"), "zeros"),
+        "wr": ParamSpec((d, d), ("embed", "heads_flat"), "scaled"),
+        "wk": ParamSpec((d, d), ("embed", "heads_flat"), "scaled"),
+        "wv": ParamSpec((d, d), ("embed", "heads_flat"), "scaled"),
+        "wg": ParamSpec((d, d), ("embed", "heads_flat"), "scaled"),
+        "wo": ParamSpec((d, d), ("heads_flat", "embed"), "scaled"),
+        "ln_x_g": ParamSpec((d,), ("embed",), "ones"),
+        "ln_x_b": ParamSpec((d,), ("embed",), "zeros"),
+    }
+    for m in _MIX:
+        s[f"maa_{m}"] = ParamSpec((d,), ("embed",), "zeros")
+    return s
+
+
+def rwkv6_channel_mix_specs(dims: RWKVDims) -> dict:
+    d = dims.d_model
+    return {
+        "maa_k": ParamSpec((d,), ("embed",), "zeros"),
+        "maa_r": ParamSpec((d,), ("embed",), "zeros"),
+        "wk": ParamSpec((d, dims.d_ff), ("embed", "mlp"), "scaled"),
+        "wv": ParamSpec((dims.d_ff, d), ("mlp", "embed"), "scaled"),
+        "wr": ParamSpec((d, d), ("embed", "embed2"), "scaled"),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, shifted: jax.Array):
+    """Data-dependent 5-way token-shift interpolation -> (xw, xk, xv, xr, xg)."""
+    dx = shifted - x
+    base = x + dx * p["maa_x"]
+    lora = jnp.tanh(base @ p["maa_w1"])                       # (B,S,5*lm)
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)              # (B,S,5,lm)
+    adj = jnp.einsum("bsfl,fld->bsfd", lora, p["maa_w2"])     # (B,S,5,d)
+    outs = []
+    for i, m in enumerate(_MIX):
+        outs.append(x + dx * (p[f"maa_{m}"] + adj[..., i, :]))
+    return outs
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Per-channel log decay (<= 0): -exp(base + lora(xw))."""
+    lora = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    # faithful RWKV range: w = exp(-exp(d)) with d <= ~1, so per-step
+    # log-decay is >= -e; with chunk=16 the in-chunk span stays < 80.
+    return -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32)
+                             + lora.astype(jnp.float32), -8.0, 1.0))
+
+
+def _shift(x: jax.Array) -> jax.Array:
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+
+
+def time_mix_forward(p: dict, x: jax.Array, dims: RWKVDims, *, chunk: int = 16):
+    b, s, d = x.shape
+    h, hd = dims.n_heads, dims.head_dim
+    xw, xk, xv, xr, xg = _ddlerp(p, x, _shift(x))
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    log_w = _decay(p, xw).reshape(b, s, h, hd)
+    res = chunked(r, k, v, log_w, chunk=chunk, exclusive=True, u=p["bonus"])
+    o = res.out.reshape(b, s, d)
+    o = layer_norm(o, p["ln_x_g"], p["ln_x_b"])  # group-norm equivalent (per-layer)
+    return (o * g) @ p["wo"]
+
+
+def channel_mix_forward(p: dict, x: jax.Array):
+    shifted = _shift(x)
+    xk = x + (shifted - x) * p["maa_k"]
+    xr = x + (shifted - x) * p["maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+def rwkv6_init_state(n_layers: int, batch: int, dims: RWKVDims, dtype=jnp.bfloat16) -> dict:
+    return {
+        "wkv": jnp.zeros((n_layers, batch, dims.n_heads, dims.head_dim, dims.head_dim),
+                         jnp.float32),
+        "shift_tm": jnp.zeros((n_layers, batch, dims.d_model), dtype),
+        "shift_cm": jnp.zeros((n_layers, batch, dims.d_model), dtype),
+    }
+
+
+def rwkv6_state_axes() -> dict:
+    return {"wkv": ("layers", "batch", "heads", None, None),
+            "shift_tm": ("layers", "batch", "embed"),
+            "shift_cm": ("layers", "batch", "embed")}
+
+
+def time_mix_decode(p: dict, x: jax.Array, wkv_state: jax.Array, shift: jax.Array,
+                    dims: RWKVDims):
+    """x: (B,1,d); shift: (B,d) previous token's input; wkv_state fp32."""
+    b, _, d = x.shape
+    h, hd = dims.n_heads, dims.head_dim
+    xw, xk, xv, xr, xg = _ddlerp(p, x, shift[:, None, :])
+    r = (xr @ p["wr"]).reshape(b, h, hd)
+    k = (xk @ p["wk"]).reshape(b, h, hd)
+    v = (xv @ p["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    log_w = _decay(p, xw).reshape(b, h, hd)
+    st, o = single_step(wkv_state, r, k, v, log_w, exclusive=True, u=p["bonus"])
+    o = layer_norm(o.reshape(b, d), p["ln_x_g"], p["ln_x_b"])
+    out = ((o * g) @ p["wo"])[:, None, :]
+    return out, st, x[:, 0, :]
+
+
+def channel_mix_decode(p: dict, x: jax.Array, shift: jax.Array):
+    dx = shift[:, None, :] - x
+    xk = x + dx * p["maa_k"]
+    xr = x + dx * p["maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, 0, :]

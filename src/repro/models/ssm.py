@@ -1,0 +1,135 @@
+"""Mamba2 (SSD) block — the state-space half of zamba2.
+
+Faithful structure: fused in_proj -> [z | xBC | dt], causal depthwise
+conv1d over xBC, SSD linear recurrence with per-head scalar decay
+exp(dt*A), D skip connection, gated RMSNorm, out_proj.  The recurrence
+runs through models.linear_attn.chunked (train/prefill) or single_step
+(decode), with q=C, k=B, v=dt*x, log_w=dt*A broadcast over the state dim.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rms_norm
+from .linear_attn import chunked_scalar, single_step
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    d_state: int
+    head_dim: int
+    n_heads: int
+    conv_w: int
+
+    @staticmethod
+    def make(d_model: int, d_state: int = 64, expand: int = 2, head_dim: int = 64,
+             conv_w: int = 4) -> "SSMDims":
+        d_inner = expand * d_model
+        return SSMDims(d_model, d_inner, d_state, head_dim, d_inner // head_dim, conv_w)
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state  # xBC (n_groups = 1)
+
+    @property
+    def in_dim(self) -> int:
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads  # z|xBC|dt
+
+
+def mamba2_specs(dims: SSMDims) -> dict:
+    return {
+        "in_proj": ParamSpec((dims.d_model, dims.in_dim), ("embed", "mlp"), "scaled"),
+        "conv_w": ParamSpec((dims.conv_w, dims.conv_dim), (None, "mlp"), "scaled"),
+        "conv_b": ParamSpec((dims.conv_dim,), ("mlp",), "zeros"),
+        "a_log": ParamSpec((dims.n_heads,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((dims.n_heads,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((dims.n_heads,), ("heads",), "zeros"),
+        "norm": ParamSpec((dims.d_inner,), ("mlp",), "zeros"),
+        "out_proj": ParamSpec((dims.d_inner, dims.d_model), ("mlp", "embed"), "scaled"),
+    }
+
+
+def _split_proj(p, x, dims: SSMDims):
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., : dims.d_inner]
+    xbc = zxbcdt[..., dims.d_inner: dims.d_inner + dims.conv_dim]
+    dt = zxbcdt[..., dims.d_inner + dims.conv_dim:]
+    return z, xbc, dt
+
+
+def _ssd_core(p, z, x_in, b_in, c_in, dt, dims: SSMDims, state0=None, chunk=64):
+    """Shared SSD math after the conv. Shapes: x_in (B,S,d_inner); b/c (B,S,state)."""
+    bsz, s, _ = x_in.shape
+    h, hd, ds = dims.n_heads, dims.head_dim, dims.d_state
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (H,) negative
+    log_w = dt * a                                           # (B,S,H) scalar/head
+    xh = x_in.reshape(bsz, s, h, hd)
+    v = xh * dt[..., None].astype(xh.dtype)                  # fold dt into v
+    k = jnp.broadcast_to(b_in[:, :, None, :], (bsz, s, h, ds))  # group-shared B
+    q = jnp.broadcast_to(c_in[:, :, None, :], (bsz, s, h, ds))
+    res = chunked_scalar(q, k, v, log_w, chunk=chunk, state0=state0)
+    o = res.out + p["d_skip"].astype(xh.dtype)[None, None, :, None] * xh
+    o = o.reshape(bsz, s, dims.d_inner)
+    o = rms_norm(o * jax.nn.silu(z), p["norm"])
+    return o @ p["out_proj"], res.state
+
+
+def mamba2_forward(p: dict, x: jax.Array, dims: SSMDims, *, chunk: int = 64) -> jax.Array:
+    """Full-sequence forward. x: (B, S, d_model)."""
+    z, xbc, dt = _split_proj(p, x, dims)
+    # causal depthwise conv1d, window conv_w
+    pad = dims.conv_w - 1
+    xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xbc_p[:, i: i + x.shape[1], :] * p["conv_w"][i][None, None, :]
+               for i in range(dims.conv_w))
+    xbc = jax.nn.silu(conv + p["conv_b"])
+    x_in = xbc[..., : dims.d_inner]
+    b_in = xbc[..., dims.d_inner: dims.d_inner + dims.d_state]
+    c_in = xbc[..., dims.d_inner + dims.d_state:]
+    out, _ = _ssd_core(p, z, x_in, b_in, c_in, dt, dims, chunk=chunk)
+    return out
+
+
+def mamba2_init_state(n_layers: int, batch: int, dims: SSMDims, dtype=jnp.float32) -> dict:
+    return {
+        "ssm": jnp.zeros((n_layers, batch, dims.n_heads, dims.d_state, dims.head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, dims.conv_w - 1, dims.conv_dim), dtype),
+    }
+
+
+def mamba2_state_axes() -> dict:
+    return {"ssm": ("layers", "batch", "heads", None, None),
+            "conv": ("layers", "batch", None, "mlp")}
+
+
+def mamba2_decode(p: dict, x: jax.Array, layer_state: dict, dims: SSMDims):
+    """One-token step. x: (B, 1, d_model); layer_state: {ssm, conv} (unstacked)."""
+    bsz = x.shape[0]
+    z, xbc, dt = _split_proj(p, x, dims)                     # (B,1,*)
+    hist = jnp.concatenate([layer_state["conv"], xbc], axis=1)  # (B, conv_w, conv_dim)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv)[:, None, :]
+    new_conv = hist[:, 1:, :]
+    x_in = xbc_t[..., : dims.d_inner]
+    b_in = xbc_t[..., dims.d_inner: dims.d_inner + dims.d_state]
+    c_in = xbc_t[..., dims.d_inner + dims.d_state:]
+
+    h, hd, ds = dims.n_heads, dims.head_dim, dims.d_state
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    log_w = jnp.broadcast_to((dtv * a)[..., None], (bsz, h, ds))
+    xh = x_in[:, 0].reshape(bsz, h, hd)
+    v_t = xh * dtv[..., None].astype(xh.dtype)
+    k_t = jnp.broadcast_to(b_in[:, 0, None, :], (bsz, h, ds))
+    q_t = jnp.broadcast_to(c_in[:, 0, None, :], (bsz, h, ds))
+    st, o = single_step(layer_state["ssm"], q_t, k_t, v_t, log_w)
+    o = o + p["d_skip"].astype(xh.dtype)[None, :, None] * xh
+    o = o.reshape(bsz, 1, dims.d_inner)
+    o = rms_norm(o * jax.nn.silu(z), p["norm"])
+    return o @ p["out_proj"], {"ssm": st, "conv": new_conv}

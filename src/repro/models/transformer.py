@@ -1,0 +1,581 @@
+"""Generic decoder assembly for all decoder-only assigned architectures.
+
+A config is compiled into a **layer plan**: a short list of *groups*, each
+a repeating unit of layer descriptors scanned ``reps`` times with stacked
+parameters (lax.scan keeps HLO size O(unique layers), which is what makes
+the 88-layer / 512-device dry-runs compile).  The plan covers:
+
+* dense GQA/MQA decoders (stablelm, granite, phi3)
+* 5:1 local:global sliding-window patterns (gemma3)
+* interleaved / leading-dense MoE (llama4-maverick, deepseek-v2)
+* MLA attention (deepseek-v2)
+* Mamba2 stacks with a weight-shared attention block every N layers
+  (zamba2) — shared weights, per-application KV caches
+* RWKV6 (attention-free)
+* M-RoPE + stub vision frontend (qwen2-vl)
+
+Three entry points per model: ``loss`` (train), ``prefill`` (full seq ->
+cache + last logits), ``decode_step`` (one token against the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from . import ffn as ffn_lib
+from . import rwkv as rwkv_lib
+from . import ssm as ssm_lib
+from .common import ParamSpec, chunked_softmax_ce, rms_norm, stack_specs
+from .linear_attn import single_step  # noqa: F401  (re-export convenience)
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    kind: str                      # attn | mamba | rwkv
+    window: Optional[int] = None   # sliding window (attn)
+    ffn: str = "mlp"               # mlp | moe | none
+    d_ff: Optional[int] = None
+    shared: bool = False           # params come from the shared block (zamba)
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    descs: tuple
+    reps: int
+
+
+def build_plan(cfg: ArchConfig) -> list[Group]:
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        if cfg.global_every:
+            loc = LayerDesc("attn", window=cfg.sliding_window)
+            glb = LayerDesc("attn")
+            unit = (loc,) * (cfg.global_every - 1) + (glb,)
+            reps, rem = divmod(cfg.n_layers, cfg.global_every)
+            groups = [Group(unit, reps)]
+            if rem:
+                groups.append(Group((loc,) * rem, 1))
+            return groups
+        return [Group((LayerDesc("attn"),), cfg.n_layers)]
+    if f == "moe":
+        groups = []
+        if cfg.n_dense_layers:
+            groups.append(Group((LayerDesc("attn", d_ff=cfg.dense_d_ff or cfg.d_ff),),
+                                cfg.n_dense_layers))
+        n_rest = cfg.n_layers - cfg.n_dense_layers
+        if cfg.moe_every == 1:
+            groups.append(Group((LayerDesc("attn", ffn="moe"),), n_rest))
+        else:
+            unit = tuple(
+                LayerDesc("attn", ffn="moe") if j == cfg.moe_every - 1
+                else LayerDesc("attn", d_ff=cfg.dense_d_ff or cfg.d_ff)
+                for j in range(cfg.moe_every))
+            reps, rem = divmod(n_rest, cfg.moe_every)
+            groups.append(Group(unit, reps))
+            if rem:
+                groups.append(Group(
+                    (LayerDesc("attn", d_ff=cfg.dense_d_ff or cfg.d_ff),) * rem, 1))
+        return groups
+    if f == "rwkv":
+        return [Group((LayerDesc("rwkv", ffn="none"),), cfg.n_layers)]
+    if f == "hybrid":
+        m = LayerDesc("mamba", ffn="none")
+        s = LayerDesc("attn", shared=True)
+        n = cfg.shared_attn_every
+        reps, rem = divmod(cfg.n_layers, n)
+        groups = [Group((m,) * n + (s,), reps)]
+        if rem:
+            groups.append(Group((m,) * rem, 1))
+        return groups
+    raise ValueError(f"unknown family {f}")
+
+
+# ---------------------------------------------------------------------------
+# Per-desc specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ArchConfig) -> dict:
+    if cfg.use_mla:
+        return attn.mla_specs(cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora,
+                              kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope,
+                              qk_rope=cfg.qk_rope, v_dim=cfg.v_head_dim)
+    return attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.use_qk_norm)
+
+
+def desc_specs(desc: LayerDesc, cfg: ArchConfig) -> dict:
+    if desc.kind == "rwkv":
+        dims = rwkv_lib.RWKVDims.make(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim)
+        return {"ln1": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+                "tm": rwkv_lib.rwkv6_time_mix_specs(dims),
+                "ln2": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+                "cm": rwkv_lib.rwkv6_channel_mix_specs(dims)}
+    if desc.kind == "mamba":
+        dims = ssm_lib.SSMDims.make(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                                    cfg.ssm_head_dim, cfg.ssm_conv)
+        return {"ln": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+                "mamba": ssm_lib.mamba2_specs(dims)}
+    s = {"ln1": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+         "attn": _attn_specs(cfg),
+         "ln2": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    if desc.ffn == "moe":
+        s["ffn"] = ffn_lib.moe_specs(cfg.d_model, cfg.d_ff_expert or cfg.d_ff,
+                                     cfg.n_experts, cfg.n_shared_experts)
+    elif desc.ffn == "mlp":
+        s["ffn"] = ffn_lib.mlp_specs(cfg.d_model, desc.d_ff or cfg.d_ff,
+                                     gated=cfg.gated_mlp)
+    return s
+
+
+def build_param_specs(cfg: ArchConfig) -> dict:
+    plan = build_plan(cfg)
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed")),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"), "scaled")
+    groups = []
+    for g in plan:
+        per_desc = tuple(
+            {} if d.shared else
+            (desc_specs(d, cfg) if g.reps == 1 else stack_specs(desc_specs(d, cfg), g.reps))
+            for d in g.descs)
+        groups.append(per_desc)
+    specs["groups"] = groups
+    if any(d.shared for g in plan for d in g.descs):
+        shared = desc_specs(LayerDesc("attn", d_ff=cfg.d_ff), cfg)
+        specs["shared_attn"] = shared
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Context & positions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ArchConfig
+    positions: jax.Array                    # (B, S)
+    mrope_positions: Optional[jax.Array] = None   # (3, B, S)
+    phase: str = "train"
+
+
+def _mrope_ids(cfg: ArchConfig, batch: int, n_vis: int, s_text: int) -> jax.Array:
+    g = cfg.vision_grid
+    vi = jnp.arange(n_vis)
+    vis = jnp.stack([jnp.zeros_like(vi), vi // g, vi % g])           # (3, Nv)
+    start = (n_vis + g - 1) // g + 1
+    ti = start + jnp.arange(s_text)
+    txt = jnp.stack([ti, ti, ti])                                    # (3, St)
+    ids = jnp.concatenate([vis, txt], axis=1)                        # (3, S)
+    return jnp.broadcast_to(ids[:, None, :], (3, batch, n_vis + s_text))
+
+
+# ---------------------------------------------------------------------------
+# Layer application — full sequence (train / prefill without cache)
+# ---------------------------------------------------------------------------
+
+
+def apply_layer(desc: LayerDesc, p: dict, x: jax.Array, ctx: Ctx) -> tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    if desc.kind == "rwkv":
+        dims = rwkv_lib.RWKVDims.make(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim)
+        x = x + rwkv_lib.time_mix_forward(p["tm"], rms_norm(x, p["ln1"]), dims)
+        x = x + rwkv_lib.channel_mix_forward(p["cm"], rms_norm(x, p["ln2"]))
+        return x, aux
+    if desc.kind == "mamba":
+        dims = ssm_lib.SSMDims.make(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                                    cfg.ssm_head_dim, cfg.ssm_conv)
+        x = x + ssm_lib.mamba2_forward(p["mamba"], rms_norm(x, p["ln"]), dims)
+        return x, aux
+    h = rms_norm(x, p["ln1"])
+    if cfg.use_mla:
+        a = attn.mla_forward(p["attn"], h, positions=ctx.positions,
+                             rope_theta=cfg.rope_theta, qk_nope=cfg.qk_nope,
+                             qk_rope=cfg.qk_rope)
+    else:
+        a = attn.gqa_forward(p["attn"], h, positions=ctx.positions,
+                             rope_theta=cfg.rope_theta, window=desc.window,
+                             mrope_sections=cfg.mrope_sections,
+                             mrope_positions=ctx.mrope_positions)
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    if desc.ffn == "moe":
+        out, aux = _moe(p["ffn"], h, cfg)
+        x = x + out
+    elif desc.ffn == "mlp":
+        x = x + ffn_lib.mlp_forward(p["ffn"], h)
+    return x, aux
+
+
+def _moe(pf, h, cfg):
+    if cfg.moe_impl == "sharded":
+        return ffn_lib.moe_forward_sharded(
+            pf, h, top_k=cfg.top_k, n_experts=cfg.n_experts,
+            capacity_factor=cfg.capacity_factor,
+            router_softmax=cfg.router_softmax)
+    return ffn_lib.moe_forward(pf, h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               router_softmax=cfg.router_softmax)
+
+
+def forward(params: dict, x: jax.Array, cfg: ArchConfig, ctx: Ctx) -> tuple[jax.Array, jax.Array]:
+    """Run all groups; returns (hidden (B,S,D), total aux loss)."""
+    from repro.sharding.specs import constrain
+    x = constrain(x, ("batch", "seq", None))
+    plan = build_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, g in enumerate(plan):
+        gp = params["groups"][gi]
+        if g.reps == 1:
+            for di, d in enumerate(g.descs):
+                p = params["shared_attn"] if d.shared else gp[di]
+                x, aux = apply_layer(d, p, x, ctx)
+                aux_total = aux_total + aux
+        else:
+            def body(carry, xs):
+                xc, auxc = carry
+                for di, d in enumerate(g.descs):
+                    p = params["shared_attn"] if d.shared else xs[di]
+                    xc, aux = apply_layer(d, p, xc, ctx)
+                    auxc = auxc + aux
+                from repro.sharding.specs import constrain as _c
+                xc = _c(xc, ("batch", "seq", None))
+                return (xc, auxc), ()
+
+            if cfg.remat and ctx.phase == "train":
+                body = jax.checkpoint(body)
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), gp)
+    return rms_norm(x, params["final_norm"]), aux_total
+
+
+def logits_of(params: dict, hidden: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"].T
+    return hidden @ params["lm_head"]
+
+
+def embed_tokens(params: dict, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.tie_embeddings:  # gemma-style embedding scaling
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill / decode entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mrope = None
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        mrope = _mrope_ids(cfg, b, vis.shape[1], s)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                     (b, x.shape[1]))
+    ctx = Ctx(cfg, positions, mrope, phase="train")
+    hidden, aux = forward(params, x, cfg, ctx)
+    if cfg.family == "vlm":
+        hidden = hidden[:, -s:, :]
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # positions 0..S-2 predict labels 1..S-1; chunked CE never materializes
+    # the full (B, S, V) logits (see models/common.py)
+    ce = chunked_softmax_ce(hidden[:, :-1], w_out, jnp.maximum(labels[:, 1:], 0),
+                            mask[:, 1:])
+    total = ce + cfg.aux_loss_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def _desc_cache_layout(desc: LayerDesc, cfg: ArchConfig, batch: int, max_seq: int,
+                       dtype=jnp.bfloat16) -> dict:
+    """name -> (shape-without-reps, logical axes, dtype)."""
+    if desc.kind == "rwkv":
+        dims = rwkv_lib.RWKVDims.make(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim)
+        return {
+            "wkv": ((batch, dims.n_heads, dims.head_dim, dims.head_dim),
+                    ("batch", "heads", None, None), jnp.float32),
+            "shift_tm": ((batch, cfg.d_model), ("batch", "embed"), dtype),
+            "shift_cm": ((batch, cfg.d_model), ("batch", "embed"), dtype),
+        }
+    if desc.kind == "mamba":
+        dims = ssm_lib.SSMDims.make(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                                    cfg.ssm_head_dim, cfg.ssm_conv)
+        return {
+            "ssm": ((batch, dims.n_heads, dims.d_state, dims.head_dim),
+                    ("batch", "heads", None, None), jnp.float32),
+            "conv": ((batch, dims.conv_w - 1, dims.conv_dim),
+                     ("batch", None, "mlp"), dtype),
+        }
+    if cfg.use_mla:
+        return {
+            "c_kv": ((batch, max_seq, cfg.kv_lora),
+                     ("batch", "cache_seq", "kv_lora"), dtype),
+            "k_rope": ((batch, max_seq, cfg.qk_rope),
+                       ("batch", "cache_seq", None), dtype),
+        }
+    slots = min(desc.window, max_seq) if desc.window else max_seq
+    lay = {
+        "k": ((batch, slots, cfg.n_kv_heads, cfg.head_dim),
+              ("batch", "cache_seq", "kv_heads", "head_dim"), dtype),
+        "v": ((batch, slots, cfg.n_kv_heads, cfg.head_dim),
+              ("batch", "cache_seq", "kv_heads", "head_dim"), dtype),
+    }
+    if desc.window:
+        lay["slot_pos"] = ((slots,), ("cache_seq",), jnp.int32)
+    return lay
+
+
+def cache_structure(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                    abstract: bool = True):
+    """Returns (cache pytree, logical-axes pytree) for the whole model."""
+    plan = build_plan(cfg)
+    caches, axes = [], []
+    for g in plan:
+        g_cache, g_axes = [], []
+        for d in g.descs:
+            layout = _desc_cache_layout(d, cfg, batch, max_seq, dtype)
+            c, a = {}, {}
+            for name, (shape, ax, dt) in layout.items():
+                full = (g.reps,) + shape if g.reps > 1 else shape
+                full_ax = (("layers",) + ax) if g.reps > 1 else ax
+                c[name] = (jax.ShapeDtypeStruct(full, dt) if abstract
+                           else jnp.zeros(full, dt))
+                a[name] = full_ax
+            g_cache.append(c)
+            g_axes.append(a)
+        caches.append(tuple(g_cache))
+        axes.append(tuple(g_axes))
+    return {"groups": caches}, {"groups": axes}
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence -> cache) and decode (single token)
+# ---------------------------------------------------------------------------
+
+
+def _fill_layer(desc: LayerDesc, p: dict, x: jax.Array, ctx: Ctx, max_seq: int,
+                cache_dtype=jnp.bfloat16):
+    """Full-seq layer application that also emits this layer's cache."""
+    cfg = ctx.cfg
+    if desc.kind == "rwkv":
+        dims = rwkv_lib.RWKVDims.make(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim)
+        h1 = rms_norm(x, p["ln1"])
+        out, st = _rwkv_tm_prefill(p["tm"], h1, dims)
+        x = x + out
+        h2 = rms_norm(x, p["ln2"])
+        x = x + rwkv_lib.channel_mix_forward(p["cm"], h2)
+        cache = {"wkv": st, "shift_tm": h1[:, -1, :].astype(cache_dtype),
+                 "shift_cm": h2[:, -1, :].astype(cache_dtype)}
+        return x, cache
+    if desc.kind == "mamba":
+        dims = ssm_lib.SSMDims.make(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                                    cfg.ssm_head_dim, cfg.ssm_conv)
+        h = rms_norm(x, p["ln"])
+        out, st = _mamba_prefill(p["mamba"], h, dims, cache_dtype)
+        return x + out, st
+    h = rms_norm(x, p["ln1"])
+    if cfg.use_mla:
+        a, cache = attn.mla_fill_cache(p["attn"], h, positions=ctx.positions,
+                                       rope_theta=cfg.rope_theta, qk_nope=cfg.qk_nope,
+                                       qk_rope=cfg.qk_rope, max_seq=max_seq)
+    else:
+        a, cache = attn.gqa_fill_cache(p["attn"], h, positions=ctx.positions,
+                                       rope_theta=cfg.rope_theta, window=desc.window,
+                                       max_seq=max_seq,
+                                       mrope_sections=cfg.mrope_sections,
+                                       mrope_positions=ctx.mrope_positions)
+    cache = jax.tree.map(lambda t: t.astype(cache_dtype)
+                         if t.dtype != jnp.int32 else t, cache)
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    if desc.ffn == "moe":
+        out, _ = _moe(p["ffn"], h, cfg)
+        x = x + out
+    elif desc.ffn == "mlp":
+        x = x + ffn_lib.mlp_forward(p["ffn"], h)
+    return x, cache
+
+
+def _rwkv_tm_prefill(p, xn, dims):
+    b, s, d = xn.shape
+    h, hd = dims.n_heads, dims.head_dim
+    xw, xk, xv, xr, xg = rwkv_lib._ddlerp(p, xn, rwkv_lib._shift(xn))
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    log_w = rwkv_lib._decay(p, xw).reshape(b, s, h, hd)
+    res = rwkv_lib.chunked(r, k, v, log_w, chunk=16, exclusive=True, u=p["bonus"])
+    o = rwkv_lib.layer_norm(res.out.reshape(b, s, d), p["ln_x_g"], p["ln_x_b"])
+    return (o * g) @ p["wo"], res.state
+
+
+def _mamba_prefill(p, xn, dims, cache_dtype):
+    b, s, _ = xn.shape
+    z, xbc, dt = ssm_lib._split_proj(p, xn, dims)
+    pad = dims.conv_w - 1
+    xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(xbc_p[:, i: i + s, :] * p["conv_w"][i][None, None, :]
+               for i in range(dims.conv_w))
+    xbc_act = jax.nn.silu(conv + p["conv_b"])
+    x_in = xbc_act[..., : dims.d_inner]
+    b_in = xbc_act[..., dims.d_inner: dims.d_inner + dims.d_state]
+    c_in = xbc_act[..., dims.d_inner + dims.d_state:]
+    out, st = ssm_lib._ssd_core(p, z, x_in, b_in, c_in, dt, dims)
+    conv_state = xbc[:, -(dims.conv_w - 1):, :].astype(cache_dtype)
+    return out, {"ssm": st, "conv": conv_state}
+
+
+def _decode_layer(desc: LayerDesc, p: dict, c: dict, x: jax.Array, pos: jax.Array,
+                  ctx: Ctx):
+    cfg = ctx.cfg
+    if desc.kind == "rwkv":
+        dims = rwkv_lib.RWKVDims.make(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim)
+        h1 = rms_norm(x, p["ln1"])
+        out, wkv, sh_tm = rwkv_lib.time_mix_decode(
+            p["tm"], h1, c["wkv"], c["shift_tm"].astype(h1.dtype), dims)
+        x = x + out
+        h2 = rms_norm(x, p["ln2"])
+        out2, sh_cm = rwkv_lib.channel_mix_decode(p["cm"], h2,
+                                                  c["shift_cm"].astype(h2.dtype))
+        x = x + out2
+        return x, {"wkv": wkv, "shift_tm": sh_tm.astype(c["shift_tm"].dtype),
+                   "shift_cm": sh_cm.astype(c["shift_cm"].dtype)}
+    if desc.kind == "mamba":
+        dims = ssm_lib.SSMDims.make(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                                    cfg.ssm_head_dim, cfg.ssm_conv)
+        h = rms_norm(x, p["ln"])
+        out, st = ssm_lib.mamba2_decode(
+            p["mamba"], h, {"ssm": c["ssm"], "conv": c["conv"].astype(h.dtype)}, dims)
+        return x + out, {"ssm": st["ssm"], "conv": st["conv"].astype(c["conv"].dtype)}
+    h = rms_norm(x, p["ln1"])
+    if cfg.use_mla:
+        a, cache = attn.mla_decode(p["attn"], h, c, pos, rope_theta=cfg.rope_theta,
+                                   qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], h, c, pos, rope_theta=cfg.rope_theta,
+                                   window=desc.window,
+                                   mrope_sections=cfg.mrope_sections,
+                                   mrope_positions=ctx.mrope_positions)
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    if desc.ffn == "moe":
+        out, _ = _moe(p["ffn"], h, cfg)
+        x = x + out
+    elif desc.ffn == "mlp":
+        x = x + ffn_lib.mlp_forward(p["ffn"], h)
+    return x, cache
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig, max_seq: int,
+            cache_dtype=jnp.bfloat16):
+    """Full-sequence forward emitting the KV/state cache.
+
+    Returns (last-token logits (B, V), cache pytree).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    mrope = None
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        mrope = _mrope_ids(cfg, b, vis.shape[1], s)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 (b, x.shape[1]))
+    ctx = Ctx(cfg, positions, mrope, phase="prefill")
+    plan = build_plan(cfg)
+    caches = []
+    for gi, g in enumerate(plan):
+        gp = params["groups"][gi]
+        if g.reps == 1:
+            g_cache = []
+            for di, d in enumerate(g.descs):
+                p = params["shared_attn"] if d.shared else gp[di]
+                x, cache = _fill_layer(d, p, x, ctx, max_seq, cache_dtype)
+                g_cache.append(cache)
+            caches.append(tuple(g_cache))
+        else:
+            def body(xc, xs):
+                new_caches = []
+                for di, d in enumerate(g.descs):
+                    p = params["shared_attn"] if d.shared else xs[di]
+                    xc, cache = _fill_layer(d, p, xc, ctx, max_seq, cache_dtype)
+                    new_caches.append(cache)
+                return xc, tuple(new_caches)
+
+            x, g_cache = jax.lax.scan(body, x, gp)
+            caches.append(g_cache)
+    hidden = rms_norm(x, params["final_norm"])
+    logits = logits_of(params, hidden[:, -1:, :], cfg)[:, 0, :]
+    return logits, {"groups": caches}
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig):
+    """One decode step. batch: {"tokens": (B,1), "pos": ()} -> (logits, cache)."""
+    tokens = batch["tokens"]
+    pos = batch["pos"]
+    b = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    mrope = None
+    if cfg.family == "vlm":
+        # `pos` counts concat-space slots; map the text index into mrope space
+        start = (cfg.n_vision_tokens + cfg.vision_grid - 1) // cfg.vision_grid + 1
+        mp = jnp.broadcast_to(pos - cfg.n_vision_tokens + start, (b, 1)).astype(jnp.int32)
+        mrope = jnp.stack([mp, mp, mp])
+    ctx = Ctx(cfg, positions, mrope, phase="decode")
+    plan = build_plan(cfg)
+    new_caches = []
+    for gi, g in enumerate(plan):
+        gp = params["groups"][gi]
+        gc = cache["groups"][gi]
+        if g.reps == 1:
+            g_new = []
+            for di, d in enumerate(g.descs):
+                p = params["shared_attn"] if d.shared else gp[di]
+                x, nc = _decode_layer(d, p, gc[di], x, pos, ctx)
+                g_new.append(nc)
+            new_caches.append(tuple(g_new))
+        else:
+            def body(xc, xs):
+                layer_params, layer_cache = xs
+                new_c = []
+                for di, d in enumerate(g.descs):
+                    p = params["shared_attn"] if d.shared else layer_params[di]
+                    xc, nc = _decode_layer(d, p, layer_cache[di], xc, pos, ctx)
+                    new_c.append(nc)
+                return xc, tuple(new_c)
+
+            x, g_new = jax.lax.scan(body, x, (gp, gc))
+            new_caches.append(g_new)
+    hidden = rms_norm(x, params["final_norm"])
+    logits = logits_of(params, hidden, cfg)[:, 0, :]
+    return logits, {"groups": new_caches}

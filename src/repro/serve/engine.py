@@ -1,0 +1,65 @@
+"""Batched serving engine: prefill + decode over any registry model.
+
+Static-batch continuous decoding: requests are padded to a common prompt
+length, prefilled once, then decoded step-by-step with per-request EOS
+masking; finished slots stop contributing (their tokens are frozen).
+Greedy or temperature sampling.  The decode step is jit-compiled once and
+reused for every step — the production decode loop is exactly this plus
+slot refill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: Optional[int] = None
+
+
+class Engine:
+    def __init__(self, model, params, max_seq: int, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.cfg = cfg
+        self._decode = jax.jit(model.decode)
+
+    def generate(self, prompts: jax.Array, rng: jax.Array, extra: Optional[dict] = None,
+                 n_new: Optional[int] = None) -> jax.Array:
+        """prompts: (B, S_prompt) int32 -> (B, S_prompt + n_new) tokens."""
+        b, s = prompts.shape
+        n_new = n_new or self.cfg.max_new_tokens
+        assert s + n_new <= self.max_seq
+        batch = {"tokens": prompts, **(extra or {})}
+        logits, cache = self.model.prefill(self.params, batch, max_seq=self.max_seq)
+        out = prompts
+        done = jnp.zeros((b,), bool)
+        tok = self._sample(logits, rng)
+        for i in range(n_new):
+            tok = jnp.where(done, jnp.zeros_like(tok), tok)
+            out = jnp.concatenate([out, tok[:, None]], axis=1)
+            if self.cfg.eos_id is not None:
+                done = done | (tok == self.cfg.eos_id)
+            if i == n_new - 1:
+                break
+            pos = jnp.asarray(s + i, jnp.int32)
+            if self.model.cfg.family == "vlm":
+                pos = pos + self.model.cfg.n_vision_tokens
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok[:, None], "pos": pos})
+            rng, k = jax.random.split(rng)
+            tok = self._sample(logits, k)
+        return out
+
+    def _sample(self, logits: jax.Array, rng: jax.Array) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(rng, logits / self.cfg.temperature).astype(jnp.int32)

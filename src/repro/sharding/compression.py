@@ -1,0 +1,140 @@
+"""Gradient event-compression with error feedback.
+
+This is the paper's core idea applied to the collective layer
+(DESIGN.md Sec. 5): just as the accelerator compresses sparse binary
+activations into fixed-capacity Address-Event Queues so that work scales
+with the active set, gradients are compressed into fixed-capacity
+(index, value) queues — top-k magnitude selection — before the data-
+parallel reduction, cutting all-reduce bytes from O(N) to O(2k).
+
+Error feedback (Stich et al.) accumulates what compression dropped and
+re-injects it next step, which keeps SGD/Adam convergence (tested:
+error-feedback compression at 1% density tracks dense training loss).
+
+``sparse_psum`` runs the compressed reduction inside shard_map: each
+data shard contributes its queue; queues are all-gathered (2k * n_shards
+bytes, still << dense when k << N/n) and scatter-added locally.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+class CompressedGrad(NamedTuple):
+    indices: jax.Array  # (k,) int32 into the flattened tensor
+    values: jax.Array   # (k,)
+    size: int           # original flat size
+
+
+def compress_topk(flat: jax.Array, k: int) -> CompressedGrad:
+    """AEQ for gradients: keep the k largest-magnitude entries."""
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    del vals
+    return CompressedGrad(indices=idx.astype(jnp.int32), values=flat[idx],
+                          size=flat.shape[0])
+
+
+def decompress(c: CompressedGrad) -> jax.Array:
+    return jnp.zeros((c.size,), c.values.dtype).at[c.indices].add(c.values)
+
+
+class EFState(NamedTuple):
+    """Per-leaf error-feedback residual (what compression dropped so far)."""
+    residual: Any
+
+    @staticmethod
+    def init(grads: Any) -> "EFState":
+        return EFState(jax.tree.map(jnp.zeros_like, grads))
+
+
+def compress_with_error_feedback(grads: Any, ef: EFState, density: float):
+    """tree of grads -> (tree of CompressedGrad, new EFState).
+
+    compensated = grad + residual; transmitted = topk(compensated);
+    new residual = compensated - decompress(transmitted).
+    """
+    def one(g, r):
+        flat = g.reshape(-1).astype(jnp.float32) + r.reshape(-1).astype(jnp.float32)
+        k = max(1, int(flat.shape[0] * density))
+        c = compress_topk(flat, k)
+        new_r = (flat - decompress(c)).reshape(g.shape).astype(r.dtype)
+        return c, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(ef.residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_ef = EFState(jax.tree.unflatten(treedef, [p[1] for p in pairs]))
+    return comp, new_ef
+
+
+def sparse_psum(c: CompressedGrad, mesh: Mesh, axis: str) -> jax.Array:
+    """Compressed data-parallel reduction of ONE tensor's queue.
+
+    Inside shard_map over ``axis``: all-gather the (index, value) queues
+    of every shard (wire = 2k * n vs N for a dense all-reduce) and
+    scatter-add locally.  Returns the dense averaged gradient, replicated.
+    """
+    n = mesh.shape[axis]
+
+    def body(idx, val):
+        all_idx = jax.lax.all_gather(idx, axis)   # (n, k)
+        all_val = jax.lax.all_gather(val, axis)   # (n, k)
+        dense = jnp.zeros((c.size,), val.dtype)
+        dense = dense.at[all_idx.reshape(-1)].add(all_val.reshape(-1))
+        return dense / n
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+        check_vma=False)(c.indices, c.values)
+
+
+def compression_ratio(tree_sizes: Any, density: float) -> float:
+    """Wire-byte ratio dense-allreduce : sparse queues (8 bytes/entry)."""
+    total = sum(jax.tree.leaves(tree_sizes))
+    k = sum(max(1, int(s * density)) for s in jax.tree.leaves(tree_sizes))
+    return (4.0 * total) / (8.0 * k)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized all-reduce (DESIGN.md Sec. 5 trick iii)
+# ---------------------------------------------------------------------------
+
+
+class QuantizedTensor(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # () per-tensor scale
+
+
+def quantize_grad(g: jax.Array, rng: jax.Array) -> QuantizedTensor:
+    """Symmetric int8 quantization with stochastic rounding (unbiased:
+    E[dequant(quant(g))] = g, which is what keeps SGD convergent when the
+    all-reduce payload is quantized 4x)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = amax / 127.0
+    scaled = g.astype(jnp.float32) / scale
+    noise = jax.random.uniform(rng, g.shape) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale)
+
+
+def dequantize_grad(t: QuantizedTensor) -> jax.Array:
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def quantized_pmean(g: jax.Array, rng: jax.Array, axis: str) -> jax.Array:
+    """Data-parallel mean with int8 wire payload (call inside shard_map).
+
+    Each shard quantizes locally; int8 payloads are all-gathered
+    (wire = N/4 of fp32) and dequantized+averaged locally.  Scales ride
+    along (4 bytes per shard per tensor).
+    """
+    t = quantize_grad(g, rng)
+    all_q = jax.lax.all_gather(t.q, axis)          # (n, ...)
+    all_s = jax.lax.all_gather(t.scale, axis)      # (n,)
+    deq = all_q.astype(jnp.float32) * all_s.reshape(-1, *([1] * g.ndim))
+    return deq.mean(axis=0)

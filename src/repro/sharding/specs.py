@@ -1,0 +1,124 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/cache/input leaf carries logical axis names
+("embed", "vocab", "heads", "experts", "batch", "cache_seq", ...).  A rule
+set maps logical names to mesh axes; ``resolve`` turns a logical tuple
+into a PartitionSpec, silently dropping assignments that do not divide
+the dimension or that would reuse a mesh axis twice — so one rule set
+serves every architecture (e.g. "heads -> model" is skipped for gemma3's
+4 heads on a 16-way model axis instead of erroring).
+
+Baseline layout (recorded as such in EXPERIMENTS.md §Perf):
+  * batch/fsdp over ("pod", "data") — DP + ZeRO-3 parameter sharding
+  * vocab/heads/kv_heads/mlp/experts over "model" — tensor/expert parallel
+  * long-context decode (batch=1): KV-cache sequence over "data"
+    (context parallelism) since the batch axis cannot shard.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def default_rules(*, phase: str = "train", long_context: bool = False) -> dict:
+    fsdp = ("pod", "data")  # resolve() drops "pod" when the mesh lacks it
+    rules = {
+        "batch": fsdp,
+        "seq": ("seq",),   # sequence parallelism when the mesh has a seq axis
+        "vocab": ("model",),
+        "embed": fsdp,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "heads_flat": ("model",),
+        "head_dim": (),
+        "mlp": ("model",),
+        "embed2": fsdp,          # rwkv channel-mix receptance (d, d) second dim
+        "expert_mlp": (),
+        "experts": ("model",),
+        "q_lora": (),
+        "kv_lora": (),
+        "layers": (),
+        "cache_seq": (),
+    }
+    if phase == "decode":
+        # serving layout: weights replicated over the data axis (they fit
+        # once the model axis shards them) — no per-step weight all-gather
+        rules["embed"] = ()
+        rules["embed2"] = ()
+    if long_context:
+        # batch=1: shard the KV cache / sequence over "data" instead
+        rules["batch"] = ()
+        rules["cache_seq"] = ("data",)
+        rules["seq"] = ("data",)
+    return rules
+
+
+def resolve(axes: Optional[tuple], shape: tuple, rules: dict, mesh: Mesh) -> PartitionSpec:
+    """Logical axes tuple -> PartitionSpec valid for `shape` on `mesh`."""
+    if axes is None:
+        return PartitionSpec()
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        cand = rules.get(name, ()) if name is not None else ()
+        if isinstance(cand, str):
+            cand = (cand,)
+        picked = []
+        prod = 1
+        for ax in cand:
+            if ax not in mesh.shape or ax in used:
+                continue
+            nxt = prod * mesh.shape[ax]
+            if dim % nxt == 0:
+                picked.append(ax)
+                prod = nxt
+        used.update(picked)
+        if not picked:
+            entries.append(None)
+        elif len(picked) == 1:
+            entries.append(picked[0])
+        else:
+            entries.append(tuple(picked))
+    return PartitionSpec(*entries)
+
+
+def tree_shardings(mesh: Mesh, axes_tree: Any, shape_tree: Any, rules: dict) -> Any:
+    """Build a NamedSharding tree from (logical axes tree, abstract tree)."""
+    def one(axes, arr):
+        return NamedSharding(mesh, resolve(tuple(axes), arr.shape, rules, mesh))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (with_sharding_constraint plumbing)
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation can drop to replicated through scans (observed:
+# the CE loss scan compiled with fully-replicated (B, S, V) logits — 1.1 TB
+# per device on gemma3 train_4k).  Launchers register the mesh + rules here;
+# model code calls ``constrain`` at propagation choke points.  Without a
+# registered mesh (unit tests) it is a no-op.
+
+_CONSTRAINT_MESH: list = [None, None]  # [mesh, rules]
+
+
+def set_constraint_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    _CONSTRAINT_MESH[0] = mesh
+    _CONSTRAINT_MESH[1] = rules
+
+
+def constrain(x, logical_axes: tuple):
+    """Pin a traced activation to the rule-resolved sharding (no-op without
+    a registered mesh)."""
+    mesh, rules = _CONSTRAINT_MESH
+    if mesh is None:
+        return x
+    spec = resolve(logical_axes, x.shape, rules or default_rules(), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

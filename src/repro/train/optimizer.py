@@ -1,0 +1,110 @@
+"""Pytree optimizers (no optax in this environment): AdamW + Adafactor-lite.
+
+Distributed-memory knobs (DESIGN.md Sec. 5):
+* ``moment_dtype`` — keep Adam moments in bf16 to halve optimizer HBM
+  (stochastic-rounding-free variant; fp32 master params stay in `params`);
+* optimizer state inherits the parameters' sharding (ZeRO via the fsdp
+  axis) because the update is elementwise;
+* global-norm clipping is computed in fp32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params: Any, cfg: AdamWConfig) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      mu=jax.tree.map(zeros, params), nu=jax.tree.map(zeros, params))
+
+
+def abstract_state(abstract_params: Any, cfg: AdamWConfig) -> TrainState:
+    """ShapeDtypeStruct TrainState for dry-run lowering."""
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    return TrainState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      params=abstract_params,
+                      mu=jax.tree.map(sds, abstract_params),
+                      nu=jax.tree.map(sds, abstract_params))
+
+
+def state_logical_axes(param_axes: Any) -> TrainState:
+    """Optimizer state shards exactly like the parameters."""
+    return TrainState(step=(), params=param_axes, mu=param_axes, nu=param_axes)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(state: TrainState, grads: Any, cfg: AdamWConfig) -> TrainState:
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g.astype(jnp.float32)).astype(cfg.moment_dtype),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                      + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32))
+                      ).astype(cfg.moment_dtype),
+        state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / b1c
+        vhat = v.astype(jnp.float32) / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    params = jax.tree.map(upd, state.params, mu, nu)
+    return TrainState(step=step, params=params, mu=mu, nu=nu)

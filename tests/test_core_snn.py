@@ -1,0 +1,291 @@
+"""Unit + property tests for the core SNN library (paper mechanisms C1-C9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CSNNConfig, ConvSpec, EventQueue, FCSpec, IFState, QuantSpec,
+    ann_apply, apply_events, apply_events_blocked, build_aeq,
+    calibrate_capacity, column_index, crop_vm, deinterlace, dense_conv,
+    encode_input, init_params, interlace, mttfs_step, mttfs_thresholds,
+    multi_threshold_encode, or_pool, pad_vm, quantize, rotate_kernel,
+    run_conv_layer, run_conv_layer_dense, run_fc_head, saturating_add,
+    scatter_aeq, snn_apply, snn_apply_dense, spike_sparsity, threshold_unit,
+    ttfs_slope_step,
+)
+from repro.core.neuron import if_reset_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- neurons
+class TestNeurons:
+    def test_mttfs_fires_forever_once_crossed(self):
+        """m-TTFS property: after the first spike the neuron spikes every step."""
+        state = IFState.zeros(())
+        spikes = []
+        for cur in [0.4, 0.4, 0.4, -5.0, 0.0]:  # crosses v_t=1.0 at step 3
+            state, s = mttfs_step(state, jnp.asarray(cur), 1.0)
+            spikes.append(bool(s))
+        assert spikes == [False, False, True, True, True]
+
+    def test_if_reset_step(self):
+        v = jnp.asarray(0.0)
+        v, s0 = if_reset_step(v, jnp.asarray(1.5), 1.0)
+        assert not bool(s0) and float(v) == 1.5
+        v, s1 = if_reset_step(v, jnp.asarray(0.0), 1.0)  # fires, resets
+        assert bool(s1) and float(v) == 0.0
+
+    def test_ttfs_slope_single_spike(self):
+        """Standard TTFS neurons spike at most once (Eq. 7)."""
+        mu = jnp.asarray(0.6)
+        v = jnp.asarray(0.0)
+        fired = jnp.asarray(False)
+        count = 0
+        for _ in range(6):
+            mu, v, fired, s = ttfs_slope_step(mu, v, fired, jnp.asarray(0.0), 1.0)
+            count += int(s)
+        assert count == 1
+
+
+# ---------------------------------------------------------------- encoding
+class TestEncoding:
+    def test_monotone_trains(self):
+        """m-TTFS input code: per-pixel spike trains are 0...0 1...1."""
+        img = jnp.linspace(0, 1, 16).reshape(4, 4)
+        spikes = multi_threshold_encode(img, mttfs_thresholds(5), 5)
+        s = np.asarray(spikes, dtype=np.int32)
+        diffs = np.diff(s, axis=0)
+        assert (diffs >= 0).all()  # once spiking, keep spiking
+
+    def test_bright_spikes_earlier(self):
+        img = jnp.asarray([[0.95, 0.30]])
+        spikes = np.asarray(multi_threshold_encode(img, mttfs_thresholds(5), 5))
+        first = lambda tr: int(np.argmax(tr)) if tr.any() else 99
+        assert first(spikes[:, 0, 0]) < first(spikes[:, 0, 1])
+
+    def test_sparsity_metric(self):
+        assert float(spike_sparsity(jnp.zeros((4, 4)))) == 1.0
+        assert float(spike_sparsity(jnp.ones((4, 4)))) == 0.0
+
+
+# ---------------------------------------------------------------- AEQ
+class TestAEQ:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(0)
+        fmap = jnp.asarray(rng.random((13, 9)) < 0.2)
+        q = build_aeq(fmap, capacity=64)
+        assert int(q.count) == int(fmap.sum())
+        back = scatter_aeq(q, fmap.shape)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(fmap))
+
+    def test_interlaced_column_order(self):
+        """Events are emitted column 0..8 (the hazard-free read order)."""
+        rng = np.random.default_rng(1)
+        fmap = jnp.asarray(rng.random((12, 12)) < 0.3)
+        q = build_aeq(fmap, capacity=80)
+        coords = np.asarray(q.coords)[np.asarray(q.valid)]
+        cols = (coords[:, 0] % 3) * 3 + coords[:, 1] % 3
+        assert (np.diff(cols) >= 0).all()
+
+    def test_capacity_drop(self):
+        fmap = jnp.ones((6, 6), bool)
+        q = build_aeq(fmap, capacity=10)
+        assert int(q.valid.sum()) == 10  # overfull queue drops events
+
+    def test_calibrate_capacity(self):
+        cap = calibrate_capacity([10, 20, 30, 100], percentile=100.0, margin=1.0, align=8)
+        assert cap == 104  # 100 -> align 8
+
+    @given(st.integers(2, 30), st.integers(2, 30), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_interlace_roundtrip(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        vm = jnp.asarray(rng.normal(size=(h, w)).astype(np.float32))
+        cols = interlace(vm)
+        assert cols.shape[0] == 9
+        back = deinterlace(cols, (h, w))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(vm))
+
+    @given(st.integers(3, 20), st.integers(3, 20), st.integers(0, 100))
+    @settings(max_examples=20, deadline=None)
+    def test_interlace_window_invariant(self, h, w, seed):
+        """Any 3x3 window touches each of the 9 columns exactly once (Fig. 6)."""
+        rng = np.random.default_rng(seed)
+        i0 = int(rng.integers(0, h - 2))
+        j0 = int(rng.integers(0, w - 2))
+        ii, jj = np.meshgrid(np.arange(i0, i0 + 3), np.arange(j0, j0 + 3), indexing="ij")
+        cols = np.asarray(column_index(jnp.asarray(ii), jnp.asarray(jj)))
+        assert sorted(cols.ravel().tolist()) == list(range(9))
+
+
+# ---------------------------------------------------------------- event conv
+class TestEventConv:
+    def _random_case(self, seed, h, w, density):
+        rng = np.random.default_rng(seed)
+        fmap = jnp.asarray(rng.random((h, w)) < density)
+        kernel = jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))
+        return fmap, kernel
+
+    @given(st.integers(3, 24), st.integers(3, 24), st.floats(0.0, 1.0), st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_bitexact_vs_sliding_window(self, h, w, density, seed):
+        """Core paper property (Fig. 4): event conv == sliding-window conv."""
+        fmap, kernel = self._random_case(seed, h, w, density)
+        q = build_aeq(fmap, capacity=h * w)
+        vm = apply_events(pad_vm(jnp.zeros((h, w), jnp.float32)), q, kernel)
+        got = crop_vm(vm)
+        want = dense_conv(fmap, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_channel_vectorized(self):
+        """(3,3,C_out) kernels update all output channels per event."""
+        fmap, _ = self._random_case(3, 9, 11, 0.3)
+        rng = np.random.default_rng(3)
+        kernel = jnp.asarray(rng.normal(size=(3, 3, 5)).astype(np.float32))
+        q = build_aeq(fmap, capacity=9 * 11)
+        got = crop_vm(apply_events(pad_vm(jnp.zeros((9, 11, 5), jnp.float32)), q, kernel))
+        want = dense_conv(fmap, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_blocked_early_exit_matches(self):
+        fmap, kernel = self._random_case(7, 16, 16, 0.1)
+        q = build_aeq(fmap, capacity=256)
+        a = apply_events(pad_vm(jnp.zeros((16, 16), jnp.float32)), q, kernel)
+        b = apply_events_blocked(pad_vm(jnp.zeros((16, 16), jnp.float32)), q, kernel, block=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_rotation(self):
+        k = jnp.arange(9.0).reshape(3, 3)
+        np.testing.assert_array_equal(np.asarray(rotate_kernel(k)),
+                                      np.asarray(k)[::-1, ::-1])
+
+    def test_halo_handles_edges(self):
+        """Events on the fmap edge must not corrupt interior potentials."""
+        fmap = jnp.zeros((5, 5), bool).at[0, 0].set(True)
+        kernel = jnp.ones((3, 3), jnp.float32)
+        q = build_aeq(fmap, capacity=8)
+        got = crop_vm(apply_events(pad_vm(jnp.zeros((5, 5), jnp.float32)), q, kernel))
+        want = dense_conv(fmap, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- threshold
+class TestThreshold:
+    def test_or_pool(self):
+        s = jnp.zeros((6, 6), bool).at[0, 0].set(True).at[5, 5].set(True)
+        p = or_pool(s, 3)
+        assert p.shape == (2, 2)
+        assert bool(p[0, 0]) and bool(p[1, 1]) and not bool(p[0, 1])
+
+    def test_or_pool_pads(self):
+        s = jnp.ones((7, 8), bool)
+        assert or_pool(s, 3).shape == (3, 3)
+
+    def test_threshold_mttfs_indicator(self):
+        vm = jnp.asarray([[0.5, 2.0]])
+        fired = jnp.asarray([[True, False]])
+        r = threshold_unit(vm, 0.0, 1.0, fired)
+        np.testing.assert_array_equal(np.asarray(r.spikes), [[True, True]])
+        np.testing.assert_array_equal(np.asarray(r.fired), [[True, True]])
+
+    def test_saturating_bias(self):
+        vm = jnp.asarray([[120]], jnp.int8)
+        r = threshold_unit(vm, jnp.asarray(100, jnp.int8), 50, jnp.asarray([[False]]),
+                           sat_bits=8)
+        assert int(r.v_m[0, 0]) == 127  # clamped, no wraparound
+        assert bool(r.spikes[0, 0])
+
+
+# ---------------------------------------------------------------- quantization
+class TestQuantization:
+    def test_saturating_add_bounds(self):
+        a = jnp.asarray([120, -120], jnp.int8)
+        b = jnp.asarray([100, -100], jnp.int8)
+        out = saturating_add(a, b, 8)
+        np.testing.assert_array_equal(np.asarray(out), [127, -128])
+
+    @given(st.integers(-127, 127), st.integers(-127, 127))
+    @settings(max_examples=50, deadline=None)
+    def test_saturating_add_matches_clamped_int(self, x, y):
+        out = int(saturating_add(jnp.asarray(x, jnp.int8), jnp.asarray(y, jnp.int8), 8))
+        assert out == max(-128, min(127, x + y))
+
+    def test_quantize_roundtrip(self):
+        spec = QuantSpec(bits=8, scale=0.05)
+        x = jnp.asarray([0.1, -0.2, 6.35, -100.0])
+        q = quantize(x, spec)
+        assert q.dtype == jnp.int8
+        assert int(q[2]) == 127 and int(q[3]) == -128
+
+
+# ---------------------------------------------------------------- scheduler
+class TestScheduler:
+    def _layer_case(self, seed, t=3, h=8, w=8, cin=2, cout=4):
+        rng = np.random.default_rng(seed)
+        spikes = jnp.asarray(rng.random((t, h, w, cin)) < 0.15)
+        k = jnp.asarray(rng.normal(size=(3, 3, cin, cout)).astype(np.float32) * 0.5)
+        b = jnp.asarray(rng.normal(size=(cout,)).astype(np.float32) * 0.1)
+        return spikes, k, b
+
+    def test_event_matches_dense(self):
+        """Algorithm-1 event scheduling == frame-based oracle, incl. pooling."""
+        spikes, k, b = self._layer_case(0)
+        out_e, stats = run_conv_layer(spikes, k, b, 1.0, capacity=64, pool=3)
+        out_d = run_conv_layer_dense(spikes, k, b, 1.0, pool=3)
+        np.testing.assert_array_equal(np.asarray(out_e), np.asarray(out_d))
+        assert stats.in_spike_counts.shape == (3, 2)
+
+    def test_channel_block_invariance(self):
+        """channel_block is a perf knob — results must not change."""
+        spikes, k, b = self._layer_case(1)
+        out1, _ = run_conv_layer(spikes, k, b, 1.0, capacity=64, channel_block=1)
+        out4, _ = run_conv_layer(spikes, k, b, 1.0, capacity=64, channel_block=4)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out4))
+
+    def test_fc_head(self):
+        spikes = jnp.asarray(np.random.default_rng(0).random((4, 3, 3, 2)) < 0.5)
+        w = jnp.ones((18, 5), jnp.float32)
+        b = jnp.full((5,), 0.5, jnp.float32)
+        logits = run_fc_head(spikes, w, b)
+        expected = float(np.asarray(spikes).sum()) + 4 * 0.5
+        np.testing.assert_allclose(np.asarray(logits), expected, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- CSNN e2e
+class TestCSNN:
+    def small_cfg(self):
+        return CSNNConfig(input_hw=(10, 10),
+                          layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
+                          t_steps=4)
+
+    def test_ann_forward_shapes(self):
+        cfg = self.small_cfg()
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        imgs = jnp.ones((2, 10, 10, 1)) * 0.5
+        logits = ann_apply(params, imgs, cfg)
+        assert logits.shape == (2, 3)
+        assert not bool(jnp.isnan(logits).any())
+
+    def test_snn_event_equals_dense_oracle(self):
+        cfg = self.small_cfg()
+        params = init_params(jax.random.PRNGKey(1), cfg)
+        img = jnp.asarray(np.random.default_rng(0).random((10, 10, 1)).astype(np.float32))
+        spikes = encode_input(img[None], cfg)[0]
+        logits_e, stats = snn_apply(params, spikes, cfg, capacity=128)
+        logits_d = snn_apply_dense(params, spikes, cfg)
+        np.testing.assert_allclose(np.asarray(logits_e), np.asarray(logits_d),
+                                   rtol=1e-4, atol=1e-4)
+        assert len(stats) == 2
+
+    def test_paper_architecture_instantiates(self):
+        """The exact 28x28-32C3-32C3-P3-10C3-F10 network runs one sample."""
+        cfg = CSNNConfig()  # paper defaults
+        params = init_params(jax.random.PRNGKey(2), cfg)
+        img = jnp.asarray(np.random.default_rng(1).random((28, 28, 1)).astype(np.float32))
+        spikes = encode_input(img[None], cfg)[0]
+        logits = snn_apply(params, spikes, cfg, capacity=128, collect_stats=False)
+        assert logits.shape == (10,)
+        assert not bool(jnp.isnan(logits).any())

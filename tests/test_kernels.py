@@ -1,0 +1,206 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes, dtypes and densities (+ hypothesis properties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aeq import EventQueue, build_aeq
+from repro.core.event_conv import dense_conv
+from repro.kernels.event_conv.kernel import event_conv_pallas
+from repro.kernels.event_conv.ops import event_conv
+from repro.kernels.event_conv.ref import event_conv_ref
+from repro.kernels.threshold_pool.ops import threshold_pool
+from repro.kernels.threshold_pool.ref import threshold_pool_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _queue(rng, h, w, density, capacity):
+    fmap = jnp.asarray(rng.random((h, w)) < density)
+    return fmap, build_aeq(fmap, capacity)
+
+
+class TestEventConvKernel:
+    @pytest.mark.parametrize("h,w,c", [(6, 6, 8), (28, 28, 32), (13, 9, 16), (10, 10, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int16, jnp.int8])
+    def test_matches_ref_sweep(self, h, w, c, dtype):
+        rng = np.random.default_rng(hash((h, w, c, str(dtype))) % 2**32)
+        fmap, q = _queue(rng, h, w, 0.25, capacity=h * w)
+        if dtype == jnp.float32:
+            kernel = jnp.asarray(rng.normal(size=(3, 3, c)).astype(np.float32))
+            vm = jnp.asarray(rng.normal(size=(h + 2, w + 2, c)).astype(np.float32))
+        else:
+            kernel = jnp.asarray(rng.integers(-20, 20, size=(3, 3, c)), dtype)
+            vm = jnp.asarray(rng.integers(-50, 50, size=(h + 2, w + 2, c)), dtype)
+        coords = jnp.pad(q.coords, ((0, -q.capacity % 64), (0, 0)))
+        valid = jnp.pad(q.valid, (0, -q.capacity % 64))
+        got = event_conv_pallas(vm, coords, valid, kernel, block_e=64)
+        want = event_conv_ref(vm, coords, valid, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_int8_saturates_per_event(self):
+        """Per-event saturation (FPGA PE semantics) != clip-at-end."""
+        vm = jnp.zeros((3, 3, 1), jnp.int8)
+        # two events at the same location: +100 then -100 with saturation at
+        # +127 gives 27... with +100+100 saturating gives 127 then -100 -> 27.
+        coords = jnp.asarray([[0, 0], [0, 0], [0, 0]], jnp.int32)
+        valid = jnp.asarray([True, True, True])
+        kernel = jnp.full((3, 3, 1), 100, jnp.int8)
+        got = event_conv_pallas(vm, coords, jnp.asarray([1, 1, 0], jnp.int8),
+                                kernel, block_e=3)
+        assert int(got[1, 1, 0]) == 127  # saturated, not 200 % 256
+
+    @given(st.integers(4, 20), st.integers(4, 20), st.floats(0.0, 0.9),
+           st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_wrapper_equals_dense_conv(self, h, w, density, seed):
+        """ops.event_conv on a zero vm == SAME sliding-window convolution."""
+        rng = np.random.default_rng(seed)
+        fmap, q = _queue(rng, h, w, density, capacity=h * w)
+        kernel = jnp.asarray(rng.normal(size=(3, 3, 4)).astype(np.float32))
+        got = event_conv(jnp.zeros((h, w, 4), jnp.float32), q, kernel, block_e=32)
+        want = dense_conv(fmap, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_empty_queue_is_noop(self):
+        q = build_aeq(jnp.zeros((8, 8), bool), capacity=16)
+        vm = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8, 4)).astype(np.float32))
+        out = event_conv(vm, q, jnp.ones((3, 3, 4), jnp.float32), block_e=16)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(vm))
+
+
+class TestThresholdPoolKernel:
+    @pytest.mark.parametrize("h,w,c", [(9, 9, 8), (28, 28, 32), (10, 14, 130)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int16])
+    @pytest.mark.parametrize("pool", [None, 3])
+    def test_matches_ref_sweep(self, h, w, c, dtype, pool):
+        rng = np.random.default_rng(hash((h, w, c, str(dtype), pool)) % 2**32)
+        if dtype == jnp.float32:
+            vm = jnp.asarray(rng.normal(size=(h, w, c)).astype(np.float32))
+            bias = jnp.asarray(rng.normal(size=(c,)).astype(np.float32))
+            v_t = 0.5
+        else:
+            vm = jnp.asarray(rng.integers(-100, 100, size=(h, w, c)), dtype)
+            bias = jnp.asarray(rng.integers(-10, 10, size=(c,)), dtype)
+            v_t = 20
+        fired = jnp.asarray(rng.random((h, w, c)) < 0.1)
+        vm_k, fired_k, out_k = threshold_pool(vm, bias, fired, v_t=v_t, pool=pool,
+                                              block_c=64, use_kernel=True)
+        vm_r, fired_r, out_r = threshold_pool(vm, bias, fired, v_t=v_t, pool=pool,
+                                              use_kernel=False)
+        np.testing.assert_allclose(np.asarray(vm_k), np.asarray(vm_r), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(fired_k), np.asarray(fired_r))
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    def test_mttfs_indicator_propagates(self):
+        vm = jnp.full((3, 3, 4), -10.0)
+        fired = jnp.zeros((3, 3, 4), bool).at[1, 1, 2].set(True)
+        _, fired_out, spikes = threshold_pool(vm, jnp.zeros((4,)), fired, v_t=1.0)
+        assert bool(fired_out[1, 1, 2]) and int(fired_out.sum()) == 1
+        np.testing.assert_array_equal(np.asarray(spikes), np.asarray(fired_out))
+
+    def test_pool_padding_never_spikes(self):
+        """Cells added by pool padding must not fire even with huge bias."""
+        vm = jnp.zeros((4, 4, 2))  # pads to 6x6 for pool=3
+        bias = jnp.full((2,), 100.0)
+        _, _, pooled = threshold_pool(vm, bias, jnp.zeros((4, 4, 2), bool),
+                                      v_t=1.0, pool=3)
+        assert pooled.shape == (2, 2, 2)
+        assert bool(pooled.all())  # real cells all spike (0+100 > 1)...
+        vm2 = jnp.full((4, 4, 2), -200.0)
+        _, _, pooled2 = threshold_pool(vm2, bias, jnp.zeros((4, 4, 2), bool),
+                                       v_t=1.0, pool=3)
+        assert not bool(pooled2.any())  # ...but padding alone never does
+
+    def test_int16_saturating_bias(self):
+        vm = jnp.full((3, 3, 2), 32700, jnp.int16)
+        bias = jnp.full((2,), 100, jnp.int16)
+        vm_out, _, _ = threshold_pool(vm, bias, jnp.zeros((3, 3, 2), bool),
+                                      v_t=10, pool=None)
+        assert int(vm_out[0, 0, 0]) == 32767
+
+
+class TestConversionAndPipelineSim:
+    def test_normalize_preserves_argmax(self):
+        from repro.core.csnn import CSNNConfig, ConvSpec, FCSpec, ann_apply, init_params
+        from repro.core.conversion import normalize_params
+        cfg = CSNNConfig(input_hw=(8, 8), layers=(ConvSpec(4), FCSpec(3)), t_steps=3)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        imgs = jnp.asarray(np.random.default_rng(0).random((4, 8, 8, 1)).astype(np.float32))
+        norm = normalize_params(params, imgs, cfg)
+        a = ann_apply(params, imgs, cfg)
+        b = ann_apply(norm, imgs, cfg)
+        np.testing.assert_array_equal(np.argmax(np.asarray(a), -1),
+                                      np.argmax(np.asarray(b), -1))
+
+    def test_quantize_params_threshold_representable(self):
+        from repro.core.conversion import quantize_params, quantized_threshold
+        params = {"conv0": {"w": jnp.asarray([0.5, -0.25]), "b": jnp.asarray([0.1])}}
+        qp, spec = quantize_params(params, bits=8, v_t=1.0)
+        assert quantized_threshold(1.0, spec) <= 127
+        assert qp["conv0"]["w"].dtype == jnp.int8
+
+    def test_pipeline_sim_hazard_free_same_column(self):
+        """Events in interlaced order from one column never stall (paper VI-B)."""
+        from repro.core.pipeline_sim import simulate_conv_queue
+        events = np.asarray([[0, 0], [0, 3], [3, 0], [3, 3]])  # all column 0
+        ev, hz, em, wu = simulate_conv_queue(events)
+        assert ev == 4 and hz == 0 and em == 8 and wu == 4
+
+    def test_pipeline_sim_column_switch_hazard(self):
+        from repro.core.pipeline_sim import simulate_conv_queue
+        events = np.asarray([[0, 0], [0, 1]])  # col 0 then col 1, overlapping
+        ev, hz, _, _ = simulate_conv_queue(events)
+        assert ev == 2 and hz == 1
+
+    def test_pipeline_sim_utilization_band(self):
+        """Utilization must be < 1 and fall with extra stall sources."""
+        from repro.core.pipeline_sim import simulate_layer
+        rng = np.random.default_rng(0)
+        evs = [[rng.integers(0, 28, size=(50, 2)) for _ in range(4)] for _ in range(5)]
+        rep = simulate_layer(evs, c_out=8, fmap_hw=(28, 28))
+        assert 0.0 < rep.pe_utilization < 1.0
+
+
+class TestSchedulerPallasBackend:
+    """The Pallas event_conv kernel as the Algorithm-1 compute path."""
+
+    def test_pallas_backend_matches_jax(self):
+        from repro.core.scheduler import run_conv_layer
+        rng = np.random.default_rng(7)
+        spikes = jnp.asarray(rng.random((3, 10, 10, 2)) < 0.2)
+        k = jnp.asarray(rng.normal(size=(3, 3, 2, 4)).astype(np.float32) * 0.5)
+        b = jnp.asarray(rng.normal(size=(4,)).astype(np.float32) * 0.1)
+        out_j, _ = run_conv_layer(spikes, k, b, 1.0, capacity=100, pool=3,
+                                  backend="jax")
+        out_p, _ = run_conv_layer(spikes, k, b, 1.0, capacity=100, pool=3,
+                                  backend="pallas")
+        np.testing.assert_array_equal(np.asarray(out_j), np.asarray(out_p))
+
+    def test_pallas_backend_full_csnn(self):
+        """Whole-network equivalence: kernels as the production layer."""
+        from repro.core.csnn import CSNNConfig, ConvSpec, FCSpec, encode_input, init_params
+        from repro.core.scheduler import run_conv_layer, run_fc_head
+        cfg = CSNNConfig(input_hw=(12, 12),
+                         layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
+                         t_steps=3)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        img = jnp.asarray(np.random.default_rng(0).random((12, 12, 1)).astype(np.float32))
+        spikes = encode_input(img[None], cfg)[0]
+        outs = {}
+        for backend in ("jax", "pallas"):
+            x = spikes
+            for idx, spec in enumerate(cfg.layers):
+                if isinstance(spec, ConvSpec):
+                    p = params[f"conv{idx}"]
+                    x, _ = run_conv_layer(x, p["w"], p["b"], cfg.v_t,
+                                          capacity=144, pool=spec.pool,
+                                          backend=backend)
+                else:
+                    p = params[f"fc{idx}"]
+                    outs[backend] = run_fc_head(x, p["w"], p["b"])
+        np.testing.assert_allclose(np.asarray(outs["jax"]),
+                                   np.asarray(outs["pallas"]), rtol=1e-5)

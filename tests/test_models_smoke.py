@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests (reduced configs, CPU): forward/train step
+shape + NaN checks, plus decode-vs-full-forward consistency (cache
+correctness) and linear-attention chunked-vs-recurrent equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SMOKE_SHAPE
+from repro.configs.base import ShapeConfig
+from repro.models.registry import build_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCH_IDS = list(ARCHS.keys())
+
+
+def _model_and_inputs(arch_id, seq=64, batch=2):
+    mod = ARCHS[arch_id]
+    model = build_model(mod.SMOKE)
+    params = model.init_params(jax.random.PRNGKey(0))
+    shape = ShapeConfig("smoke", seq, batch, "train")
+    batch_data = model.make_inputs(jax.random.PRNGKey(1), shape)
+    return model, params, batch_data
+
+
+class TestSmokeForward:
+    @pytest.mark.parametrize("arch_id", ARCH_IDS)
+    def test_train_step_shapes_and_finite(self, arch_id):
+        model, params, batch = _model_and_inputs(arch_id)
+        loss, metrics = model.loss(params, batch)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss)), f"{arch_id}: loss={loss}"
+        assert bool(jnp.isfinite(metrics["ce"]))
+
+    @pytest.mark.parametrize("arch_id", ["stablelm-3b", "deepseek-v2-236b",
+                                         "zamba2-1.2b", "rwkv6-1.6b"])
+    def test_grads_finite(self, arch_id):
+        model, params, batch = _model_and_inputs(arch_id, seq=32)
+        grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        flat = jax.tree.leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch_id}: NaN grads"
+        assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+class TestDecodeConsistency:
+    """prefill(S-1 tokens) + decode(token S-1) must equal the full forward
+    logits at the last position — exercises every cache variant."""
+
+    @pytest.mark.parametrize("arch_id", ARCH_IDS)
+    def test_decode_matches_forward(self, arch_id):
+        if arch_id == "whisper-medium":
+            pytest.skip("covered by test_whisper_decode below")
+        mod = ARCHS[arch_id]
+        model = build_model(mod.SMOKE)
+        cfg = mod.SMOKE
+        params = model.init_params(jax.random.PRNGKey(0))
+        b, s = 2, 24
+        rng = jax.random.PRNGKey(3)
+        tokens = jax.random.randint(rng, (b, s), 0, cfg.vocab, jnp.int32)
+        extra = {}
+        max_seq = s
+        if cfg.family == "vlm":
+            extra["vision_embeds"] = 0.02 * jax.random.normal(
+                jax.random.PRNGKey(4), (b, cfg.n_vision_tokens, cfg.d_model))
+            max_seq = s + cfg.n_vision_tokens  # cache holds vision + text
+        # full-sequence logits at the last position, via prefill over S tokens
+        full_logits, _ = model.prefill(params, {"tokens": tokens, **extra},
+                                       max_seq=max_seq, cache_dtype=jnp.float32)
+        # prefill S-1 then decode token S-1
+        _, cache = model.prefill(params, {"tokens": tokens[:, : s - 1], **extra},
+                                 max_seq=max_seq, cache_dtype=jnp.float32)
+        pos = jnp.asarray(s - 1, jnp.int32)
+        if cfg.family == "vlm":
+            pos = jnp.asarray(cfg.n_vision_tokens + s - 1, jnp.int32)
+        dec_logits, _ = model.decode(params, cache,
+                                     {"tokens": tokens[:, s - 1:], "pos": pos})
+        np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits),
+                                   rtol=2e-2, atol=2e-3)
+
+    def test_whisper_decode(self):
+        mod = ARCHS["whisper-medium"]
+        model = build_model(mod.SMOKE)
+        cfg = mod.SMOKE
+        params = model.init_params(jax.random.PRNGKey(0))
+        b, s = 2, 16
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab, jnp.int32)
+        frames = 0.02 * jax.random.normal(jax.random.PRNGKey(2),
+                                          (b, cfg.enc_frames, cfg.d_model))
+        full_logits, _ = model.prefill(params, {"tokens": tokens, "frames": frames},
+                                       max_seq=s, cache_dtype=jnp.float32)
+        _, cache = model.prefill(params, {"tokens": tokens[:, : s - 1], "frames": frames},
+                                 max_seq=s, cache_dtype=jnp.float32)
+        dec_logits, _ = model.decode(params, cache,
+                                     {"tokens": tokens[:, s - 1:],
+                                      "pos": jnp.asarray(s - 1, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits),
+                                   rtol=2e-2, atol=2e-3)
+
+    def test_multi_step_decode_sliding_window(self):
+        """Ring-buffer correctness: decode several steps past the window."""
+        mod = ARCHS["gemma3-1b"]
+        model = build_model(mod.SMOKE)
+        cfg = mod.SMOKE
+        params = model.init_params(jax.random.PRNGKey(0))
+        b, s = 1, 40  # window is 16 in the smoke config
+        tokens = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab, jnp.int32)
+        full_logits, _ = model.prefill(params, {"tokens": tokens}, max_seq=s,
+                                       cache_dtype=jnp.float32)
+        n_steps = 8
+        _, cache = model.prefill(params, {"tokens": tokens[:, : s - n_steps]},
+                                 max_seq=s, cache_dtype=jnp.float32)
+        logits = None
+        for i in range(s - n_steps, s):
+            logits, cache = model.decode(
+                params, cache, {"tokens": tokens[:, i: i + 1],
+                                "pos": jnp.asarray(i, jnp.int32)})
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                                   rtol=2e-2, atol=2e-3)
+
+
+class TestLinearAttention:
+    @pytest.mark.parametrize("exclusive", [False, True])
+    def test_chunked_matches_recurrent(self, exclusive):
+        from repro.models.linear_attn import chunked, recurrent_reference
+        rng = np.random.default_rng(0)
+        b, s, h, dk, dv = 2, 50, 3, 8, 8  # s deliberately not chunk-aligned
+        q = jnp.asarray(rng.normal(size=(b, s, h, dk)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s, h, dk)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, h, dv)).astype(np.float32))
+        log_w = jnp.asarray(-rng.uniform(0.01, 0.5, size=(b, s, h, dk)).astype(np.float32))
+        u = jnp.asarray(rng.normal(size=(h, dk)).astype(np.float32)) if exclusive else None
+        got = chunked(q, k, v, log_w, chunk=16, exclusive=exclusive, u=u)
+        want = recurrent_reference(q, k, v, log_w, exclusive=exclusive, u=u)
+        np.testing.assert_allclose(np.asarray(got.out), np.asarray(want.out),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got.state), np.asarray(want.state),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_carry_across_calls(self):
+        from repro.models.linear_attn import chunked
+        rng = np.random.default_rng(1)
+        b, s, h, dk, dv = 1, 32, 2, 4, 4
+        mk = lambda *sh: jnp.asarray(rng.normal(size=sh).astype(np.float32))
+        q, k, v = mk(b, s, h, dk), mk(b, s, h, dk), mk(b, s, h, dv)
+        log_w = -jnp.abs(mk(b, s, h, dk)) * 0.1
+        whole = chunked(q, k, v, log_w, chunk=8)
+        first = chunked(q[:, :16], k[:, :16], v[:, :16], log_w[:, :16], chunk=8)
+        second = chunked(q[:, 16:], k[:, 16:], v[:, 16:], log_w[:, 16:], chunk=8,
+                         state0=first.state)
+        np.testing.assert_allclose(np.asarray(second.out), np.asarray(whole.out[:, 16:]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestParamCounts:
+    """FULL configs must land near their nominal sizes (catches wiring bugs)."""
+
+    NOMINAL = {
+        "zamba2-1.2b": 1.2e9, "rwkv6-1.6b": 1.6e9, "stablelm-3b": 2.8e9,
+        "granite-34b": 34e9, "phi3-medium-14b": 14e9, "gemma3-1b": 1.0e9,
+        "qwen2-vl-7b": 7.6e9, "whisper-medium": 0.8e9,
+        "llama4-maverick-400b-a17b": 400e9, "deepseek-v2-236b": 236e9,
+    }
+
+    @pytest.mark.parametrize("arch_id", ARCH_IDS)
+    def test_param_count(self, arch_id):
+        model = build_model(ARCHS[arch_id].FULL)
+        n = model.n_params()
+        nominal = self.NOMINAL[arch_id]
+        assert 0.6 * nominal < n < 1.45 * nominal, (
+            f"{arch_id}: {n/1e9:.2f}B params vs nominal {nominal/1e9:.0f}B")

