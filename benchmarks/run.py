@@ -1,21 +1,36 @@
 """Benchmark harness: one module per paper table. Prints
 ``name,us_per_call,derived`` CSV rows (see each module's docstring for
-the paper table it reproduces)."""
+the paper table it reproduces).
+
+Optional argv filters select a subset by table name, e.g.
+``python -m benchmarks.run table5`` — used by CI as a smoke invocation.
+"""
 from __future__ import annotations
 
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import (table1_parallelism, table2_roofline,
                    table3_sparsity_utilization, table4_accuracy,
                    table5_throughput)
 
+    modules = (table4_accuracy, table3_sparsity_utilization,
+               table1_parallelism, table5_throughput, table2_roofline)
+    wanted = list(sys.argv[1:] if argv is None else argv)
+    if wanted:
+        selected = [m for m in modules
+                    if any(w in m.__name__ for w in wanted)]
+        if not selected:
+            print(f"no benchmark matches {wanted}; have "
+                  f"{[m.__name__ for m in modules]}", file=sys.stderr)
+            sys.exit(2)
+        modules = tuple(selected)
+
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (table4_accuracy, table3_sparsity_utilization,
-                table1_parallelism, table5_throughput, table2_roofline):
+    for mod in modules:
         try:
             mod.main()
         except Exception:

@@ -1,0 +1,39 @@
+"""JAX version portability helpers.
+
+The repo targets the jax >= 0.5 public API but must also run on 0.4.x
+containers.  Centralizing the differences here keeps every call site on
+the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(body, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    jax 0.4.x exposes shard_map only under ``jax.experimental`` and calls
+    the replication-checking flag ``check_rep`` (renamed ``check_vma`` in
+    0.5+); semantics are identical for our uses.  ``check_vma`` defaults
+    to True like ``jax.shard_map`` itself, so call sites that relied on
+    the upstream default keep their trace-time replication checking on
+    jax >= 0.5.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except AttributeError:  # 0.4.x deprecation stub raises on access
+            pass
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # The 0.4.x rep checker predates vma semantics (and pvary below is an
+    # identity there), so the fallback always disables it.
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` or identity on jax versions without vma tracking."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x

@@ -14,11 +14,17 @@ Convolutional Spiking Neural Networks" (TCAD 2022), adapted FPGA -> TPU:
 * csnn         — model assembly (ANN train path + SNN inference paths)
 * pipeline_sim — cycle-level FPGA pipeline model for PE utilization (C8)
 """
-from .aeq import EventQueue, build_aeq, calibrate_capacity, column_index, deinterlace, interlace, scatter_aeq
-from .csnn import CSNNConfig, ConvSpec, FCSpec, ann_apply, encode_input, init_params, snn_apply, snn_apply_dense
+from .aeq import (BatchedEventQueue, EventQueue, build_aeq, build_aeq_batched,
+                  calibrate_capacity, column_index, deinterlace, interlace,
+                  scatter_aeq)
+from .csnn import (CSNNConfig, ConvSpec, FCSpec, ann_apply, encode_input,
+                   init_params, snn_apply, snn_apply_batched, snn_apply_dense)
 from .encoding import mttfs_thresholds, multi_threshold_encode, rate_encode, spike_sparsity
-from .event_conv import apply_events, apply_events_blocked, crop_vm, dense_conv, pad_vm, rotate_kernel
+from .event_conv import (apply_events, apply_events_batched,
+                         apply_events_blocked, crop_vm, dense_conv, pad_vm,
+                         rotate_kernel)
 from .neuron import IFState, if_reset_step, mttfs_step, ttfs_slope_step
 from .quantization import QuantSpec, calibrate_scale, dequantize, fake_quant, quantize, saturating_add
-from .scheduler import LayerStats, run_conv_layer, run_conv_layer_dense, run_fc_head
+from .scheduler import (LayerStats, run_conv_layer, run_conv_layer_batched,
+                        run_conv_layer_dense, run_fc_head, run_fc_head_batched)
 from .threshold import ThresholdResult, or_pool, threshold_unit

@@ -14,6 +14,12 @@ from observed spike counts.  The paper's *interlaced column order*
 preserved: it is what makes same-column events hazard-free (their 3x3
 neighbourhoods can never overlap) and we keep it so the cycle-level
 pipeline simulator and the Pallas kernel see the same schedule as the RTL.
+
+Two entry points share the compaction logic: ``build_aeq`` compacts one
+fmap, and ``build_aeq_batched`` compacts a whole stack of fmaps (any
+leading dims, e.g. (B, T, C_in, H, W)) in ONE fused batched sort — the
+builder behind the batched inference pipeline (scheduler
+``run_conv_layer_batched``).  Property tests live in tests/test_aeq.py.
 """
 from __future__ import annotations
 
@@ -41,9 +47,49 @@ class EventQueue(NamedTuple):
         return self.coords.shape[0]
 
 
+class BatchedEventQueue(NamedTuple):
+    """A stack of fixed-capacity queues sharing one calibrated capacity.
+
+    coords: (..., capacity, 2) int32 — (i, j) per event; -1 where ~valid.
+    valid:  (..., capacity) bool     — which slots hold real events.
+    count:  (...,) int32             — valid events per queue.
+
+    The leading dims are whatever ``build_aeq_batched`` was given, e.g.
+    (T, B, C_in) in the batched scheduler.  ``queue_at`` views one member
+    as a plain EventQueue.
+    """
+
+    coords: jax.Array
+    valid: jax.Array
+    count: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.coords.shape[-2]
+
+    @property
+    def num_queues(self) -> int:
+        return int(np.prod(self.coords.shape[:-2], dtype=np.int64))
+
+    def queue_at(self, index: tuple) -> EventQueue:
+        return EventQueue(coords=self.coords[index], valid=self.valid[index],
+                          count=self.count[index])
+
+
 def column_index(i: jax.Array, j: jax.Array) -> jax.Array:
     """Interlacing column s in 0..8 of a coordinate (paper Figs. 6/7)."""
     return (i % 3) * 3 + (j % 3)
+
+
+def _order_keys(h: int, w: int, interlaced: bool) -> jax.Array:
+    """(H*W,) int32 read-order key per pixel: (column s, i, j) or raster."""
+    ii, jj = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    ii, jj = ii.ravel(), jj.ravel()
+    if interlaced:
+        order_key = column_index(ii, jj) * (h * w) + ii * w + jj
+    else:
+        order_key = ii * w + jj
+    return order_key.astype(jnp.int32)
 
 
 def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> EventQueue:
@@ -57,14 +103,8 @@ def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> Eve
     """
     h, w = fmap.shape
     fmap = fmap.astype(bool)
-    ii, jj = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
-    ii, jj = ii.ravel(), jj.ravel()
-    if interlaced:
-        order_key = column_index(ii, jj) * (h * w) + ii * w + jj
-    else:
-        order_key = ii * w + jj
     big = jnp.asarray(9 * h * w + 1, jnp.int32)
-    key = jnp.where(fmap.ravel(), order_key.astype(jnp.int32), big)
+    key = jnp.where(fmap.ravel(), _order_keys(h, w, interlaced), big)
     sorted_key, perm = jax.lax.sort_key_val(key, jnp.arange(h * w, dtype=jnp.int32))
     take_n = min(capacity, h * w)  # a queue deeper than the fmap just stays padded
     take = perm[:take_n]
@@ -76,6 +116,42 @@ def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> Eve
         coords = jnp.concatenate([coords, jnp.full((pad, 2), -1, coords.dtype)])
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
     return EventQueue(coords=coords, valid=valid, count=jnp.sum(fmap).astype(jnp.int32))
+
+
+def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
+                      interlaced: bool = True) -> BatchedEventQueue:
+    """Compact a stack of binary fmaps (..., H, W) in one fused sort pass.
+
+    Semantically identical to ``jax.vmap(build_aeq)`` over the flattened
+    leading dims (bit-exact — tests/test_aeq.py asserts it) but compiles
+    to a SINGLE batched ``sort_key_val`` over an (N, H*W) key matrix
+    instead of N independent compactions, which is what lets the batched
+    inference pipeline amortize queue construction across (B, T, C_in).
+    All queues share one calibrated ``capacity`` (the hardware analogue:
+    every BRAM queue instance is sized identically).
+    """
+    *lead, h, w = fmaps.shape
+    n = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    flat = fmaps.reshape(n, h * w).astype(bool)
+    big = jnp.asarray(9 * h * w + 1, jnp.int32)
+    keys = jnp.where(flat, _order_keys(h, w, interlaced)[None, :], big)
+    idx = jnp.broadcast_to(jnp.arange(h * w, dtype=jnp.int32)[None, :], keys.shape)
+    sorted_keys, perm = jax.lax.sort_key_val(keys, idx, dimension=-1)
+    take_n = min(capacity, h * w)
+    take = perm[:, :take_n]
+    valid = sorted_keys[:, :take_n] < big
+    coords = jnp.stack([take // w, take % w], axis=-1)
+    coords = jnp.where(valid[..., None], coords, -1)
+    if take_n < capacity:
+        pad = capacity - take_n
+        coords = jnp.concatenate(
+            [coords, jnp.full((n, pad, 2), -1, coords.dtype)], axis=1)
+        valid = jnp.concatenate([valid, jnp.zeros((n, pad), bool)], axis=1)
+    return BatchedEventQueue(
+        coords=coords.reshape(*lead, capacity, 2),
+        valid=valid.reshape(*lead, capacity),
+        count=jnp.sum(flat, axis=-1).astype(jnp.int32).reshape(tuple(lead)),
+    )
 
 
 def scatter_aeq(queue: EventQueue, shape: tuple[int, int]) -> jax.Array:

@@ -6,6 +6,9 @@ Two execution paths share one parameter pytree:
   Sec. VII trains a conventional CNN and converts it);
 * ``snn_apply``     — T-step m-TTFS spiking inference through the
   event-driven scheduler (Algorithm 1), the system under study;
+* ``snn_apply_batched`` — the same inference for a whole sample batch
+  with queue construction and kernel launches amortized across it
+  (bit-exact vs ``vmap(snn_apply)``; the serving entry point);
 * ``snn_apply_dense`` — frame-based spiking oracle (dense baseline).
 
 Parameters are plain dicts of jnp arrays; layer specs are tiny frozen
@@ -20,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from .encoding import mttfs_thresholds, multi_threshold_encode
-from .scheduler import LayerStats, run_conv_layer, run_conv_layer_dense, run_fc_head
+from .scheduler import (LayerStats, run_conv_layer, run_conv_layer_batched,
+                        run_conv_layer_dense, run_fc_head, run_fc_head_batched)
 
 
 @dataclass(frozen=True)
@@ -140,6 +144,47 @@ def snn_apply(
         else:
             p = params[f"fc{idx}"]
             logits = run_fc_head(x, p["w"], p["b"])
+    return (logits, stats) if collect_stats else logits
+
+
+def snn_apply_batched(
+    params: dict,
+    in_spikes: jax.Array,
+    cfg: CSNNConfig,
+    *,
+    capacity: int | Sequence[int] = 256,
+    channel_block: int = 1,
+    sat_bits: Optional[int] = None,
+    collect_stats: bool = True,
+    backend: str = "jax",
+):
+    """Event-driven m-TTFS inference for a SAMPLE BATCH.
+
+    in_spikes: (B, T, H, W, 1) bool.  Returns (logits (B, n_classes),
+    [LayerStats, ...]) — stats carry a leading batch dim.  Logits are
+    bit-exact vs ``jax.vmap(snn_apply)`` (tests/test_batched.py); the
+    difference is purely structural: per layer, ONE fused queue
+    compaction over (B, T, C_in) and ONE conv-unit launch per
+    (t, c_in, channel-block) step feed the whole batch, and the
+    self-timed early exit is shared batch-wide.  This is the serving
+    path (launch/serve.py) and the batched row of Table V.
+    """
+    conv_specs = [s for s in cfg.layers if isinstance(s, ConvSpec)]
+    caps = ([capacity] * len(conv_specs) if isinstance(capacity, int) else list(capacity))
+    vm_dtype = {None: jnp.float32, 8: jnp.int8, 16: jnp.int16}[sat_bits]
+    x, stats, ci = in_spikes, [], 0
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            p = params[f"conv{idx}"]
+            x, st = run_conv_layer_batched(
+                x, p["w"], p["b"], cfg.v_t, capacity=caps[ci], pool=spec.pool,
+                channel_block=channel_block, sat_bits=sat_bits,
+                vm_dtype=vm_dtype, backend=backend)
+            stats.append(st)
+            ci += 1
+        else:
+            p = params[f"fc{idx}"]
+            logits = run_fc_head_batched(x, p["w"], p["b"])
     return (logits, stats) if collect_stats else logits
 
 

@@ -18,9 +18,15 @@ TPU adaptation (DESIGN.md Sec. 2):
 * events are applied sequentially inside a `fori_loop`/`scan`, preserving
   the exact program order of the hardware — so no RAW hazards exist by
   construction;
-* `event_conv_blocked` processes the queue in fixed-size blocks under a
+* `apply_events_blocked` processes the queue in fixed-size blocks under a
   `lax.while_loop` and stops as soon as the valid events are exhausted:
-  the block-granular analogue of the paper's self-timed execution.
+  the block-granular analogue of the paper's self-timed execution;
+* `apply_events_batched` applies one queue per batch member to a stack of
+  vm tiles, with the early exit shared across the batch (the loop bound
+  is the *maximum* queue occupancy — the batch drains when its fullest
+  queue drains, exactly like parallel hardware queue banks on one clock).
+  Skipped slots would have contributed exact zeros, so results stay
+  bit-identical to the unbatched path.
 
 `ref:` the pure sliding-window oracle is `dense_conv` below (a thin
 wrapper over `lax.conv_general_dilated`); the bit-exactness property is
@@ -64,6 +70,21 @@ def rotate_kernel(kernel: jax.Array) -> jax.Array:
     return kernel[::-1, ::-1, ...]
 
 
+def _event_step(vm: jax.Array, i, j, v, k_rot: jax.Array, zero: jax.Array,
+                update_sizes: tuple) -> jax.Array:
+    """Apply one (possibly invalid) event to one vm tile.
+
+    Invalid slots contribute zeros at a safe (0, 0) corner: branch-free
+    masking, the jit-friendly analogue of the AEQ valid bit.  The single
+    source of truth for the per-event update — every event loop in this
+    module (plain, blocked, batched) goes through it.
+    """
+    contrib = jnp.where(v, k_rot, zero)
+    start = (jnp.where(v, i, 0), jnp.where(v, j, 0)) + (0,) * (vm.ndim - 2)
+    patch = jax.lax.dynamic_slice(vm, start, update_sizes)
+    return jax.lax.dynamic_update_slice(vm, _acc(patch, contrib), start)
+
+
 def apply_events(vm_padded: jax.Array, queue: EventQueue, kernel: jax.Array) -> jax.Array:
     """Accumulate one event queue into padded membrane potentials.
 
@@ -78,16 +99,8 @@ def apply_events(vm_padded: jax.Array, queue: EventQueue, kernel: jax.Array) -> 
     update_sizes = (3, 3) + k_rot.shape[2:]
 
     def body(step, vm):
-        i = queue.coords[step, 0]
-        j = queue.coords[step, 1]
-        # Invalid slots contribute zeros at a safe (0, 0) corner: branch-free
-        # masking, the jit-friendly analogue of the AEQ valid bit.
-        contrib = jnp.where(queue.valid[step], k_rot, zero)
-        i = jnp.where(queue.valid[step], i, 0)
-        j = jnp.where(queue.valid[step], j, 0)
-        start = (i, j) + (0,) * (vm.ndim - 2)
-        patch = jax.lax.dynamic_slice(vm, start, update_sizes)
-        return jax.lax.dynamic_update_slice(vm, _acc(patch, contrib), start)
+        return _event_step(vm, queue.coords[step, 0], queue.coords[step, 1],
+                           queue.valid[step], k_rot, zero, update_sizes)
 
     return jax.lax.fori_loop(0, queue.capacity, body, vm_padded)
 
@@ -107,11 +120,8 @@ def apply_events_blocked(vm_padded: jax.Array, queue: EventQueue, kernel: jax.Ar
     update_sizes = (3, 3) + k_rot.shape[2:]
 
     def event_body(step, vm):
-        i, j, v = queue.coords[step, 0], queue.coords[step, 1], queue.valid[step]
-        contrib = jnp.where(v, k_rot, zero)
-        start = (jnp.where(v, i, 0), jnp.where(v, j, 0)) + (0,) * (vm.ndim - 2)
-        patch = jax.lax.dynamic_slice(vm, start, update_sizes)
-        return jax.lax.dynamic_update_slice(vm, _acc(patch, contrib), start)
+        return _event_step(vm, queue.coords[step, 0], queue.coords[step, 1],
+                           queue.valid[step], k_rot, zero, update_sizes)
 
     def cond(carry):
         b, _ = carry
@@ -120,6 +130,50 @@ def apply_events_blocked(vm_padded: jax.Array, queue: EventQueue, kernel: jax.Ar
     def body(carry):
         b, vm = carry
         vm = jax.lax.fori_loop(b * block, jnp.minimum((b + 1) * block, cap), event_body, vm)
+        return b + 1, vm
+
+    _, vm = jax.lax.while_loop(cond, body, (jnp.asarray(0, jnp.int32), vm_padded))
+    return vm
+
+
+def apply_events_batched(vm_padded: jax.Array, coords: jax.Array,
+                         valid: jax.Array, counts: jax.Array,
+                         kernel: jax.Array, *, block: int = 64) -> jax.Array:
+    """Apply one event queue per batch member, early-exiting together.
+
+    vm_padded: (Q, H+2, W+2, ...) — one halo-padded tile per queue.
+    coords:    (Q, E, 2) int32;  valid: (Q, E) bool;  counts: (Q,) int32.
+    kernel:    (3, 3) or (3, 3, C_out) shared by every queue.
+
+    Event step e updates all Q tiles at once (vectorized over the batch);
+    blocks of ``block`` steps run under a while_loop bounded by
+    ``max(counts)``, so the executed work scales with the fullest queue
+    rather than with capacity.  Bit-exact vs per-queue ``apply_events``:
+    the skipped tail slots are all invalid and would contribute exact
+    zeros.
+    """
+    k_rot = rotate_kernel(kernel).astype(vm_padded.dtype)
+    zero = jnp.zeros_like(k_rot)
+    update_sizes = (3, 3) + k_rot.shape[2:]
+
+    apply_step = jax.vmap(
+        lambda vm, i, j, v: _event_step(vm, i, j, v, k_rot, zero, update_sizes))
+
+    def event_body(step, vm):
+        return apply_step(vm, coords[:, step, 0], coords[:, step, 1], valid[:, step])
+
+    cap = coords.shape[1]
+    n_blocks = -(-cap // block)
+    max_count = jnp.max(counts)
+
+    def cond(carry):
+        b, _ = carry
+        return (b < n_blocks) & (b * block < max_count)
+
+    def body(carry):
+        b, vm = carry
+        vm = jax.lax.fori_loop(b * block, jnp.minimum((b + 1) * block, cap),
+                               event_body, vm)
         return b + 1, vm
 
     _, vm = jax.lax.while_loop(cond, body, (jnp.asarray(0, jnp.int32), vm_padded))

@@ -14,6 +14,14 @@ vectorized over the lane dimension — MemPot becomes an
 paper's schedule exactly; larger blocks are the beyond-paper throughput
 knob (benchmarks/table1_parallelism.py sweeps it, the analogue of the
 paper's xP parallelization sweep).
+
+``run_conv_layer_batched`` extends Algorithm 1 to a sample batch: the
+channel-multiplexed schedule is unchanged, but all B samples' queues for
+a given (t, c_in) are built in ONE fused compaction (``build_aeq_batched``)
+and consumed by ONE kernel launch (``event_conv_pallas_batched`` /
+``apply_events_batched``), with the self-timed early exit shared across
+the batch.  MemPot becomes a (B, H+2, W+2, block) stack of tiles.
+Bit-exact vs ``vmap`` over the single-sample path (tests/test_batched.py).
 """
 from __future__ import annotations
 
@@ -22,8 +30,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .aeq import EventQueue, build_aeq
-from .event_conv import apply_events, crop_vm, dense_conv, pad_vm
+from .aeq import BatchedEventQueue, EventQueue, build_aeq_batched
+from .event_conv import (apply_events, apply_events_batched, crop_vm,
+                         dense_conv, pad_vm)
 from .threshold import threshold_unit
 
 
@@ -35,20 +44,31 @@ class LayerStats(NamedTuple):
     in_sparsity: jax.Array       # () fraction of zeros in the input activations
 
 
-def _build_all_aeqs(spikes_in: jax.Array, capacity: int) -> EventQueue:
-    """Compact (T, H, W, C_in) binary activations into per-(t, c_in) queues.
+def _snap_divisor(n: int, requested: int) -> int:
+    """Largest divisor of ``n`` <= ``requested``.  Used to snap the
+    throughput knobs (channel_block, event_block) onto values that tile
+    evenly — they are perf knobs, never correctness constraints."""
+    requested = min(requested, n)
+    if n % requested == 0:
+        return requested
+    return max(d for d in range(1, requested + 1) if n % d == 0)
 
-    Capacity is padded to a multiple of 64 so the Pallas event-block grid
-    divides evenly (the extra slots carry valid=False)."""
-    capacity = -(-capacity // 64) * 64 if capacity > 64 else capacity
-    t_steps, h, w, c_in = spikes_in.shape
-    flat = spikes_in.transpose(0, 3, 1, 2).reshape(t_steps * c_in, h, w)
-    q = jax.vmap(lambda f: build_aeq(f, capacity))(flat)
-    return EventQueue(
-        coords=q.coords.reshape(t_steps, c_in, capacity, 2),
-        valid=q.valid.reshape(t_steps, c_in, capacity),
-        count=q.count.reshape(t_steps, c_in),
-    )
+
+def _pad_capacity(capacity: int) -> int:
+    """Queue depth padded to a multiple of 64 so the Pallas event-block
+    grid divides evenly (the extra slots carry valid=False).  Shared by
+    the single-sample and batched paths — identical rounding is part of
+    their bit-exactness contract (overflow must truncate identically)."""
+    return -(-capacity // 64) * 64 if capacity > 64 else capacity
+
+
+def _build_all_aeqs(spikes_in: jax.Array, capacity: int) -> EventQueue:
+    """Compact (T, H, W, C_in) binary activations into per-(t, c_in) queues
+    in one fused sort (``build_aeq_batched``, bit-exact vs per-fmap
+    compaction)."""
+    capacity = _pad_capacity(capacity)
+    q = build_aeq_batched(spikes_in.transpose(0, 3, 1, 2), capacity)
+    return EventQueue(coords=q.coords, valid=q.valid, count=q.count)
 
 
 def run_conv_layer(
@@ -79,11 +99,7 @@ def run_conv_layer(
     """
     t_steps, h, w, c_in = spikes_in.shape
     c_out = kernels.shape[-1]
-    if c_out % channel_block != 0:
-        # snap to the largest divisor of C_out <= requested (the xP unit
-        # count is a throughput knob, never a correctness constraint)
-        channel_block = max(d for d in range(1, channel_block + 1)
-                            if c_out % d == 0)
+    channel_block = _snap_divisor(c_out, channel_block)
     queues = _build_all_aeqs(spikes_in, capacity)
 
     def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
@@ -140,13 +156,14 @@ def run_conv_layer(
 
 
 def _pool_all(spikes: jax.Array, window: int) -> jax.Array:
-    """OR-max-pool (T, H, W, C) binary maps over non-overlapping windows."""
-    t, h, w, c = spikes.shape
+    """OR-max-pool (..., H, W, C) binary maps over non-overlapping windows."""
+    *lead, h, w, c = spikes.shape
     ph, pw = -h % window, -w % window
-    s = jnp.pad(spikes.astype(bool), ((0, 0), (0, ph), (0, pw), (0, 0)))
-    hh, ww = s.shape[1:3]
-    s = s.reshape(t, hh // window, window, ww // window, window, c)
-    return jnp.any(s, axis=(2, 4))
+    pads = [(0, 0)] * len(lead) + [(0, ph), (0, pw), (0, 0)]
+    s = jnp.pad(spikes.astype(bool), pads)
+    hh, ww = s.shape[-3:-1]
+    s = s.reshape(*lead, hh // window, window, ww // window, window, c)
+    return jnp.any(s, axis=(-4, -2))
 
 
 def run_conv_layer_dense(
@@ -182,6 +199,102 @@ def run_conv_layer_dense(
     return _pool_all(spikes, pool) if pool is not None else spikes
 
 
+def run_conv_layer_batched(
+    spikes_in: jax.Array,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    *,
+    capacity: int,
+    pool: Optional[int] = None,
+    channel_block: int = 1,
+    sat_bits: Optional[int] = None,
+    vm_dtype=jnp.float32,
+    backend: str = "jax",
+    event_block: int = 64,
+) -> tuple[jax.Array, LayerStats]:
+    """Algorithm 1 over a whole sample batch with amortized event handling.
+
+    spikes_in: (B, T, H, W, C_in) bool — batch of previous-layer spikes.
+    Remaining arguments match ``run_conv_layer``.  One fused compaction
+    builds every (t, b, c_in) queue; each (t, c_in) step then feeds all B
+    queues to one batched conv-unit invocation (a 2-D-grid Pallas call for
+    ``backend="pallas"``, a batch-vectorized event loop with shared
+    early exit for ``backend="jax"``).
+
+    Returns (spikes_out (B, T, H', W', C_out) bool, LayerStats with a
+    leading batch dim: in_spike_counts (B, T, C_in), out_spike_counts
+    (B, T, C_out), in_sparsity (B,)).  Bit-exact vs
+    ``jax.vmap(run_conv_layer)`` — the paper's per-sample schedule is
+    preserved; only the launch structure is batched.
+    """
+    b_sz, t_steps, h, w, c_in = spikes_in.shape
+    c_out = kernels.shape[-1]
+    channel_block = _snap_divisor(c_out, channel_block)
+    capacity = _pad_capacity(capacity)
+    # (B, T, H, W, C_in) -> queues indexed [t, b, c_in], built in one pass
+    fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (T, B, C_in, H, W)
+    queues = build_aeq_batched(fmaps, capacity)
+    block_e = _snap_divisor(queues.capacity, event_block)
+
+    def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
+        # kernel_block: (3, 3, C_in, Cb); bias_block: (Cb,)
+        block = kernel_block.shape[-1]
+        vm0 = jnp.zeros((b_sz, h + 2, w + 2, block), vm_dtype)  # MemPot stack
+        fired0 = jnp.zeros((b_sz, h, w, block), jnp.bool_)
+
+        def time_step(carry, t):
+            vm, fired = carry
+
+            def per_cin(ci, vm):
+                coords = queues.coords[t, :, ci]   # (B, cap, 2)
+                valid = queues.valid[t, :, ci]     # (B, cap)
+                k_ci = kernel_block[:, :, ci, :]
+                if backend == "pallas":
+                    from repro.kernels.event_conv.kernel import \
+                        event_conv_pallas_batched
+                    return event_conv_pallas_batched(
+                        vm, coords, valid, k_ci.astype(vm.dtype),
+                        block_e=block_e)
+                return apply_events_batched(
+                    vm, coords, valid, queues.count[t, :, ci], k_ci,
+                    block=block_e)
+
+            vm = jax.lax.fori_loop(0, c_in, per_cin, vm)
+            inner = vm[:, 1:-1, 1:-1, :]
+
+            def thresh_one(v, f, b):
+                r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=sat_bits)
+                return r.v_m, r.fired, r.spikes
+
+            per_channel = jax.vmap(thresh_one, in_axes=(2, 2, 0), out_axes=2)
+            v_new, fired, spk = jax.vmap(per_channel, in_axes=(0, 0, None))(
+                inner, fired, bias_block)
+            vm = vm.at[:, 1:-1, 1:-1, :].set(v_new)
+            return (vm, fired), spk
+
+        (_, _), spikes = jax.lax.scan(time_step, (vm0, fired0), jnp.arange(t_steps))
+        return spikes  # (T, B, H, W, Cb)
+
+    kb = kernels.reshape(3, 3, c_in, c_out // channel_block, channel_block)
+    kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, 3, 3, C_in, Cb)
+    bb = bias.reshape(c_out // channel_block, channel_block)
+    spikes_blocks = jax.lax.map(lambda kb_bb: run_block(*kb_bb), (kb, bb))
+    spikes_out = jnp.moveaxis(spikes_blocks, 0, 4)  # (T, B, H, W, n_blocks, Cb)
+    spikes_out = spikes_out.reshape(t_steps, b_sz, h, w, c_out)
+    spikes_out = jnp.swapaxes(spikes_out, 0, 1)     # (B, T, H, W, C_out)
+
+    stats = LayerStats(
+        in_spike_counts=jnp.swapaxes(queues.count, 0, 1),  # (B, T, C_in)
+        out_spike_counts=jnp.sum(spikes_out, axis=(2, 3)).astype(jnp.int32),
+        in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32),
+                                   axis=(1, 2, 3, 4)),
+    )
+    if pool is not None:
+        return _pool_all(spikes_out, pool), stats
+    return spikes_out, stats
+
+
 def run_fc_head(spikes_in: jax.Array, weights: jax.Array, bias: jax.Array) -> jax.Array:
     """Classification unit (paper Sec. V-A): integrate-only FC readout.
 
@@ -192,3 +305,15 @@ def run_fc_head(spikes_in: jax.Array, weights: jax.Array, bias: jax.Array) -> ja
     t_steps = spikes_in.shape[0]
     flat = spikes_in.reshape(t_steps, -1).astype(weights.dtype)
     return flat.sum(0) @ weights + t_steps * bias
+
+
+def run_fc_head_batched(spikes_in: jax.Array, weights: jax.Array,
+                        bias: jax.Array) -> jax.Array:
+    """Classification unit over a batch: (B, T, ...) -> (B, n_classes).
+
+    One batched matmul replaces B vector-matrix products; numerically it
+    is the same dot_general ``vmap(run_fc_head)`` lowers to.
+    """
+    b_sz, t_steps = spikes_in.shape[:2]
+    flat = spikes_in.reshape(b_sz, t_steps, -1).astype(weights.dtype)
+    return flat.sum(1) @ weights + t_steps * bias

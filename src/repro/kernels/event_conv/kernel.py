@@ -21,6 +21,16 @@ Maps the FPGA convolution unit onto the TPU memory hierarchy:
 Block shapes: the C axis should be a multiple of 128 (lane width) and the
 vm tile must fit VMEM: (H+2)(W+2)*C*4B; for the paper's 28x28 layers with
 C=128 that is ~0.46 MB — comfortable against ~16 MB VMEM.
+
+Two entry points:
+
+* ``event_conv_pallas``          — one queue, 1-D grid over event blocks;
+* ``event_conv_pallas_batched``  — many queues, 2-D grid over
+  (queue, event block): one ``pallas_call`` streams every queue's events
+  against its own VMEM-resident vm tile (the multi-queue analogue of the
+  self-timed AEQ feed; the batch dimension of the batched inference
+  pipeline).  The event-block axis is innermost, so each queue's tile is
+  loaded once and revisited until its stream is exhausted.
 """
 from __future__ import annotations
 
@@ -33,33 +43,46 @@ from jax.experimental import pallas as pl
 _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
 
 
-def _event_conv_kernel(coords_ref, valid_ref, kernel_ref, vm_ref, out_ref, *, block_e):
-    """One grid step: apply ``block_e`` queue entries to the VMEM vm tile."""
-    # vm arrives through out_ref thanks to input_output_aliases: every grid
-    # step accumulates into the same VMEM-resident tile.
+def _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref, *,
+                       block_e, prefix=()):
+    """Apply ``block_e`` queue entries to the VMEM-resident vm tile.
+
+    Shared body of the 1-D and 2-D grid kernels — ``prefix`` is the
+    leading ref index selecting the current queue's block ((0,) for the
+    batched kernel's (1, ...) blocks, () for the single-queue kernel).
+    vm arrives through out_ref thanks to input_output_aliases: every grid
+    step accumulates into the same tile.
+    """
     k_rot = kernel_ref[...][::-1, ::-1, :]  # 180deg rotation (paper Fig. 4)
     zero = jnp.zeros_like(k_rot)
     sat = _SAT_RANGE.get(out_ref.dtype)
 
     def body(e, _):
-        i = coords_ref[e, 0]
-        j = coords_ref[e, 1]
-        v = valid_ref[e] != 0
+        i = coords_ref[prefix + (e, 0)]
+        j = coords_ref[prefix + (e, 1)]
+        v = valid_ref[prefix + (e,)] != 0
         # Invalid slots contribute zeros at the (0,0) corner — branch-free
         # masking, the AEQ valid bit in vector form.
         i = jnp.where(v, i, 0)
         j = jnp.where(v, j, 0)
         contrib = jnp.where(v, k_rot, zero)
-        patch = out_ref[pl.dslice(i, 3), pl.dslice(j, 3), :]
+        idx = prefix + (pl.dslice(i, 3), pl.dslice(j, 3), slice(None))
+        patch = out_ref[idx]
         if sat is not None:  # saturating fixed-point PE adders (paper C7)
             wide = patch.astype(jnp.int32) + contrib.astype(jnp.int32)
             updated = jnp.clip(wide, sat[0], sat[1]).astype(out_ref.dtype)
         else:
             updated = patch + contrib
-        out_ref[pl.dslice(i, 3), pl.dslice(j, 3), :] = updated
+        out_ref[idx] = updated
         return ()
 
     jax.lax.fori_loop(0, block_e, body, ())
+
+
+def _event_conv_kernel(coords_ref, valid_ref, kernel_ref, vm_ref, out_ref, *, block_e):
+    """One grid step: apply ``block_e`` queue entries to the VMEM vm tile."""
+    _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref,
+                       block_e=block_e)
 
 
 @partial(jax.jit, static_argnames=("block_e", "interpret"))
@@ -99,5 +122,62 @@ def event_conv_pallas(
         out_specs=pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((hp, wp, c), vm_padded.dtype),
         input_output_aliases={3: 0},  # accumulate vm in place across grid steps
+        interpret=interpret,
+    )(coords, valid.astype(jnp.int8), kernel, vm_padded)
+
+
+def _event_conv_batched_kernel(coords_ref, valid_ref, kernel_ref, vm_ref,
+                               out_ref, *, block_e):
+    """One (queue, event-block) grid step: apply ``block_e`` entries of the
+    current queue to that queue's VMEM-resident vm tile."""
+    _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref,
+                       block_e=block_e, prefix=(0,))
+
+
+@partial(jax.jit, static_argnames=("block_e", "interpret"))
+def event_conv_pallas_batched(
+    vm_padded: jax.Array,
+    coords: jax.Array,
+    valid: jax.Array,
+    kernel: jax.Array,
+    *,
+    block_e: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply Q event queues to Q halo-padded membrane-potential tiles.
+
+    vm_padded: (Q, H+2, W+2, C) float32 / int16 / int8 — one tile per queue
+               (in the batched scheduler Q is the sample batch B).
+    coords:    (Q, E, 2) int32 event addresses in *unpadded* space.
+    valid:     (Q, E) bool/int8 — AEQ valid bits.
+    kernel:    (3, 3, C) unrotated weights shared by every queue (all
+               queues hold the same (c_in -> channel block) slice).
+
+    One pallas_call, 2-D grid (queue, event block); E must be a multiple
+    of ``block_e`` (ops.py pads).  Returns the updated (Q, H+2, W+2, C)
+    tiles; per-queue program order is preserved exactly, so results are
+    bit-identical to Q sequential ``event_conv_pallas`` calls.
+    """
+    q, e, _ = coords.shape
+    if e % block_e != 0:
+        raise ValueError(f"E={e} must be a multiple of block_e={block_e}")
+    if vm_padded.shape[0] != q:
+        raise ValueError(
+            f"queue count mismatch: vm has {vm_padded.shape[0]} tiles, "
+            f"coords describe {q} queues")
+    _, hp, wp, c = vm_padded.shape
+    grid = (q, e // block_e)
+    return pl.pallas_call(
+        partial(_event_conv_batched_kernel, block_e=block_e),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_e, 2), lambda qi, b: (qi, b, 0)),  # event stream
+            pl.BlockSpec((1, block_e), lambda qi, b: (qi, b)),         # valid bits
+            pl.BlockSpec((3, 3, c), lambda qi, b: (0, 0, 0)),          # kernel, resident
+            pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),  # vm tile
+        ],
+        out_specs=pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, hp, wp, c), vm_padded.dtype),
+        input_output_aliases={3: 0},  # accumulate each tile in place
         interpret=interpret,
     )(coords, valid.astype(jnp.int8), kernel, vm_padded)

@@ -11,11 +11,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.aeq import EventQueue
+from repro.core.aeq import BatchedEventQueue, EventQueue
 from repro.core.event_conv import crop_vm, pad_vm
 
-from .kernel import event_conv_pallas
-from .ref import event_conv_ref
+from .kernel import event_conv_pallas, event_conv_pallas_batched
+from .ref import event_conv_ref, event_conv_ref_batched
 
 
 def _pad_events(queue: EventQueue, block_e: int) -> tuple[jax.Array, jax.Array]:
@@ -53,3 +53,36 @@ def event_conv(
     else:
         out = event_conv_ref(vm_p, coords, valid, kernel)
     return crop_vm(out)
+
+
+@partial(jax.jit, static_argnames=("block_e", "use_kernel", "interpret"))
+def event_conv_batched(
+    vm: jax.Array,
+    queues: BatchedEventQueue,
+    kernel: jax.Array,
+    *,
+    block_e: int = 128,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched event-driven conv accumulation onto (Q, H, W, C) vm tiles.
+
+    ``queues`` must have a single leading dim Q matching ``vm``; the
+    (3, 3, C) kernel is shared by every queue.  One fused 2-D-grid
+    pallas_call (or the vmapped jnp oracle when ``use_kernel=False``)
+    processes all queues; the wrapper halo-pads, pads the event axis to
+    ``block_e``, and crops back.
+    """
+    if queues.coords.ndim != 3:
+        raise ValueError("event_conv_batched expects queues with one leading "
+                         f"dim, got coords shape {queues.coords.shape}")
+    pad = -queues.capacity % block_e
+    coords = jnp.pad(queues.coords, ((0, 0), (0, pad), (0, 0)))
+    valid = jnp.pad(queues.valid, ((0, 0), (0, pad)))
+    vm_p = jax.vmap(pad_vm)(vm)
+    if use_kernel:
+        out = event_conv_pallas_batched(vm_p, coords, valid, kernel,
+                                        block_e=block_e, interpret=interpret)
+    else:
+        out = event_conv_ref_batched(vm_p, coords, valid, kernel)
+    return jax.vmap(crop_vm)(out)

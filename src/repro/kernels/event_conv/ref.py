@@ -35,3 +35,16 @@ def event_conv_ref(vm_padded: jax.Array, coords: jax.Array, valid: jax.Array,
         return jax.lax.dynamic_update_slice(vm, patch, (i, j, 0))
 
     return jax.lax.fori_loop(0, coords.shape[0], body, vm_padded)
+
+
+def event_conv_ref_batched(vm_padded: jax.Array, coords: jax.Array,
+                           valid: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Oracle for the 2-D grid kernel: Q independent queue replays.
+
+    vm_padded: (Q, H+2, W+2, C); coords: (Q, E, 2); valid: (Q, E);
+    kernel: (3, 3, C) shared across queues.  Each queue's events are
+    applied sequentially (per-event saturation, same as the 1-queue
+    oracle); queues are independent, so vmap is exact.
+    """
+    return jax.vmap(event_conv_ref, in_axes=(0, 0, 0, None))(
+        vm_padded, coords, valid, kernel)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 class CompressedGrad(NamedTuple):
     indices: jax.Array  # (k,) int32 into the flattened tensor
@@ -88,7 +90,7 @@ def sparse_psum(c: CompressedGrad, mesh: Mesh, axis: str) -> jax.Array:
         dense = dense.at[all_idx.reshape(-1)].add(all_val.reshape(-1))
         return dense / n
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
         check_vma=False)(c.indices, c.values)
 

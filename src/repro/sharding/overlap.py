@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
+
 
 def psum_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str):
     """Row-parallel TP matmul: y = psum(x_shard @ w_shard).
@@ -32,9 +34,9 @@ def psum_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str):
     def body(xs, ws):
         return jax.lax.psum(xs @ ws, axis)
 
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(P(None, axis), P(axis, None)),
-                         out_specs=P())(x, w)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, axis), P(axis, None)),
+                     out_specs=P())(x, w)
 
 
 def ring_weight_gather_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str):
@@ -67,10 +69,10 @@ def ring_weight_gather_matmul(x: jax.Array, w: jax.Array, mesh: Mesh, axis: str)
 
         acc0 = jnp.zeros((x_blk.shape[0], w_blk.shape[1]),
                          jnp.promote_types(x_blk.dtype, w_blk.dtype))
-        acc0 = jax.lax.pvary(acc0, (axis,))  # mark device-varying for the carry
+        acc0 = pvary(acc0, (axis,))  # mark device-varying for the carry
         acc, _ = jax.lax.fori_loop(0, n, step, (acc0, w_blk))
         return acc.astype(x_blk.dtype)
 
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(P(axis, None), P(axis, None)),
-                         out_specs=P(axis, None))(x, w)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(axis, None)),
+                     out_specs=P(axis, None))(x, w)

@@ -1,0 +1,133 @@
+"""Deterministic stand-in for `hypothesis` when the real package is absent.
+
+The repo's property tests only use a narrow slice of the hypothesis API:
+``given``, ``settings``, ``assume`` and the ``integers`` / ``floats`` /
+``booleans`` / ``sampled_from`` strategies.  This module reimplements that
+slice as a plain example enumerator: boundary values first, then samples
+from a per-test seeded PRNG, so runs are reproducible and need no external
+dependency.  ``tests/conftest.py`` installs it under the name
+``hypothesis`` only when the real package cannot be imported — with
+hypothesis installed (e.g. in CI) this file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+__version__ = "0.0.0+fallback"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Abort the current example (not the test) when ``condition`` is falsy."""
+    if not condition:
+        raise _UnsatisfiedAssumption
+    return True
+
+
+class _Strategy:
+    """An example source: a few deterministic corners, then PRNG samples."""
+
+    def __init__(self, corners, sample):
+        self._corners = list(corners)
+        self._sample = sample
+
+    def examples(self, rng: random.Random, n: int):
+        out = self._corners[:n]
+        while len(out) < n:
+            out.append(self._sample(rng))
+        return out
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    mid = (min_value + max_value) // 2
+    return _Strategy(
+        corners=[min_value, max_value, mid],
+        sample=lambda rng: rng.randint(min_value, max_value),
+    )
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+    return _Strategy(
+        corners=[min_value, max_value, 0.5 * (min_value + max_value)],
+        sample=lambda rng: rng.uniform(min_value, max_value),
+    )
+
+
+def booleans() -> _Strategy:
+    return _Strategy(corners=[False, True], sample=lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(corners=elements[:2], sample=lambda rng: rng.choice(elements))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(corners=[value], sample=lambda _rng: value)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+strategies.just = just
+
+
+def settings(**kwargs):
+    """Attach example-count settings; works above or below ``@given``."""
+
+    def decorate(fn):
+        fn._fallback_settings = kwargs
+        return fn
+
+    return decorate
+
+
+def given(*strats):
+    """Run the wrapped test once per generated example tuple.
+
+    Strategy values fill the test's trailing positional parameters
+    (right-aligned, mirroring hypothesis), so ``self`` passes through.
+    """
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        kept = params[: len(params) - len(strats)]
+        # Strategy values bind to the TRAILING parameters (right-aligned,
+        # as in hypothesis) — by keyword, so pytest-parametrized kwargs on
+        # the earlier parameters cannot collide.
+        drawn_names = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None) or getattr(
+                fn, "_fallback_settings", {})
+            n = int(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            n = max(1, min(n, _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            columns = [s.examples(rng, n) for s in strats]
+            for values in zip(*columns):
+                try:
+                    fn(*args, **kwargs, **dict(zip(drawn_names, values)))
+                except _UnsatisfiedAssumption:
+                    continue
+
+        # pytest resolves fixtures from the signature (following
+        # __wrapped__); hide the strategy-supplied parameters so they are
+        # not mistaken for fixtures.
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate

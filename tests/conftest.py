@@ -1,0 +1,33 @@
+"""Test-session bootstrap: CPU backend pin + hypothesis fallback.
+
+* Pins JAX to the CPU platform before any test module imports jax, so the
+  suite behaves identically on TPU hosts, CI runners and laptops (all
+  Pallas kernels run in interpret mode on CPU).
+* If the real `hypothesis` package is unavailable (the container does not
+  ship it and installs are not allowed), installs the deterministic
+  fallback from ``_hypothesis_fallback.py`` under that name so the
+  property tests still collect and run.  CI installs real hypothesis and
+  takes priority automatically.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORM_NAME", "cpu")
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ModuleNotFoundError:
+    _path = Path(__file__).with_name("_hypothesis_fallback.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies

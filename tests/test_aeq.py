@@ -1,0 +1,142 @@
+"""AEQ properties (promised by core/aeq.py): compaction round-trip, the
+hazard-free interlaced read order, memory interlacing inverses, capacity
+calibration, and the fused batched builder behind the batched pipeline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aeq import (BatchedEventQueue, build_aeq, build_aeq_batched,
+                            calibrate_capacity, column_index, deinterlace,
+                            interlace, scatter_aeq)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRoundTrip:
+    @given(st.integers(2, 28), st.integers(2, 28), st.floats(0.0, 1.0),
+           st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_build_scatter_roundtrip(self, h, w, density, seed):
+        """With enough capacity, scatter(build(fmap)) == fmap exactly."""
+        rng = np.random.default_rng(seed)
+        fmap = jnp.asarray(rng.random((h, w)) < density)
+        q = build_aeq(fmap, capacity=h * w)
+        assert int(q.count) == int(fmap.sum())
+        np.testing.assert_array_equal(np.asarray(scatter_aeq(q, (h, w))),
+                                      np.asarray(fmap))
+
+    def test_overflow_drops_tail_events(self):
+        """A full queue silently drops, exactly like the BRAM queue."""
+        fmap = jnp.ones((8, 8), bool)
+        q = build_aeq(fmap, capacity=20)
+        assert int(q.valid.sum()) == 20
+        assert int(q.count) == 64  # count reports demand, not occupancy
+        back = scatter_aeq(q, (8, 8))
+        assert int(back.sum()) == 20
+
+
+class TestInterlacedOrder:
+    @given(st.integers(3, 24), st.integers(3, 24), st.floats(0.05, 0.8),
+           st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_emission_order_by_column(self, h, w, density, seed):
+        """Events come out column 0..8 (the paper's hazard-free order)."""
+        rng = np.random.default_rng(seed)
+        fmap = jnp.asarray(rng.random((h, w)) < density)
+        q = build_aeq(fmap, capacity=h * w)
+        coords = np.asarray(q.coords)[np.asarray(q.valid)]
+        cols = (coords[:, 0] % 3) * 3 + coords[:, 1] % 3
+        assert (np.diff(cols) >= 0).all()
+
+    @given(st.integers(3, 30), st.integers(3, 30), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_any_3x3_window_hits_each_column_once(self, h, w, seed):
+        """The 9-port invariant (paper Fig. 6) for a random window."""
+        rng = np.random.default_rng(seed)
+        i0 = int(rng.integers(0, h - 2))
+        j0 = int(rng.integers(0, w - 2))
+        ii, jj = np.meshgrid(np.arange(i0, i0 + 3), np.arange(j0, j0 + 3),
+                             indexing="ij")
+        cols = np.asarray(column_index(jnp.asarray(ii), jnp.asarray(jj)))
+        assert sorted(cols.ravel().tolist()) == list(range(9))
+
+
+class TestInterlacing:
+    @given(st.integers(1, 30), st.integers(1, 30), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_interlace_deinterlace_inverse(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        vm = jnp.asarray(rng.normal(size=(h, w)).astype(np.float32))
+        cols = interlace(vm)
+        assert cols.shape == (9, -(-h // 3), -(-w // 3))
+        np.testing.assert_array_equal(np.asarray(deinterlace(cols, (h, w))),
+                                      np.asarray(vm))
+
+
+class TestCalibration:
+    @given(st.integers(1, 200), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_monotone_in_percentile_and_margin(self, n, seed):
+        rng = np.random.default_rng(seed)
+        counts = rng.integers(0, 500, size=n)
+        caps_p = [calibrate_capacity(counts, percentile=p, margin=1.0, align=1)
+                  for p in (50.0, 90.0, 99.0, 100.0)]
+        assert caps_p == sorted(caps_p)
+        caps_m = [calibrate_capacity(counts, percentile=99.0, margin=m, align=1)
+                  for m in (1.0, 1.25, 2.0)]
+        assert caps_m == sorted(caps_m)
+
+    def test_alignment_and_floor(self):
+        assert calibrate_capacity([], align=16) == 16
+        cap = calibrate_capacity([5], percentile=100.0, margin=1.0, align=8)
+        assert cap == 8 and cap % 8 == 0
+        assert calibrate_capacity([0, 0], percentile=100.0, margin=1.0, align=4) == 4
+
+
+class TestBatchedBuilder:
+    @given(st.integers(2, 16), st.integers(2, 16), st.floats(0.0, 1.0),
+           st.integers(1, 6), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_batched_equals_vmapped_single(self, h, w, density, n, seed):
+        """The fused one-sort builder is bit-exact vs per-fmap compaction."""
+        rng = np.random.default_rng(seed)
+        fmaps = jnp.asarray(rng.random((n, h, w)) < density)
+        cap = max(1, (h * w) // 2)  # exercise the overflow path too
+        bq = build_aeq_batched(fmaps, cap)
+        vq = jax.vmap(lambda f: build_aeq(f, cap))(fmaps)
+        np.testing.assert_array_equal(np.asarray(bq.coords), np.asarray(vq.coords))
+        np.testing.assert_array_equal(np.asarray(bq.valid), np.asarray(vq.valid))
+        np.testing.assert_array_equal(np.asarray(bq.count), np.asarray(vq.count))
+
+    def test_multi_leading_dims_and_queue_at(self):
+        rng = np.random.default_rng(3)
+        fmaps = jnp.asarray(rng.random((2, 3, 4, 9, 7)) < 0.3)
+        bq = build_aeq_batched(fmaps, capacity=32)
+        assert isinstance(bq, BatchedEventQueue)
+        assert bq.coords.shape == (2, 3, 4, 32, 2)
+        assert bq.capacity == 32 and bq.num_queues == 24
+        single = build_aeq(fmaps[1, 2, 0], 32)
+        member = bq.queue_at((1, 2, 0))
+        np.testing.assert_array_equal(np.asarray(member.coords),
+                                      np.asarray(single.coords))
+        np.testing.assert_array_equal(np.asarray(member.valid),
+                                      np.asarray(single.valid))
+        assert int(member.count) == int(single.count)
+
+    def test_capacity_deeper_than_fmap_pads(self):
+        fmaps = jnp.ones((3, 4, 4), bool)
+        bq = build_aeq_batched(fmaps, capacity=40)
+        assert bq.coords.shape == (3, 40, 2)
+        assert int(bq.valid.sum()) == 3 * 16
+        np.testing.assert_array_equal(np.asarray(bq.coords[:, 16:]),
+                                      np.full((3, 24, 2), -1))
+
+    def test_interlaced_flag_matches_single(self):
+        rng = np.random.default_rng(9)
+        fmaps = jnp.asarray(rng.random((4, 10, 10)) < 0.4)
+        bq = build_aeq_batched(fmaps, 64, interlaced=False)
+        vq = jax.vmap(lambda f: build_aeq(f, 64, interlaced=False))(fmaps)
+        np.testing.assert_array_equal(np.asarray(bq.coords), np.asarray(vq.coords))

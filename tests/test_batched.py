@@ -1,0 +1,218 @@
+"""Batched event pipeline: bit-exactness vs the single-sample path.
+
+The batched subsystem (build_aeq_batched -> apply_events_batched /
+event_conv_pallas_batched -> run_conv_layer_batched -> snn_apply_batched)
+changes only the launch structure, never the per-sample schedule, so every
+result must be *bit-identical* to ``jax.vmap`` over the single-sample
+path — including the saturating integer datapaths and overfull queues.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CSNNConfig, ConvSpec, FCSpec, apply_events,
+                        apply_events_batched, build_aeq_batched, encode_input,
+                        init_params, pad_vm, run_conv_layer,
+                        run_conv_layer_batched, run_fc_head,
+                        run_fc_head_batched, snn_apply, snn_apply_batched,
+                        snn_apply_dense)
+from repro.kernels.event_conv.ops import event_conv_batched
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _batch_spikes(rng, b, t, h, w, c, density=0.2):
+    return jnp.asarray(rng.random((b, t, h, w, c)) < density)
+
+
+# ------------------------------------------------------- event application
+class TestApplyEventsBatched:
+    @given(st.integers(1, 5), st.integers(4, 14), st.integers(4, 14),
+           st.floats(0.0, 0.8), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_vmapped_apply_events(self, b, h, w, density, seed):
+        rng = np.random.default_rng(seed)
+        fmaps = jnp.asarray(rng.random((b, h, w)) < density)
+        q = build_aeq_batched(fmaps, capacity=h * w)
+        kernel = jnp.asarray(rng.normal(size=(3, 3, 3)).astype(np.float32))
+        vm0 = jax.vmap(pad_vm)(jnp.zeros((b, h, w, 3), jnp.float32))
+        got = apply_events_batched(vm0, q.coords, q.valid, q.count, kernel,
+                                   block=8)
+        want = jax.vmap(lambda vm, i: apply_events(vm, q.queue_at((i,)), kernel),
+                        in_axes=(0, 0))(vm0, jnp.arange(b))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_shared_early_exit_skips_nothing_valid(self):
+        """One full queue forces the whole batch through every block; one
+        empty queue must still come back untouched."""
+        fmaps = jnp.stack([jnp.ones((6, 6), bool), jnp.zeros((6, 6), bool)])
+        q = build_aeq_batched(fmaps, capacity=36)
+        kernel = jnp.ones((3, 3), jnp.float32)
+        vm0 = jax.vmap(pad_vm)(jnp.zeros((2, 6, 6), jnp.float32))
+        out = apply_events_batched(vm0, q.coords, q.valid, q.count, kernel,
+                                   block=8)
+        assert float(np.abs(np.asarray(out[1])).max()) == 0.0
+        assert float(np.asarray(out[0])[1:-1, 1:-1].min()) > 0.0
+
+    def test_int8_saturation_matches_single(self):
+        rng = np.random.default_rng(0)
+        fmaps = jnp.asarray(rng.random((3, 8, 8)) < 0.7)
+        q = build_aeq_batched(fmaps, capacity=64)
+        kernel = jnp.asarray(rng.integers(-90, 90, size=(3, 3, 2)), jnp.int8)
+        vm0 = jax.vmap(pad_vm)(jnp.zeros((3, 8, 8, 2), jnp.int8))
+        got = apply_events_batched(vm0, q.coords, q.valid, q.count, kernel)
+        want = jax.vmap(lambda vm, i: apply_events(vm, q.queue_at((i,)), kernel),
+                        in_axes=(0, 0))(vm0, jnp.arange(3))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------- pallas 2-D grid
+class TestEventConvBatchedKernel:
+    @pytest.mark.parametrize("dtype,seed", [(jnp.float32, 0), (jnp.int16, 1),
+                                            (jnp.int8, 2)])
+    def test_kernel_matches_oracle(self, dtype, seed):
+        rng = np.random.default_rng(seed)
+        Q, H, W, C = 4, 10, 12, 8
+        fmaps = jnp.asarray(rng.random((Q, H, W)) < 0.3)
+        queues = build_aeq_batched(fmaps, capacity=H * W)
+        if dtype == jnp.float32:
+            kernel = jnp.asarray(rng.normal(size=(3, 3, C)).astype(np.float32))
+            vm = jnp.asarray(rng.normal(size=(Q, H, W, C)).astype(np.float32))
+        else:
+            kernel = jnp.asarray(rng.integers(-20, 20, size=(3, 3, C)), dtype)
+            vm = jnp.asarray(rng.integers(-50, 50, size=(Q, H, W, C)), dtype)
+        got = event_conv_batched(vm, queues, kernel, block_e=32, use_kernel=True)
+        want = event_conv_batched(vm, queues, kernel, block_e=32, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_queue_count_mismatch_raises(self):
+        queues = build_aeq_batched(jnp.zeros((2, 4, 4), bool), 16)
+        with pytest.raises(ValueError, match="queue count mismatch"):
+            from repro.kernels.event_conv.kernel import event_conv_pallas_batched
+            event_conv_pallas_batched(jnp.zeros((3, 6, 6, 4), jnp.float32),
+                                      queues.coords, queues.valid,
+                                      jnp.zeros((3, 3, 4), jnp.float32),
+                                      block_e=16)
+
+
+# ------------------------------------------------------- layer + head
+class TestRunConvLayerBatched:
+    def _case(self, seed, b=3, t=3, h=8, w=8, cin=2, cout=4):
+        rng = np.random.default_rng(seed)
+        spikes = _batch_spikes(rng, b, t, h, w, cin)
+        k = jnp.asarray(rng.normal(size=(3, 3, cin, cout)).astype(np.float32) * 0.5)
+        bias = jnp.asarray(rng.normal(size=(cout,)).astype(np.float32) * 0.1)
+        return spikes, k, bias
+
+    @pytest.mark.parametrize("pool", [None, 3])
+    @pytest.mark.parametrize("channel_block", [1, 2])
+    def test_matches_vmapped_layer(self, pool, channel_block):
+        spikes, k, bias = self._case(0)
+        got, st_b = run_conv_layer_batched(spikes, k, bias, 1.0, capacity=64,
+                                           pool=pool, channel_block=channel_block)
+        want, st_v = jax.vmap(
+            lambda s: run_conv_layer(s, k, bias, 1.0, capacity=64, pool=pool,
+                                     channel_block=channel_block))(spikes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(st_b.in_spike_counts),
+                                      np.asarray(st_v.in_spike_counts))
+        np.testing.assert_array_equal(np.asarray(st_b.out_spike_counts),
+                                      np.asarray(st_v.out_spike_counts))
+        np.testing.assert_allclose(np.asarray(st_b.in_sparsity),
+                                   np.asarray(st_v.in_sparsity), rtol=1e-6)
+
+    def test_pallas_backend_matches_jax(self):
+        spikes, k, bias = self._case(1)
+        out_j, _ = run_conv_layer_batched(spikes, k, bias, 1.0, capacity=64,
+                                          backend="jax")
+        out_p, _ = run_conv_layer_batched(spikes, k, bias, 1.0, capacity=64,
+                                          backend="pallas")
+        np.testing.assert_array_equal(np.asarray(out_j), np.asarray(out_p))
+
+    def test_fc_head_batched(self):
+        rng = np.random.default_rng(2)
+        spikes = jnp.asarray(rng.random((3, 4, 3, 3, 2)) < 0.5)
+        w = jnp.asarray(rng.normal(size=(18, 5)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(5,)).astype(np.float32))
+        got = run_fc_head_batched(spikes, w, b)
+        want = jax.vmap(lambda s: run_fc_head(s, w, b))(spikes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------- end to end
+class TestSnnApplyBatched:
+    def _smoke(self, seed=0, b=4):
+        cfg = CSNNConfig(input_hw=(10, 10),
+                         layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
+                         t_steps=4)
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        imgs = jnp.asarray(np.random.default_rng(seed)
+                           .random((b, 10, 10, 1)).astype(np.float32))
+        return cfg, params, encode_input(imgs, cfg)
+
+    def test_bit_exact_vs_vmap(self):
+        cfg, params, sp = self._smoke()
+        got = snn_apply_batched(params, sp, cfg, capacity=100, collect_stats=False)
+        want = jax.vmap(lambda s: snn_apply(params, s, cfg, capacity=100,
+                                            collect_stats=False))(sp)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_agrees_with_dense_oracle(self):
+        cfg, params, sp = self._smoke(1)
+        got = snn_apply_batched(params, sp, cfg, capacity=100, collect_stats=False)
+        dense = jax.vmap(lambda s: snn_apply_dense(params, s, cfg))(sp)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("channel_block", [2, 4])
+    def test_channel_block_variants(self, channel_block):
+        cfg, params, sp = self._smoke(2)
+        got = snn_apply_batched(params, sp, cfg, capacity=100,
+                                channel_block=channel_block, collect_stats=False)
+        want = jax.vmap(lambda s: snn_apply(
+            params, s, cfg, capacity=100, channel_block=channel_block,
+            collect_stats=False))(sp)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("sat_bits", [8, 16])
+    def test_sat_bits_variants(self, sat_bits):
+        cfg, params, sp = self._smoke(3)
+        qparams = jax.tree.map(
+            lambda x: jnp.clip(jnp.round(x * 16), -100, 100)
+            .astype(jnp.int8 if sat_bits == 8 else jnp.int16), params)
+        got = snn_apply_batched(qparams, sp, cfg, capacity=100,
+                                sat_bits=sat_bits, collect_stats=False)
+        want = jax.vmap(lambda s: snn_apply(qparams, s, cfg, capacity=100,
+                                            sat_bits=sat_bits,
+                                            collect_stats=False))(sp)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_capacity_overflow_drops_like_hardware(self):
+        """An undersized queue drops the same tail events in both paths:
+        results stay bit-identical (and differ from full capacity)."""
+        cfg, params, sp = self._smoke(4)
+        got = snn_apply_batched(params, sp, cfg, capacity=8, collect_stats=False)
+        want = jax.vmap(lambda s: snn_apply(params, s, cfg, capacity=8,
+                                            collect_stats=False))(sp)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        full = snn_apply_batched(params, sp, cfg, capacity=100,
+                                 collect_stats=False)
+        assert not np.array_equal(np.asarray(got), np.asarray(full))
+
+    def test_paper_network_acceptance(self):
+        """28x28-32C3-32C3-P3-10C3-F10, T=5, B=8: batched == vmap, bit-exact
+        (the PR's acceptance criterion)."""
+        cfg = CSNNConfig()  # paper defaults
+        params = init_params(jax.random.PRNGKey(7), cfg)
+        imgs = jnp.asarray(np.random.default_rng(7)
+                           .random((8, 28, 28, 1)).astype(np.float32))
+        sp = encode_input(imgs, cfg)
+        got = snn_apply_batched(params, sp, cfg, capacity=256, channel_block=8,
+                                collect_stats=False)
+        want = jax.vmap(lambda s: snn_apply(params, s, cfg, capacity=256,
+                                            channel_block=8,
+                                            collect_stats=False))(sp)
+        assert got.shape == (8, 10)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

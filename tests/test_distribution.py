@@ -52,7 +52,10 @@ class TestShardingRules:
         assert spec == jax.sharding.PartitionSpec("data")
 
     def test_resolve_no_axis_reuse(self):
-        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+            mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+        except TypeError:  # jax 0.4.x: tuple of (name, size) pairs
+            mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
         rules = {"a": ("model",), "b": ("model",)}
         spec = resolve(("a", "b"), (4, 4), rules, mesh)
         # second use of "model" must be dropped
@@ -176,6 +179,7 @@ class TestMultiDevice:
         out = run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.sharding.compression import compress_topk, decompress
         mesh = jax.make_mesh((8,), ("data",))
 
@@ -189,8 +193,8 @@ class TestMultiDevice:
             ref = jax.lax.pmean(g, "data")
             return jnp.abs(dense - ref).max()
 
-        diff = jax.shard_map(body, mesh=mesh, in_specs=(), out_specs=P(),
-                             check_vma=False)()
+        diff = shard_map(body, mesh=mesh, in_specs=(), out_specs=P(),
+                         check_vma=False)()
         assert float(diff.max()) < 1e-6, float(diff.max())
         print("SPARSE_OK")
         """)
@@ -271,6 +275,7 @@ class TestPipelineAndQuantizedCollectives:
         out = run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.sharding.compression import quantized_pmean
         mesh = jax.make_mesh((8,), ("data",))
 
@@ -283,8 +288,8 @@ class TestPipelineAndQuantizedCollectives:
 
         errs = []
         for s in range(5):
-            e = jax.shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P(),
-                              check_vma=False)(jax.random.PRNGKey(s))
+            e = shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                          check_vma=False)(jax.random.PRNGKey(s))
             errs.append(float(e.max()))
         assert np.mean(errs) < 0.2, errs   # int8 noise, not bias
         print("QPMEAN_OK", [round(e, 3) for e in errs])
