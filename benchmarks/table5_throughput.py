@@ -11,9 +11,15 @@ time is flat.
 Beyond-paper rows: the batched event pipeline (``snn_apply_batched``) vs
 ``vmap`` over the single-sample path vs the dense baseline — the batched
 rows are the serving configuration and must be at least as fast per
-sample as vmap (amortized queue compaction + batch-wide early exit).
+sample as vmap (amortized queue compaction + batch-wide early exit) —
+plus the per-layer-planned pipeline (``plan_network`` capacities, the
+padded-slot reduction recorded in the derived column) and the async
+micro-batching serving engine (``serve.csnn_engine``, requests submitted
+one at a time and flushed on batch/deadline thresholds).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +28,8 @@ import numpy as np
 from repro.core.aeq import calibrate_capacity
 from repro.core.csnn import (encode_input, snn_apply, snn_apply_batched,
                              snn_apply_dense)
+from repro.core.plan import plan_network
+from repro.serve.csnn_engine import CSNNEngine, CSNNServeConfig
 
 from .common import emit, timeit, trained_csnn
 
@@ -73,6 +81,32 @@ def main():
     emit("table5/batched_pipeline", us_batched,
          f"capacity={cap};batch={batch};vs_vmap={us_vmap / us_batched:.2f}x;"
          f"vs_dense={us_dense / us_batched:.2f}x")
+
+    # per-layer plan: same calibrated request, capacities capped per layer
+    plan = plan_network(cfg, capacity=cap, channel_block=8, batch_tile=batch)
+    shared = plan_network(cfg, capacity=cap, channel_block=8, per_layer=False)
+    planned_fn = jax.jit(lambda s: snn_apply_batched(
+        params, s, cfg, plan, collect_stats=False))
+    us_planned = timeit(planned_fn, spikes) / batch
+    emit("table5/planned_per_layer", us_planned,
+         f"slots={plan.total_event_slots}_vs_shared={shared.total_event_slots};"
+         f"vs_batched={us_batched / us_planned:.2f}x")
+
+    # async serving engine: requests submitted one at a time, flushed on
+    # batch/deadline thresholds; compile excluded via warmup
+    engine = CSNNEngine(params, cfg, plan,
+                        CSNNServeConfig(max_batch=batch, max_delay_ms=20.0))
+    engine.warmup()
+    reqs = list(imgs)
+    engine.run_requests(reqs)  # engine-loop warmup pass
+    pre = dict(engine.stats)   # stats accumulate; report the timed run only
+    t0 = time.perf_counter()
+    engine.run_requests(reqs)
+    us_engine = 1e6 * (time.perf_counter() - t0) / batch
+    emit("table5/async_engine", us_engine,
+         f"batch={batch};tile={plan.batch_tile};"
+         f"flushes_full={engine.stats['flushes_full'] - pre['flushes_full']};"
+         f"vs_batched={us_batched / us_engine:.2f}x")
 
 
 if __name__ == "__main__":

@@ -179,6 +179,22 @@ def calibrate_capacity(spike_counts, *, percentile: float = 99.9, margin: float 
     return cap
 
 
+def calibrate_capacities(per_layer_counts, *, percentile: float = 99.9,
+                         margin: float = 1.25, align: int = 8) -> list[int]:
+    """Per-layer ``calibrate_capacity``: one queue depth per conv layer.
+
+    ``per_layer_counts`` is a sequence with one spike-count array per
+    layer (e.g. ``[st.in_spike_counts for st in stats]`` from a
+    calibration run of ``snn_apply_batched``).  This is the two-tier
+    adaptive capacity from the ROADMAP: each layer's queues are sized from
+    *its own* distribution instead of one network-wide worst case — feed
+    the result to ``plan_network(cfg, capacity=...)`` (which additionally
+    caps each depth at the layer's H·W).
+    """
+    return [calibrate_capacity(c, percentile=percentile, margin=margin,
+                               align=align) for c in per_layer_counts]
+
+
 # ---------------------------------------------------------------------------
 # Memory interlacing (paper Fig. 6) — functional model.
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """CSNN model assembly: the paper's 28x28-32C3-32C3-P3-10C3-F10 network.
 
-Two execution paths share one parameter pytree:
+The execution paths share one parameter pytree:
 
 * ``ann_apply``     — the clamped-ReLU CNN used for training (paper
   Sec. VII trains a conventional CNN and converts it);
@@ -9,7 +9,16 @@ Two execution paths share one parameter pytree:
 * ``snn_apply_batched`` — the same inference for a whole sample batch
   with queue construction and kernel launches amortized across it
   (bit-exact vs ``vmap(snn_apply)``; the serving entry point);
+* ``snn_apply_sharded`` — ``snn_apply_batched`` shard_mapped over the
+  batch axis of a device mesh (queues are per-sample-independent, so the
+  shards never communicate; bit-exact vs the unsharded batched path);
 * ``snn_apply_dense`` — frame-based spiking oracle (dense baseline).
+
+Every entry point consumes a :class:`~repro.core.plan.NetworkPlan` — the
+static per-layer resource plan (queue capacities, channel/event blocks,
+membrane tiles) derived once by ``plan_network``.  The loose
+``capacity=``/``channel_block=`` kwargs remain as deprecation shims that
+build an equivalent plan on the fly (bit-exact; tests/test_plan.py).
 
 Parameters are plain dicts of jnp arrays; layer specs are tiny frozen
 dataclasses so a config file can describe any CSNN in one line.
@@ -23,8 +32,10 @@ import jax
 import jax.numpy as jnp
 
 from .encoding import mttfs_thresholds, multi_threshold_encode
-from .scheduler import (LayerStats, run_conv_layer, run_conv_layer_batched,
-                        run_conv_layer_dense, run_fc_head, run_fc_head_batched)
+from .plan import NetworkPlan, plan_network
+from .scheduler import (LayerStats, run_conv_layer_batched_planned,
+                        run_conv_layer_dense, run_conv_layer_planned,
+                        run_fc_head, run_fc_head_batched)
 
 
 @dataclass(frozen=True)
@@ -112,10 +123,26 @@ def encode_input(images: jax.Array, cfg: CSNNConfig) -> jax.Array:
     return jax.vmap(enc)(images)
 
 
+def _resolve_plan(
+    cfg: CSNNConfig,
+    plan: Optional[NetworkPlan],
+    capacity: int | Sequence[int],
+    channel_block: int,
+    sat_bits: Optional[int],
+) -> NetworkPlan:
+    """Deprecation-shim glue: build a plan from loose kwargs when the
+    caller did not pass one, else validate the given plan against cfg."""
+    if plan is None:
+        return plan_network(cfg, capacity=capacity,
+                            channel_block=channel_block, sat_bits=sat_bits)
+    return plan.validate(cfg)
+
+
 def snn_apply(
     params: dict,
     in_spikes: jax.Array,
     cfg: CSNNConfig,
+    plan: Optional[NetworkPlan] = None,
     *,
     capacity: int | Sequence[int] = 256,
     channel_block: int = 1,
@@ -125,20 +152,19 @@ def snn_apply(
     """Event-driven m-TTFS inference for ONE sample.
 
     in_spikes: (T, H, W, 1) bool.  Returns (logits, [LayerStats, ...]).
-    ``capacity`` may be a single int or one per conv layer (calibrated).
-    vmap over samples for batching; the paper's xP parallelism sweep maps
-    to batching + channel_block.
+    ``plan`` carries the per-layer resource sizing (build it once with
+    ``plan_network``); the ``capacity``/``channel_block``/``sat_bits``
+    kwargs are the deprecated shim spelling and are ignored when a plan
+    is given.  vmap over samples for batching; the paper's xP parallelism
+    sweep maps to batching + channel_block.
     """
-    conv_specs = [s for s in cfg.layers if isinstance(s, ConvSpec)]
-    caps = ([capacity] * len(conv_specs) if isinstance(capacity, int) else list(capacity))
-    vm_dtype = {None: jnp.float32, 8: jnp.int8, 16: jnp.int16}[sat_bits]
+    plan = _resolve_plan(cfg, plan, capacity, channel_block, sat_bits)
     x, stats, ci = in_spikes, [], 0
     for idx, spec in enumerate(cfg.layers):
         if isinstance(spec, ConvSpec):
             p = params[f"conv{idx}"]
-            x, st = run_conv_layer(
-                x, p["w"], p["b"], cfg.v_t, capacity=caps[ci], pool=spec.pool,
-                channel_block=channel_block, sat_bits=sat_bits, vm_dtype=vm_dtype)
+            x, st = run_conv_layer_planned(x, p["w"], p["b"], cfg.v_t,
+                                           plan.layers[ci])
             stats.append(st)
             ci += 1
         else:
@@ -151,6 +177,7 @@ def snn_apply_batched(
     params: dict,
     in_spikes: jax.Array,
     cfg: CSNNConfig,
+    plan: Optional[NetworkPlan] = None,
     *,
     capacity: int | Sequence[int] = 256,
     channel_block: int = 1,
@@ -167,24 +194,110 @@ def snn_apply_batched(
     compaction over (B, T, C_in) and ONE conv-unit launch per
     (t, c_in, channel-block) step feed the whole batch, and the
     self-timed early exit is shared batch-wide.  This is the serving
-    path (launch/serve.py) and the batched row of Table V.
+    path (launch/serve.py, serve/csnn_engine.py) and the batched row of
+    Table V.  ``plan`` carries the per-layer sizing; the loose kwargs are
+    the deprecated shim spelling, ignored when a plan is given.
     """
-    conv_specs = [s for s in cfg.layers if isinstance(s, ConvSpec)]
-    caps = ([capacity] * len(conv_specs) if isinstance(capacity, int) else list(capacity))
-    vm_dtype = {None: jnp.float32, 8: jnp.int8, 16: jnp.int16}[sat_bits]
-    x, stats, ci = in_spikes, [], 0
+    plan = _resolve_plan(cfg, plan, capacity, channel_block, sat_bits)
+    x, stats = _conv_stack_batched(params, in_spikes, cfg, plan, backend)
+    logits = _fc_head_batched(params, x, cfg)
+    return (logits, stats) if collect_stats else logits
+
+
+def _conv_stack_batched(params: dict, x: jax.Array, cfg: CSNNConfig,
+                        plan: NetworkPlan, backend: str):
+    """The event-driven conv layers of the batched pipeline (everything up
+    to the classification unit).  Split out so ``snn_apply_sharded`` can
+    run it per shard — it is per-sample exact for any leading batch size —
+    while the FC head matmul runs once on the gathered batch (matmul
+    reduction order depends on the contraction shape, so the head must see
+    the same (B, D) as the unsharded path to stay bit-exact)."""
+    stats, ci = [], 0
     for idx, spec in enumerate(cfg.layers):
         if isinstance(spec, ConvSpec):
             p = params[f"conv{idx}"]
-            x, st = run_conv_layer_batched(
-                x, p["w"], p["b"], cfg.v_t, capacity=caps[ci], pool=spec.pool,
-                channel_block=channel_block, sat_bits=sat_bits,
-                vm_dtype=vm_dtype, backend=backend)
+            x, st = run_conv_layer_batched_planned(
+                x, p["w"], p["b"], cfg.v_t, plan.layers[ci], backend=backend)
             stats.append(st)
             ci += 1
-        else:
+    return x, stats
+
+
+def _fc_head_batched(params: dict, x: jax.Array, cfg: CSNNConfig) -> jax.Array:
+    logits = None
+    for idx, spec in enumerate(cfg.layers):
+        if not isinstance(spec, ConvSpec):
             p = params[f"fc{idx}"]
+            # last head wins, matching snn_apply's per-layer loop exactly
             logits = run_fc_head_batched(x, p["w"], p["b"])
+    if logits is None:
+        raise ValueError("cfg has no FC head layer")
+    return logits
+
+
+def snn_apply_sharded(
+    params: dict,
+    in_spikes: jax.Array,
+    cfg: CSNNConfig,
+    plan: Optional[NetworkPlan] = None,
+    *,
+    mesh=None,
+    capacity: int | Sequence[int] = 256,
+    channel_block: int = 1,
+    sat_bits: Optional[int] = None,
+    collect_stats: bool = False,
+    backend: str = "jax",
+):
+    """``snn_apply_batched`` sharded over the batch axis of a device mesh.
+
+    in_spikes: (B, T, H, W, 1) bool with B divisible by the mesh's
+    ``plan.batch_axis`` size.  The event queues are per-sample-independent
+    and the early-exit bound only ever *skips invalid slots*, so each
+    device runs the event-driven conv stack on its B/n shard with zero
+    communication; the final spike maps (tiny: T x H' x W' x C_out bools)
+    are gathered and the classification head runs once on the full batch
+    — the head matmul must see the same (B, D) contraction as the
+    unsharded path because XLA's dot reduction order is shape-dependent.
+    The gathered logits are bit-exact vs ``snn_apply_batched``
+    (tests/test_sharded.py; ISSUE 3 acceptance).
+
+    ``mesh`` defaults to a 1-D mesh over all local devices
+    (``sharding.specs.batch_mesh``).  Validated on the forced-host-device
+    CPU mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.sharding.specs import batch_mesh
+
+    plan = _resolve_plan(cfg, plan, capacity, channel_block, sat_bits)
+    axis = plan.batch_axis
+    if mesh is None:
+        mesh = batch_mesh(axis=axis)
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh {mesh.shape} lacks the plan's batch axis "
+                         f"{axis!r}")
+    n_dev = mesh.shape[axis]
+    b = in_spikes.shape[0]
+    if b % n_dev != 0:
+        raise ValueError(f"batch {b} does not divide over {n_dev} devices")
+
+    def body(p, sp):
+        return _conv_stack_batched(p, sp, cfg, plan, backend)
+
+    n_conv = len(plan.layers)
+    out_specs = (P(axis), [LayerStats(P(axis), P(axis), P(axis), P())] * n_conv)
+    # check_vma off: per-shard constants (event_block) come back replicated
+    # from device-varying inputs, which strict vma tracking rejects.
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), P(axis)),
+                   out_specs=out_specs, check_vma=False)
+    x, stats = fn(params, in_spikes)
+    # Gather the (still batch-sharded) spike maps onto one device before
+    # the head: a dot over a row-sharded operand would run one-row-per-
+    # device matmuls, whose reduction order differs from the unsharded
+    # (B, D) contraction in the last bit.
+    x = jax.device_put(x, mesh.devices.flatten()[0])
+    logits = _fc_head_batched(params, x, cfg)
     return (logits, stats) if collect_stats else logits
 
 

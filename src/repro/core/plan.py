@@ -1,0 +1,253 @@
+"""Plan/execute split for the event pipeline (paper Sec. IV-V design flow).
+
+The accelerator works because every resource is sized *per layer at design
+time* — queue depths, PE tiling and interlaced membrane RAMs are static
+while the spike stream is dynamic.  This module is the TPU analogue of
+that design step: ``plan_network`` walks a ``CSNNConfig`` once and derives
+a frozen :class:`LayerPlan` per conv layer (padded queue capacity, channel
+block, event block, membrane-tile shape), plus network-wide serving knobs
+(batch tile, batch mesh axis) on the :class:`NetworkPlan`.  The runtime
+(``scheduler.run_conv_layer_planned`` / ``csnn.snn_apply*``) then only
+executes plans; it never sizes anything.
+
+Sizing rules (all static, all pure functions of geometry + calibration):
+
+* **capacity** — the effective AEQ depth is ``min(pad64(requested), H·W)``:
+  padded to a 64-multiple so event blocks tile evenly (the extra slots
+  carry ``valid=False``), but never deeper than the feature map itself —
+  a queue can hold at most H·W events, so capping there drops nothing and
+  is what removes the padded-slot waste of a single shared capacity.
+  When per-layer spike-count ``stats`` are given, the requested depth
+  comes from ``aeq.calibrate_capacity`` per layer (BRAM sizing analogue).
+* **channel_block** — snapped to a divisor of C_out (``snap_divisor``).
+* **block_e** — autotuned from the capacity and the VMEM budget
+  (``kernels.event_conv.ops.autotune_block_e``) unless pinned.
+* **vm_tile** — the (H+2, W+2, channel_block) halo-padded MemPot tile
+  held VMEM-resident per conv-unit launch.
+
+Every rule only ever *lowers* the effective queue depth to the point
+where nothing can be dropped (or keeps the requested truncation depth),
+so planned execution is bit-exact vs the legacy shared-capacity kwargs —
+the deprecation shims in scheduler.py/csnn.py rely on this.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.kernels.event_conv.ops import autotune_block_e, snap_divisor
+
+from .aeq import calibrate_capacity
+
+_VM_DTYPES = {None: "float32", 8: "int8", 16: "int16"}
+
+
+def pad_capacity(capacity: int) -> int:
+    """Queue depth padded to a multiple of 64 so the Pallas event-block
+    grid divides evenly (the extra slots carry valid=False).  Depths <= 64
+    are kept as-is — identical rounding in every path is part of the
+    bit-exactness contract (overflow must truncate identically)."""
+    return -(-capacity // 64) * 64 if capacity > 64 else capacity
+
+
+def effective_capacity(requested: int, hw: int) -> int:
+    """Effective AEQ depth: padded to 64-multiples, capped at the fmap
+    size.  The cap never changes results — a (H, W) fmap holds at most
+    H·W events, so truncation depth stays ``min(pad64(requested), hw)``
+    in the legacy path and here alike."""
+    return min(pad_capacity(requested), hw)
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """Static per-layer resource plan (the design-time sizing record).
+
+    One instance per conv layer; everything the scheduler needs to execute
+    the layer without sizing decisions at trace time.
+    """
+
+    index: int                    # position in cfg.layers
+    name: str                     # parameter key, e.g. "conv0"
+    in_hw: tuple[int, int]        # input fmap geometry (pre-conv)
+    out_hw: tuple[int, int]       # output geometry (post-pool)
+    c_in: int
+    c_out: int
+    pool: Optional[int]           # OR-max-pool window (None = no pool)
+    capacity: int                 # effective AEQ depth per (t, c_in) queue
+    channel_block: int            # output channels per MemPot tile
+    block_e: int                  # event-block size (divides capacity)
+    vm_tile: tuple[int, int, int]  # halo-padded MemPot tile (H+2, W+2, cb)
+    sat_bits: Optional[int] = None  # 8/16-bit saturating datapath, None=f32
+
+    @property
+    def vm_dtype(self):
+        import jax.numpy as jnp
+        return jnp.dtype(_VM_DTYPES[self.sat_bits])
+
+    @property
+    def event_slots(self) -> int:
+        """Padded queue slots allocated per time step (all C_in queues)."""
+        return self.capacity * self.c_in
+
+    def __repr__(self) -> str:
+        h, w = self.in_hw
+        oh, ow = self.out_hw
+        pool = f" pool{self.pool}" if self.pool else ""
+        return (f"LayerPlan({self.name}: {h}x{w}x{self.c_in} -> "
+                f"{oh}x{ow}x{self.c_out}{pool}, cap={self.capacity}, "
+                f"cb={self.channel_block}, block_e={self.block_e}, "
+                f"vm={self.vm_tile}, {_VM_DTYPES[self.sat_bits]})")
+
+
+@dataclass(frozen=True)
+class NetworkPlan:
+    """Per-layer plans plus the network-wide serving/sharding knobs."""
+
+    layers: tuple[LayerPlan, ...]   # one per conv layer, in network order
+    t_steps: int
+    batch_tile: int = 8             # serving engine pads batches to this
+    batch_axis: str = "batch"       # mesh axis snn_apply_sharded shards over
+
+    @property
+    def total_event_slots(self) -> int:
+        """Padded queue slots allocated over the whole T-step inference —
+        the figure the per-layer capacities strictly reduce vs a single
+        shared capacity (ISSUE 3 acceptance)."""
+        return self.t_steps * sum(lp.event_slots for lp in self.layers)
+
+    def layer(self, name: str) -> LayerPlan:
+        for lp in self.layers:
+            if lp.name == name:
+                return lp
+        raise KeyError(name)
+
+    def validate(self, cfg) -> "NetworkPlan":
+        """Check the plan matches ``cfg`` geometry; returns self."""
+        from .csnn import ConvSpec, conv_out_hw
+        conv_specs = [(i, s) for i, s in enumerate(cfg.layers)
+                      if isinstance(s, ConvSpec)]
+        if len(conv_specs) != len(self.layers):
+            raise ValueError(
+                f"plan has {len(self.layers)} conv layers, cfg has "
+                f"{len(conv_specs)}")
+        if self.t_steps != cfg.t_steps:
+            raise ValueError(
+                f"plan t_steps={self.t_steps} != cfg t_steps={cfg.t_steps}")
+        hw, c_in = tuple(cfg.input_hw), 1
+        for lp, (idx, spec) in zip(self.layers, conv_specs):
+            if lp.in_hw != hw or lp.c_in != c_in or lp.c_out != spec.channels:
+                raise ValueError(f"{lp!r} does not match cfg layer {idx} "
+                                 f"(in_hw={hw}, c_in={c_in}, "
+                                 f"c_out={spec.channels})")
+            hw, c_in = conv_out_hw(hw, spec), spec.channels
+        return self
+
+    def __repr__(self) -> str:
+        lines = [f"NetworkPlan(T={self.t_steps}, batch_tile={self.batch_tile}, "
+                 f"batch_axis={self.batch_axis!r}, "
+                 f"total_event_slots={self.total_event_slots})"]
+        lines += [f"  {lp!r}" for lp in self.layers]
+        return "\n".join(lines)
+
+
+def plan_conv_layer(
+    index: int,
+    name: str,
+    in_hw: tuple[int, int],
+    c_in: int,
+    c_out: int,
+    *,
+    capacity: int,
+    pool: Optional[int] = None,
+    channel_block: int = 1,
+    block_e: Optional[int] = None,
+    sat_bits: Optional[int] = None,
+    per_layer: bool = True,
+    batch_tile: int = 1,
+    vmem_budget: Optional[int] = None,
+) -> LayerPlan:
+    """Derive one conv layer's plan from its geometry.
+
+    ``batch_tile`` models the batched path's residency for the block_e
+    autotuner — the MemPot stack is (B, H+2, W+2, cb), B tiles resident
+    at once, not one.  ``per_layer=False`` reproduces the legacy
+    shared-capacity sizing (queue arrays padded to the shared depth
+    regardless of fmap size) — kept as the baseline the per-layer plans
+    are measured against.
+    """
+    h, w = in_hw
+    cap = (effective_capacity(capacity, h * w) if per_layer
+           else pad_capacity(capacity))
+    cb = snap_divisor(c_out, channel_block)
+    vm_tile = (h + 2, w + 2, cb)
+    vm_bytes = {None: 4, 8: 1, 16: 2}[sat_bits]
+    if block_e is None:
+        kwargs = {"vmem_budget": vmem_budget} if vmem_budget else {}
+        be = autotune_block_e(cap, (max(batch_tile, 1),) + vm_tile,
+                              vm_bytes=vm_bytes, **kwargs)
+    else:
+        be = snap_divisor(cap, block_e)
+    if pool:
+        out_hw = (-(-h // pool), -(-w // pool))
+    else:
+        out_hw = (h, w)
+    return LayerPlan(index=index, name=name, in_hw=in_hw, out_hw=out_hw,
+                     c_in=c_in, c_out=c_out, pool=pool, capacity=cap,
+                     channel_block=cb, block_e=be, vm_tile=vm_tile,
+                     sat_bits=sat_bits)
+
+
+def plan_network(
+    cfg,
+    *,
+    capacity: int | Sequence[int] = 256,
+    channel_block: int | Sequence[int] = 1,
+    block_e: Optional[int] = None,
+    sat_bits: Optional[int] = None,
+    stats: Optional[Sequence] = None,
+    percentile: float = 99.9,
+    margin: float = 1.25,
+    batch_tile: int = 8,
+    batch_axis: str = "batch",
+    per_layer: bool = True,
+    vmem_budget: Optional[int] = None,
+) -> NetworkPlan:
+    """Derive a :class:`NetworkPlan` from a ``CSNNConfig``.
+
+    ``capacity``/``channel_block`` may be a single value or one per conv
+    layer.  When per-layer spike-count ``stats`` are given (anything
+    ``aeq.calibrate_capacity`` accepts, e.g. ``LayerStats.in_spike_counts``
+    from a calibration run), the requested capacity of each layer is
+    calibrated from its own distribution instead — the two-tier adaptive
+    capacity from the ROADMAP.  ``per_layer=False`` keeps the legacy
+    shared-capacity sizing (the baseline).
+    """
+    from .csnn import ConvSpec, conv_out_hw
+    conv_specs = [(i, s) for i, s in enumerate(cfg.layers)
+                  if isinstance(s, ConvSpec)]
+    n = len(conv_specs)
+    caps = list(capacity) if not isinstance(capacity, int) else [capacity] * n
+    cbs = (list(channel_block) if not isinstance(channel_block, int)
+           else [channel_block] * n)
+    if len(caps) != n or len(cbs) != n:
+        raise ValueError(f"need one capacity/channel_block per conv layer "
+                         f"({n}), got {len(caps)}/{len(cbs)}")
+    if stats is not None:
+        if len(stats) != n:
+            raise ValueError(f"need one stats entry per conv layer ({n}), "
+                             f"got {len(stats)}")
+        caps = [calibrate_capacity(np.asarray(s), percentile=percentile,
+                                   margin=margin, align=8) for s in stats]
+
+    plans, hw, c_in = [], tuple(cfg.input_hw), 1
+    for ci, (idx, spec) in enumerate(conv_specs):
+        plans.append(plan_conv_layer(
+            idx, f"conv{idx}", hw, c_in, spec.channels, capacity=caps[ci],
+            pool=spec.pool, channel_block=cbs[ci], block_e=block_e,
+            sat_bits=sat_bits, per_layer=per_layer, batch_tile=batch_tile,
+            vmem_budget=vmem_budget))
+        hw, c_in = conv_out_hw(hw, spec), spec.channels
+    return NetworkPlan(layers=tuple(plans), t_steps=cfg.t_steps,
+                       batch_tile=batch_tile, batch_axis=batch_axis)

@@ -15,13 +15,21 @@ paper's schedule exactly; larger blocks are the beyond-paper throughput
 knob (benchmarks/table1_parallelism.py sweeps it, the analogue of the
 paper's xP parallelization sweep).
 
-``run_conv_layer_batched`` extends Algorithm 1 to a sample batch: the
-channel-multiplexed schedule is unchanged, but all B samples' queues for
-a given (t, c_in) are built in ONE fused compaction (``build_aeq_batched``)
-and consumed by ONE kernel launch (``event_conv_pallas_batched`` /
-``apply_events_batched``), with the self-timed early exit shared across
-the batch.  MemPot becomes a (B, H+2, W+2, block) stack of tiles.
-Bit-exact vs ``vmap`` over the single-sample path (tests/test_batched.py).
+``run_conv_layer_batched_planned`` extends Algorithm 1 to a sample batch:
+the channel-multiplexed schedule is unchanged, but all B samples' queues
+for a given (t, c_in) are built in ONE fused compaction
+(``build_aeq_batched``) and consumed by ONE kernel launch
+(``event_conv_pallas_batched`` / ``apply_events_batched``), with the
+self-timed early exit shared across the batch.  MemPot becomes a
+(B, H+2, W+2, block) stack of tiles.  Bit-exact vs ``vmap`` over the
+single-sample path (tests/test_batched.py).
+
+Plan/execute split: the ``*_planned`` runners are the real implementation
+— all resource sizing (queue depth, channel block, event block) lives in
+a static :class:`~repro.core.plan.LayerPlan` derived once per network by
+``plan_network``.  The legacy kwargs signatures remain as deprecation
+shims that derive a single-layer plan on the fly, bit-exact vs the
+planned path (tests/test_plan.py).
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ import jax.numpy as jnp
 from .aeq import BatchedEventQueue, EventQueue, build_aeq_batched
 from .event_conv import (apply_events, apply_events_batched, crop_vm,
                          dense_conv, pad_vm)
+from .plan import LayerPlan, plan_conv_layer
 from .threshold import threshold_unit
 
 
@@ -42,31 +51,14 @@ class LayerStats(NamedTuple):
     in_spike_counts: jax.Array   # (T, C_in) events fed to the conv unit
     out_spike_counts: jax.Array  # (T, C_out) spikes after thresholding (pre-pool)
     in_sparsity: jax.Array       # () fraction of zeros in the input activations
-
-
-def _snap_divisor(n: int, requested: int) -> int:
-    """Largest divisor of ``n`` <= ``requested``.  Used to snap the
-    throughput knobs (channel_block, event_block) onto values that tile
-    evenly — they are perf knobs, never correctness constraints."""
-    requested = min(requested, n)
-    if n % requested == 0:
-        return requested
-    return max(d for d in range(1, requested + 1) if n % d == 0)
-
-
-def _pad_capacity(capacity: int) -> int:
-    """Queue depth padded to a multiple of 64 so the Pallas event-block
-    grid divides evenly (the extra slots carry valid=False).  Shared by
-    the single-sample and batched paths — identical rounding is part of
-    their bit-exactness contract (overflow must truncate identically)."""
-    return -(-capacity // 64) * 64 if capacity > 64 else capacity
+    event_block: jax.Array = 0   # () chosen block_e (autotuned; perf record)
 
 
 def _build_all_aeqs(spikes_in: jax.Array, capacity: int) -> EventQueue:
     """Compact (T, H, W, C_in) binary activations into per-(t, c_in) queues
     in one fused sort (``build_aeq_batched``, bit-exact vs per-fmap
-    compaction)."""
-    capacity = _pad_capacity(capacity)
+    compaction).  ``capacity`` is the plan's effective depth (already
+    padded/capped by ``plan.effective_capacity``)."""
     q = build_aeq_batched(spikes_in.transpose(0, 3, 1, 2), capacity)
     return EventQueue(coords=q.coords, valid=q.valid, count=q.count)
 
@@ -84,14 +76,38 @@ def run_conv_layer(
     vm_dtype=jnp.float32,
     backend: str = "jax",
 ) -> tuple[jax.Array, LayerStats]:
+    """Deprecated kwargs shim over :func:`run_conv_layer_planned`.
+
+    Derives a single-layer :class:`~repro.core.plan.LayerPlan` from the
+    loose knobs and executes it — bit-exact vs the planned path by
+    construction (the plan only rounds capacity the way this function
+    always did).  New code should build plans via ``plan_network``.
+    """
+    t_steps, h, w, c_in = spikes_in.shape
+    lp = plan_conv_layer(0, "conv", (h, w), c_in, kernels.shape[-1],
+                         capacity=capacity, pool=pool,
+                         channel_block=channel_block, sat_bits=sat_bits)
+    return run_conv_layer_planned(spikes_in, kernels, bias, v_t, lp,
+                                  backend=backend, vm_dtype=vm_dtype)
+
+
+def run_conv_layer_planned(
+    spikes_in: jax.Array,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    lp: LayerPlan,
+    *,
+    backend: str = "jax",
+    vm_dtype=None,
+) -> tuple[jax.Array, LayerStats]:
     """Run one spiking conv layer for all T steps, Algorithm-1 style.
 
     spikes_in: (T, H, W, C_in) bool — the previous layer's output spikes.
     kernels:   (3, 3, C_in, C_out) — *unrotated* trained weights.
     bias:      (C_out,) — integrated once per time step by the threshold unit.
-    capacity:  AEQ depth per (t, c_in) queue.
-    pool:      OR-max-pool window (None = no pooling).
-    channel_block: output channels processed per MemPot buffer (1 = paper).
+    lp:        the layer's static resource plan (queue depth, channel
+               block, event block, membrane tile — see core/plan.py).
     backend: "jax" (pure scan reference) or "pallas" (the event_conv TPU
         kernel in interpret mode — the production compute path).
 
@@ -99,8 +115,9 @@ def run_conv_layer(
     """
     t_steps, h, w, c_in = spikes_in.shape
     c_out = kernels.shape[-1]
-    channel_block = _snap_divisor(c_out, channel_block)
-    queues = _build_all_aeqs(spikes_in, capacity)
+    channel_block = lp.channel_block
+    vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
+    queues = _build_all_aeqs(spikes_in, lp.capacity)
 
     def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
         # kernel_block: (3, 3, C_in, B); bias_block: (B,)
@@ -114,11 +131,10 @@ def run_conv_layer(
             def per_cin(ci, vm):
                 if backend == "pallas":
                     from repro.kernels.event_conv.kernel import event_conv_pallas
-                    block_e = min(64, queues.coords.shape[2])
                     return event_conv_pallas(
                         vm, queues.coords[t, ci], queues.valid[t, ci],
                         kernel_block[:, :, ci, :].astype(vm.dtype),
-                        block_e=block_e)
+                        block_e=lp.block_e)
                 q = EventQueue(queues.coords[t, ci], queues.valid[t, ci],
                                queues.count[t, ci])
                 return apply_events(vm, q, kernel_block[:, :, ci, :])
@@ -127,7 +143,7 @@ def run_conv_layer(
             inner = crop_vm(vm)
 
             def thresh_one(v, f, b):
-                r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=sat_bits)
+                r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=lp.sat_bits)
                 return r.v_m, r.fired, r.spikes
 
             v_new, fired, spk = jax.vmap(thresh_one, in_axes=(2, 2, 0), out_axes=2)(
@@ -149,9 +165,10 @@ def run_conv_layer(
         in_spike_counts=queues.count,
         out_spike_counts=jnp.sum(spikes_out, axis=(1, 2)).astype(jnp.int32),
         in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32)),
+        event_block=jnp.asarray(lp.block_e, jnp.int32),
     )
-    if pool is not None:
-        return _pool_all(spikes_out, pool), stats
+    if lp.pool is not None:
+        return _pool_all(spikes_out, lp.pool), stats
     return spikes_out, stats
 
 
@@ -211,31 +228,56 @@ def run_conv_layer_batched(
     sat_bits: Optional[int] = None,
     vm_dtype=jnp.float32,
     backend: str = "jax",
-    event_block: int = 64,
+    event_block: Optional[int] = None,
+) -> tuple[jax.Array, LayerStats]:
+    """Deprecated kwargs shim over :func:`run_conv_layer_batched_planned`.
+
+    Derives a single-layer plan from the loose knobs (``event_block=None``
+    autotunes the event block) and executes it — bit-exact by construction.
+    New code should build plans via ``plan_network``.
+    """
+    b_sz, t_steps, h, w, c_in = spikes_in.shape
+    lp = plan_conv_layer(0, "conv", (h, w), c_in, kernels.shape[-1],
+                         capacity=capacity, pool=pool,
+                         channel_block=channel_block, block_e=event_block,
+                         sat_bits=sat_bits)
+    return run_conv_layer_batched_planned(spikes_in, kernels, bias, v_t, lp,
+                                          backend=backend, vm_dtype=vm_dtype)
+
+
+def run_conv_layer_batched_planned(
+    spikes_in: jax.Array,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    lp: LayerPlan,
+    *,
+    backend: str = "jax",
+    vm_dtype=None,
 ) -> tuple[jax.Array, LayerStats]:
     """Algorithm 1 over a whole sample batch with amortized event handling.
 
     spikes_in: (B, T, H, W, C_in) bool — batch of previous-layer spikes.
-    Remaining arguments match ``run_conv_layer``.  One fused compaction
-    builds every (t, b, c_in) queue; each (t, c_in) step then feeds all B
-    queues to one batched conv-unit invocation (a 2-D-grid Pallas call for
-    ``backend="pallas"``, a batch-vectorized event loop with shared
-    early exit for ``backend="jax"``).
+    Remaining arguments match ``run_conv_layer_planned``.  One fused
+    compaction builds every (t, b, c_in) queue; each (t, c_in) step then
+    feeds all B queues to one batched conv-unit invocation (a 2-D-grid
+    Pallas call for ``backend="pallas"``, a batch-vectorized event loop
+    with shared early exit for ``backend="jax"``).
 
     Returns (spikes_out (B, T, H', W', C_out) bool, LayerStats with a
     leading batch dim: in_spike_counts (B, T, C_in), out_spike_counts
     (B, T, C_out), in_sparsity (B,)).  Bit-exact vs
-    ``jax.vmap(run_conv_layer)`` — the paper's per-sample schedule is
-    preserved; only the launch structure is batched.
+    ``jax.vmap(run_conv_layer_planned)`` — the paper's per-sample schedule
+    is preserved; only the launch structure is batched.
     """
     b_sz, t_steps, h, w, c_in = spikes_in.shape
     c_out = kernels.shape[-1]
-    channel_block = _snap_divisor(c_out, channel_block)
-    capacity = _pad_capacity(capacity)
+    channel_block = lp.channel_block
+    vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
     # (B, T, H, W, C_in) -> queues indexed [t, b, c_in], built in one pass
     fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (T, B, C_in, H, W)
-    queues = build_aeq_batched(fmaps, capacity)
-    block_e = _snap_divisor(queues.capacity, event_block)
+    queues = build_aeq_batched(fmaps, lp.capacity)
+    block_e = lp.block_e
 
     def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
         # kernel_block: (3, 3, C_in, Cb); bias_block: (Cb,)
@@ -264,7 +306,7 @@ def run_conv_layer_batched(
             inner = vm[:, 1:-1, 1:-1, :]
 
             def thresh_one(v, f, b):
-                r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=sat_bits)
+                r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=lp.sat_bits)
                 return r.v_m, r.fired, r.spikes
 
             per_channel = jax.vmap(thresh_one, in_axes=(2, 2, 0), out_axes=2)
@@ -289,9 +331,10 @@ def run_conv_layer_batched(
         out_spike_counts=jnp.sum(spikes_out, axis=(2, 3)).astype(jnp.int32),
         in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32),
                                    axis=(1, 2, 3, 4)),
+        event_block=jnp.asarray(lp.block_e, jnp.int32),
     )
-    if pool is not None:
-        return _pool_all(spikes_out, pool), stats
+    if lp.pool is not None:
+        return _pool_all(spikes_out, lp.pool), stats
     return spikes_out, stats
 
 

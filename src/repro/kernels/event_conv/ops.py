@@ -3,9 +3,15 @@
 Handles: halo padding, event padding to the block size, channel tiling to
 the lane width, and the queue-exhausted early exit (the self-timed
 analogue — see DESIGN.md Sec. 2).
+
+Also home of the event-block autotuner: ``block_e`` is a pure perf knob
+(every block size produces bit-identical results — invalid slots
+contribute exact zeros), so it is derived from the padded queue capacity
+and the VMEM budget instead of being hard-coded (``autotune_block_e``).
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -16,6 +22,42 @@ from repro.core.event_conv import crop_vm, pad_vm
 
 from .kernel import event_conv_pallas, event_conv_pallas_batched
 from .ref import event_conv_ref, event_conv_ref_batched
+
+# Bytes one queue slot streams through VMEM: (i, j) int32 coords + valid int8.
+EVENT_BYTES = 2 * 4 + 1
+# Per-core VMEM (TPU ~16 MB); the vm tile must stay resident against it.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def snap_divisor(n: int, requested: int) -> int:
+    """Largest divisor of ``n`` <= ``requested``.  Snaps the throughput
+    knobs (channel_block, block_e) onto values that tile evenly — they are
+    perf knobs, never correctness constraints."""
+    requested = max(1, min(requested, n))
+    if n % requested == 0:
+        return requested
+    return max(d for d in range(1, requested + 1) if n % d == 0)
+
+
+def autotune_block_e(capacity: int, vm_tile: tuple[int, ...] = (), *,
+                     vm_bytes: int = 4, vmem_budget: int = VMEM_BUDGET) -> int:
+    """Pick the event-block size for a queue of ``capacity`` slots.
+
+    The grid streams ``block_e`` (coords, valid) entries per step while the
+    ``vm_tile`` stays VMEM-resident (twice: input + aliased output), so the
+    block must fit the spare budget double-buffered.  Below that ceiling we
+    keep at least ~4 blocks per queue so the block-granular early exit
+    (self-timed analogue) still skips work on sparse queues, with a floor
+    of 64 entries to amortize grid-step overhead.  Always returns a
+    divisor of ``capacity`` (the grid must tile the queue evenly).
+    """
+    if capacity <= 0:
+        return 1
+    resident = 2 * math.prod(vm_tile) * vm_bytes if vm_tile else 0
+    spare = max(vmem_budget - resident, 2 * EVENT_BYTES)
+    vmem_cap = max(spare // (2 * EVENT_BYTES), 1)
+    granule = max(capacity // 4, 64)
+    return snap_divisor(capacity, min(capacity, vmem_cap, granule))
 
 
 def _pad_events(queue: EventQueue, block_e: int) -> tuple[jax.Array, jax.Array]:
@@ -32,15 +74,20 @@ def event_conv(
     queue: EventQueue,
     kernel: jax.Array,
     *,
-    block_e: int = 128,
+    block_e: int | None = 128,
     use_kernel: bool = True,
     interpret: bool = True,
 ) -> jax.Array:
     """Event-driven 3x3 conv accumulation onto an *unpadded* (H, W, C) vm.
 
     The Pallas kernel (or the jnp oracle when ``use_kernel=False``) sees
-    the halo-padded tile; this wrapper crops it back.
+    the halo-padded tile; this wrapper crops it back.  ``block_e=None``
+    autotunes the event block from the queue capacity and VMEM budget.
     """
+    if block_e is None:
+        block_e = autotune_block_e(
+            queue.capacity, (vm.shape[0] + 2, vm.shape[1] + 2) + vm.shape[2:],
+            vm_bytes=vm.dtype.itemsize)
     if vm.ndim == 2:
         out = event_conv(vm[:, :, None], queue, kernel[:, :, None],
                          block_e=block_e, use_kernel=use_kernel, interpret=interpret)
@@ -61,7 +108,7 @@ def event_conv_batched(
     queues: BatchedEventQueue,
     kernel: jax.Array,
     *,
-    block_e: int = 128,
+    block_e: int | None = 128,
     use_kernel: bool = True,
     interpret: bool = True,
 ) -> jax.Array:
@@ -71,11 +118,16 @@ def event_conv_batched(
     (3, 3, C) kernel is shared by every queue.  One fused 2-D-grid
     pallas_call (or the vmapped jnp oracle when ``use_kernel=False``)
     processes all queues; the wrapper halo-pads, pads the event axis to
-    ``block_e``, and crops back.
+    ``block_e``, and crops back.  ``block_e=None`` autotunes from the
+    queue capacity and VMEM budget.
     """
     if queues.coords.ndim != 3:
         raise ValueError("event_conv_batched expects queues with one leading "
                          f"dim, got coords shape {queues.coords.shape}")
+    if block_e is None:
+        block_e = autotune_block_e(
+            queues.capacity, (vm.shape[1] + 2, vm.shape[2] + 2) + vm.shape[3:],
+            vm_bytes=vm.dtype.itemsize)
     pad = -queues.capacity % block_e
     coords = jnp.pad(queues.coords, ((0, 0), (0, pad), (0, 0)))
     valid = jnp.pad(queues.valid, ((0, 0), (0, pad)))

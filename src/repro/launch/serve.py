@@ -6,6 +6,10 @@ batched event-driven CSNN inference (the paper workload) as its own arch.
 
   PYTHONPATH=src python -m repro.launch.serve --arch csnn-paper --smoke \
       --requests 8
+
+  # async micro-batching engine with plan + per-layer event counts:
+  PYTHONPATH=src python -m repro.launch.serve --arch csnn-paper --smoke \
+      --requests 8 --engine --verbose
 """
 import argparse
 import sys
@@ -13,39 +17,88 @@ import time
 
 
 def serve_csnn(args) -> int:
-    """Serve a batch of image requests through ``snn_apply_batched``.
+    """Serve a batch of image requests through the planned event pipeline.
 
-    The batched pipeline is the serving entry point: all requests' event
-    queues are compacted in one fused pass and every conv-unit launch
-    feeds the whole batch (vs vmap's per-sample schedule).  Prints one
-    line per request plus the measured batched throughput.
+    Default mode runs one pre-built batch through ``snn_apply_batched``;
+    ``--engine`` routes the same requests through the async micro-batching
+    ``CSNNEngine`` (enqueue individually, flush on batch/deadline).
+    Compile time is measured separately from steady state (the first
+    timed call used to include retrace on shape change); ``--verbose``
+    prints the derived NetworkPlan and per-layer event counts.
     """
+    import statistics
+
     import jax
     import jax.numpy as jnp
 
     from repro.configs import csnn_paper
     from repro.core.csnn import encode_input, init_params, snn_apply_batched
+    from repro.core.plan import plan_network
 
     cfg = csnn_paper.SMOKE if args.smoke else csnn_paper.FULL
     params = init_params(jax.random.PRNGKey(0), cfg)
     h, w = cfg.input_hw
     imgs = jax.random.uniform(jax.random.PRNGKey(1), (args.requests, h, w, 1))
-    spikes = encode_input(imgs, cfg)
+    batch_tile = args.batch_tile
+    plan = plan_network(cfg, capacity=args.capacity,
+                        channel_block=args.channel_block,
+                        batch_tile=batch_tile)
+    if args.verbose:
+        print(plan)
 
-    fn = jax.jit(lambda s: snn_apply_batched(
-        params, s, cfg, capacity=args.capacity,
-        channel_block=args.channel_block, collect_stats=False))
-    logits = jax.block_until_ready(fn(spikes))  # includes compile
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(spikes))
-    dt = time.perf_counter() - t0
+    if args.engine:
+        from repro.serve.csnn_engine import CSNNEngine, CSNNServeConfig
+        max_batch = -(-args.requests // batch_tile) * batch_tile
+        engine = CSNNEngine(params, cfg, plan,
+                            CSNNServeConfig(max_batch=max_batch,
+                                            max_delay_ms=args.deadline_ms))
+        compile_s = engine.warmup()
+        times = []
+        for _ in range(max(args.iters, 1)):
+            t0 = time.perf_counter()
+            logits = jnp.asarray(engine.run_requests(list(imgs)))
+            times.append(time.perf_counter() - t0)
+        dt = statistics.median(times)
+        steady = f"{args.requests / dt:.1f} samples/s (median of {len(times)})"
+        extra = (f"engine: batches={engine.stats['batches']} "
+                 f"full={engine.stats['flushes_full']} "
+                 f"deadline={engine.stats['flushes_deadline']} "
+                 f"padded_slots={engine.stats['padded_slots']}")
+    else:
+        fn = jax.jit(lambda s: snn_apply_batched(
+            params, s, cfg, plan, collect_stats=False))
+        spikes = encode_input(imgs, cfg)
+        t0 = time.perf_counter()
+        logits = jax.block_until_ready(fn(spikes))
+        compile_s = time.perf_counter() - t0  # first call: compile + run
+        times = []
+        for _ in range(max(args.iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(spikes))
+            times.append(time.perf_counter() - t0)
+        dt = statistics.median(times)
+        steady = f"{args.requests / dt:.1f} samples/s (median of {len(times)})"
+        extra = ""
 
     preds = jnp.argmax(logits, axis=-1)
     for i, p in enumerate(preds.tolist()):
         print(f"req {i}: class {p}")
-    print(f"throughput: {args.requests / dt:.1f} samples/s "
+    print(f"compile: {compile_s:.2f} s (excluded from throughput)")
+    print(f"throughput: {steady} "
           f"(batch={args.requests}, T={cfg.t_steps}, "
-          f"capacity={args.capacity}, channel_block={args.channel_block})")
+          f"capacity={args.capacity}, channel_block={args.channel_block}, "
+          f"mode={'engine' if args.engine else 'batched'})")
+    if extra:
+        print(extra)
+    if args.verbose:
+        spikes = encode_input(imgs, cfg)
+        _, stats = jax.jit(lambda s: snn_apply_batched(
+            params, s, cfg, plan, collect_stats=True))(spikes)
+        for lp, st in zip(plan.layers, stats):
+            events = int(jnp.sum(st.in_spike_counts))
+            peak = int(jnp.max(st.in_spike_counts))
+            print(f"layer {lp.name}: events={events} peak_queue={peak} "
+                  f"capacity={lp.capacity} block_e={int(st.event_block)}")
     return 0
 
 
@@ -61,6 +114,17 @@ def main(argv=None):
                     help="AEQ depth per queue (csnn-paper only)")
     ap.add_argument("--channel-block", type=int, default=8,
                     help="output channels per MemPot tile (csnn-paper only)")
+    ap.add_argument("--engine", action="store_true",
+                    help="route requests through the async micro-batching "
+                         "CSNNEngine (csnn-paper only)")
+    ap.add_argument("--batch-tile", type=int, default=8,
+                    help="engine pads partial batches to this multiple")
+    ap.add_argument("--deadline-ms", type=float, default=10.0,
+                    help="engine flush deadline for partial batches")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="steady-state timing iterations")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print the NetworkPlan and per-layer event counts")
     args = ap.parse_args(argv)
 
     if args.arch == "csnn-paper":

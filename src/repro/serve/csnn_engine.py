@@ -1,0 +1,171 @@
+"""Async micro-batching engine for event-driven CSNN inference.
+
+Serving shape of the paper workload: requests (single images) arrive one
+at a time; the batched event pipeline (``snn_apply_batched``) only pays
+off when many samples share one fused queue compaction and one conv-unit
+launch per (t, c_in, channel-block) step.  The engine bridges the two:
+
+* ``submit`` enqueues a request and awaits its logits;
+* a background flusher collects requests and flushes a micro-batch when
+  either ``max_batch`` requests are pending (size flush) or the oldest
+  request has waited ``max_delay_ms`` (deadline flush) — the standard
+  batch/deadline threshold from LLM serving, applied to spike streams;
+* partial batches are padded with zero images up to the plan's
+  ``batch_tile`` multiple, so the jitted pipeline only ever sees a small
+  fixed set of batch shapes (no retrace per request count) — the batch
+  analogue of padding event queues to the block size.
+
+The compute itself runs synchronously inside the flush (CPU/TPU-bound;
+requests queue up meanwhile), and every batch shape can be pre-compiled
+with ``warmup()`` so steady-state latency never includes a retrace.
+Observability lives in ``engine.stats`` (flush reasons, padded slots,
+batch sizes) — tests/test_serve_csnn.py pins the flush semantics.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csnn import CSNNConfig, encode_input, snn_apply_batched
+from repro.core.plan import NetworkPlan, plan_network
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class CSNNServeConfig:
+    max_batch: int = 8        # size-flush threshold (requests per batch)
+    max_delay_ms: float = 10.0  # deadline-flush threshold for the oldest request
+
+
+class CSNNEngine:
+    """Micro-batching front-end over the planned batched event pipeline.
+
+    Use as an async context manager::
+
+        engine = CSNNEngine(params, cfg, plan)
+        async with engine:
+            logits = await engine.submit(image)   # (H, W, 1) -> (n_classes,)
+
+    or drive a whole request list synchronously with ``run_requests``.
+    """
+
+    def __init__(self, params: dict, cfg: CSNNConfig,
+                 plan: Optional[NetworkPlan] = None,
+                 serve_cfg: CSNNServeConfig = CSNNServeConfig(), *,
+                 backend: str = "jax"):
+        self.cfg = cfg
+        self.plan = plan if plan is not None else plan_network(
+            cfg, batch_tile=serve_cfg.max_batch)
+        self.serve_cfg = serve_cfg
+        if serve_cfg.max_batch % self.plan.batch_tile != 0:
+            raise ValueError(
+                f"max_batch={serve_cfg.max_batch} must be a multiple of the "
+                f"plan's batch_tile={self.plan.batch_tile}")
+        self._infer = jax.jit(lambda sp: snn_apply_batched(
+            params, sp, cfg, self.plan, collect_stats=False, backend=backend))
+        self._queue: Optional[asyncio.Queue] = None
+        self._flusher: Optional[asyncio.Task] = None
+        self.stats = {"requests": 0, "batches": 0, "flushes_full": 0,
+                      "flushes_deadline": 0, "padded_slots": 0,
+                      "compile_s": 0.0}
+
+    # ------------------------------------------------------------- lifecycle
+    async def __aenter__(self) -> "CSNNEngine":
+        self._queue = asyncio.Queue()
+        self._flusher = asyncio.create_task(self._flush_loop())
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self._queue.put(_STOP)
+        await self._flusher
+        self._queue = self._flusher = None
+
+    def warmup(self) -> float:
+        """Compile every batch shape the engine can emit (each multiple of
+        ``batch_tile`` up to ``max_batch``); returns the seconds spent so
+        serving latency can be reported compile-free."""
+        h, w = self.cfg.input_hw
+        t0 = time.perf_counter()
+        tile = self.plan.batch_tile
+        for b in range(tile, self.serve_cfg.max_batch + 1, tile):
+            sp = encode_input(jnp.zeros((b, h, w, 1), jnp.float32), self.cfg)
+            jax.block_until_ready(self._infer(sp))
+        self.stats["compile_s"] = time.perf_counter() - t0
+        return self.stats["compile_s"]
+
+    # ------------------------------------------------------------- requests
+    def submit_nowait(self, image) -> "asyncio.Future":
+        """Enqueue one (H, W, 1) image; returns a future of its logits."""
+        if self._queue is None:
+            raise RuntimeError("engine is not running (use `async with`)")
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.put_nowait((jnp.asarray(image), fut))
+        self.stats["requests"] += 1
+        return fut
+
+    async def submit(self, image) -> np.ndarray:
+        """Enqueue one (H, W, 1) image and await its (n_classes,) logits."""
+        return await self.submit_nowait(image)
+
+    def run_requests(self, images) -> np.ndarray:
+        """Synchronous convenience: serve a request list through the
+        engine's own batching loop; returns stacked (N, n_classes) logits."""
+
+        async def _drive():
+            async with self:
+                futs = [self.submit_nowait(img) for img in images]
+                return await asyncio.gather(*futs)
+
+        return np.stack(asyncio.run(_drive()))
+
+    # ------------------------------------------------------------- batching
+    async def _flush_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        max_batch = self.serve_cfg.max_batch
+        delay = self.serve_cfg.max_delay_ms / 1e3
+        stopping = False
+        while not stopping:
+            first = await self._queue.get()
+            if first is _STOP:
+                return
+            batch, deadline = [first], loop.time() + delay
+            while len(batch) < max_batch:
+                timeout = deadline - loop.time()
+                if timeout <= 0:
+                    break
+                try:
+                    nxt = await asyncio.wait_for(self._queue.get(), timeout)
+                except asyncio.TimeoutError:
+                    break
+                if nxt is _STOP:
+                    stopping = True
+                    break
+                batch.append(nxt)
+            self.stats["flushes_full" if len(batch) >= max_batch
+                       else "flushes_deadline"] += 1
+            self._run_batch(batch)
+
+    def _run_batch(self, batch: list) -> None:
+        """Pad to the plan's batch tile, run the planned pipeline once,
+        resolve every request future."""
+        n = len(batch)
+        tile = self.plan.batch_tile
+        padded = -(-n // tile) * tile
+        imgs = jnp.stack([img for img, _ in batch])
+        if padded > n:  # zero images spike nowhere; pure pad slots
+            imgs = jnp.concatenate(
+                [imgs, jnp.zeros((padded - n,) + imgs.shape[1:], imgs.dtype)])
+        logits = np.asarray(jax.block_until_ready(
+            self._infer(encode_input(imgs, self.cfg))))
+        self.stats["batches"] += 1
+        self.stats["padded_slots"] += padded - n
+        for i, (_, fut) in enumerate(batch):
+            if not fut.done():
+                fut.set_result(logits[i])

@@ -97,6 +97,21 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, PartitionSpec())
 
 
+def batch_mesh(n_devices: Optional[int] = None, *, axis: str = "batch") -> Mesh:
+    """1-D mesh over (the first ``n_devices``) local devices, for sharding
+    a per-sample-independent batch axis (csnn.snn_apply_sharded).  On CPU
+    hosts, ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` provides
+    the multi-device substrate (the CI multi-device job uses N=8)."""
+    import numpy as np
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(f"requested {n_devices} devices, "
+                             f"have {len(devices)}")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (axis,))
+
+
 # ---------------------------------------------------------------------------
 # Activation sharding constraints (with_sharding_constraint plumbing)
 # ---------------------------------------------------------------------------

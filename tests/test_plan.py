@@ -1,0 +1,193 @@
+"""Plan derivation properties + shim/planned bit-exactness (ISSUE 3).
+
+The plan/execute split moves all resource sizing into ``plan_network``;
+these tests pin the sizing rules (capacities padded to 64-multiples but
+capped at the fmap size, blocks snapped to divisors, autotuned event
+blocks) and the contract that the legacy kwargs shims execute the exact
+same computation as the planned path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CSNNConfig, ConvSpec, FCSpec, calibrate_capacities,
+                        encode_input, init_params, plan_network, snn_apply,
+                        snn_apply_batched)
+from repro.core.plan import effective_capacity, pad_capacity, plan_conv_layer
+from repro.kernels.event_conv.ops import autotune_block_e, snap_divisor
+
+jax.config.update("jax_platform_name", "cpu")
+
+PAPER = CSNNConfig()  # 28x28-32C3-32C3-P3-10C3-F10, T=5
+SMOKE = CSNNConfig(input_hw=(10, 10),
+                   layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
+                   t_steps=4)
+
+
+# ------------------------------------------------------------- sizing rules
+class TestPlanDerivation:
+    def test_capacities_pad_to_64_multiples_capped_at_fmap(self):
+        plan = plan_network(PAPER, capacity=256)
+        for lp in plan.layers:
+            h, w = lp.in_hw
+            assert lp.capacity <= h * w
+            assert lp.capacity % 64 == 0 or lp.capacity == h * w
+
+    def test_small_requested_capacity_kept_verbatim(self):
+        # depths <= 64 are never padded — identical truncation vs legacy
+        plan = plan_network(PAPER, capacity=8)
+        assert all(lp.capacity == 8 for lp in plan.layers)
+
+    def test_blocks_divide_evenly(self):
+        for cb in (1, 3, 8):
+            plan = plan_network(PAPER, capacity=200, channel_block=cb)
+            for lp in plan.layers:
+                assert lp.c_out % lp.channel_block == 0
+                assert lp.capacity % lp.block_e == 0
+                assert lp.vm_tile == (lp.in_hw[0] + 2, lp.in_hw[1] + 2,
+                                      lp.channel_block)
+
+    def test_per_layer_capacities_reduce_total_padded_slots(self):
+        """ISSUE 3 acceptance: per-layer plans strictly reduce total padded
+        event slots vs the shared-capacity baseline on the paper network."""
+        plan = plan_network(PAPER, capacity=256)
+        shared = plan_network(PAPER, capacity=256, per_layer=False)
+        assert plan.total_event_slots < shared.total_event_slots
+        # the reduction comes from the post-pool layer (10x10 fmap < 256)
+        assert plan.layers[2].capacity == 100
+
+    def test_geometry_matches_config(self):
+        plan = plan_network(PAPER)
+        assert [lp.name for lp in plan.layers] == ["conv0", "conv1", "conv2"]
+        assert plan.layers[0].in_hw == (28, 28) and plan.layers[0].c_in == 1
+        assert plan.layers[1].out_hw == (10, 10)  # pool3 over 28x28
+        assert plan.layers[2].in_hw == (10, 10) and plan.layers[2].c_in == 32
+        assert plan.t_steps == PAPER.t_steps
+
+    def test_calibrated_per_layer_capacities(self):
+        params = init_params(jax.random.PRNGKey(0), SMOKE)
+        sp = encode_input(jnp.asarray(
+            np.random.default_rng(0).random((4, 10, 10, 1)), jnp.float32), SMOKE)
+        _, stats = snn_apply_batched(params, sp, SMOKE, capacity=100)
+        caps = calibrate_capacities(
+            [np.asarray(st.in_spike_counts) for st in stats],
+            percentile=100.0, margin=1.0)
+        plan = plan_network(SMOKE, capacity=caps)
+        for lp, cap in zip(plan.layers, caps):
+            assert lp.capacity == effective_capacity(cap, lp.in_hw[0] * lp.in_hw[1])
+
+    def test_validate_rejects_mismatched_plan(self):
+        plan = plan_network(SMOKE)
+        with pytest.raises(ValueError, match="conv layers"):
+            plan.validate(PAPER)
+        with pytest.raises(ValueError, match="does not match"):
+            plan_network(CSNNConfig(input_hw=(12, 12), layers=SMOKE.layers,
+                                    t_steps=4)).validate(SMOKE)
+
+    def test_repr_records_block_e(self):
+        plan = plan_network(PAPER, capacity=256, channel_block=8)
+        for lp in plan.layers:
+            assert f"block_e={lp.block_e}" in repr(lp)
+        assert "total_event_slots" in repr(plan)
+
+    def test_plan_arg_errors(self):
+        with pytest.raises(ValueError, match="per conv layer"):
+            plan_network(PAPER, capacity=[256, 256])
+        with pytest.raises(ValueError, match="per conv layer"):
+            plan_network(PAPER, stats=[[1, 2]])
+
+
+# ------------------------------------------------------------- autotuning
+class TestAutotuneBlockE:
+    def test_divides_capacity(self):
+        for cap in (8, 64, 100, 144, 256, 784, 1024):
+            be = autotune_block_e(cap, (30, 30, 8))
+            assert cap % be == 0 and 1 <= be <= cap
+
+    def test_scales_with_capacity(self):
+        small = autotune_block_e(256, (30, 30, 8))
+        large = autotune_block_e(1024, (30, 30, 8))
+        assert large > small  # keeps ~4 blocks per queue as depth grows
+
+    def test_vmem_budget_caps_block(self):
+        tile = (30, 30, 8)
+        tight = autotune_block_e(256, tile,
+                                 vmem_budget=2 * 4 * 30 * 30 * 8 + 300)
+        assert tight < autotune_block_e(256, tile)
+        assert 256 % tight == 0
+
+    def test_snap_divisor(self):
+        assert snap_divisor(100, 64) == 50
+        assert snap_divisor(64, 64) == 64
+        assert snap_divisor(7, 100) == 7
+        assert snap_divisor(12, 0) == 1
+
+    def test_pad_capacity_contract(self):
+        assert pad_capacity(8) == 8 and pad_capacity(64) == 64
+        assert pad_capacity(65) == 128 and pad_capacity(100) == 128
+        assert effective_capacity(256, 100) == 100
+        assert effective_capacity(100, 784) == 128
+
+    def test_layer_plan_pins_explicit_block_e(self):
+        lp = plan_conv_layer(0, "conv0", (10, 10), 1, 4, capacity=100,
+                             block_e=32)
+        assert lp.capacity % lp.block_e == 0 and lp.block_e <= 32
+
+
+# ------------------------------------------------------- shim bit-exactness
+class TestShimMatchesPlannedPath:
+    def _case(self, seed=0, b=4):
+        params = init_params(jax.random.PRNGKey(seed), SMOKE)
+        imgs = jnp.asarray(np.random.default_rng(seed)
+                           .random((b, 10, 10, 1)).astype(np.float32))
+        return params, encode_input(imgs, SMOKE)
+
+    @pytest.mark.parametrize("capacity", [8, 100])
+    def test_batched_shim_bit_exact(self, capacity):
+        params, sp = self._case()
+        plan = plan_network(SMOKE, capacity=capacity, channel_block=2)
+        got = snn_apply_batched(params, sp, SMOKE, plan, collect_stats=False)
+        shim = snn_apply_batched(params, sp, SMOKE, capacity=capacity,
+                                 channel_block=2, collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(shim))
+
+    def test_single_sample_shim_bit_exact(self):
+        params, sp = self._case(1)
+        plan = plan_network(SMOKE, capacity=64)
+        got = jax.vmap(lambda s: snn_apply(params, s, SMOKE, plan,
+                                           collect_stats=False))(sp)
+        shim = jax.vmap(lambda s: snn_apply(params, s, SMOKE, capacity=64,
+                                            collect_stats=False))(sp)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(shim))
+
+    def test_planned_sat_bits_bit_exact(self):
+        params, sp = self._case(2)
+        qparams = jax.tree.map(
+            lambda x: jnp.clip(jnp.round(x * 16), -100, 100).astype(jnp.int8),
+            params)
+        plan = plan_network(SMOKE, capacity=100, sat_bits=8)
+        got = snn_apply_batched(qparams, sp, SMOKE, plan, collect_stats=False)
+        shim = snn_apply_batched(qparams, sp, SMOKE, capacity=100, sat_bits=8,
+                                 collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(shim))
+
+    def test_stats_record_event_block(self):
+        params, sp = self._case(3)
+        plan = plan_network(SMOKE, capacity=100)
+        _, stats = snn_apply_batched(params, sp, SMOKE, plan)
+        for lp, st in zip(plan.layers, stats):
+            assert int(st.event_block) == lp.block_e
+
+    def test_paper_network_planned_bit_exact(self):
+        """Paper network: the per-layer plan (reduced slots) must not
+        change a single bit vs the legacy shared-capacity shim."""
+        params = init_params(jax.random.PRNGKey(7), PAPER)
+        imgs = jnp.asarray(np.random.default_rng(7)
+                           .random((4, 28, 28, 1)).astype(np.float32))
+        sp = encode_input(imgs, PAPER)
+        plan = plan_network(PAPER, capacity=256, channel_block=8)
+        got = snn_apply_batched(params, sp, PAPER, plan, collect_stats=False)
+        shim = snn_apply_batched(params, sp, PAPER, capacity=256,
+                                 channel_block=8, collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(shim))

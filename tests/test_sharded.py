@@ -1,0 +1,105 @@
+"""Device-sharded batched inference: bit-exactness over the batch mesh.
+
+``snn_apply_sharded`` shard_maps the planned batched pipeline over the
+batch axis — queues are per-sample-independent and the shared early exit
+only ever skips invalid (zero-contribution) slots, so sharding must not
+change a single bit.  The CI multi-device job runs this module under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the 8-way
+acceptance check; on a single-device host the 1-way mesh still exercises
+the full shard_map path and the 8-way cases skip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CSNNConfig, ConvSpec, FCSpec, encode_input,
+                        init_params, plan_network, snn_apply_batched,
+                        snn_apply_sharded)
+from repro.sharding.specs import batch_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMOKE = CSNNConfig(input_hw=(10, 10),
+                   layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
+                   t_steps=4)
+
+N_DEV = len(jax.devices())
+needs_8 = pytest.mark.skipif(
+    N_DEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _case(cfg, seed=0, b=8):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    imgs = jnp.asarray(np.random.default_rng(seed)
+                       .random((b,) + tuple(cfg.input_hw) + (1,))
+                       .astype(np.float32))
+    return params, encode_input(imgs, cfg)
+
+
+class TestSnnApplySharded:
+    def test_bit_exact_vs_batched_available_mesh(self):
+        """Runs on any device count that divides B=8 (1-way locally)."""
+        n = max(d for d in (1, 2, 4, 8) if d <= N_DEV and 8 % d == 0)
+        params, sp = _case(SMOKE)
+        plan = plan_network(SMOKE, capacity=100, channel_block=2)
+        got = snn_apply_sharded(params, sp, SMOKE, plan,
+                                mesh=batch_mesh(n, axis=plan.batch_axis))
+        want = snn_apply_batched(params, sp, SMOKE, plan, collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @needs_8
+    def test_bit_exact_vs_batched_8way(self):
+        """ISSUE 3 acceptance: logits bit-exact vs ``snn_apply_batched`` on
+        an 8-way host-device mesh."""
+        params, sp = _case(SMOKE, seed=1, b=16)
+        plan = plan_network(SMOKE, capacity=100, channel_block=2)
+        got = snn_apply_sharded(params, sp, SMOKE, plan,
+                                mesh=batch_mesh(8, axis=plan.batch_axis))
+        want = snn_apply_batched(params, sp, SMOKE, plan, collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @needs_8
+    def test_paper_network_8way(self):
+        cfg = CSNNConfig()  # paper defaults, T=5
+        params, sp = _case(cfg, seed=2, b=8)
+        plan = plan_network(cfg, capacity=256, channel_block=8)
+        got = snn_apply_sharded(params, sp, cfg, plan,
+                                mesh=batch_mesh(8, axis=plan.batch_axis))
+        want = snn_apply_batched(params, sp, cfg, plan, collect_stats=False)
+        assert got.shape == (8, 10)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_stats_shard_over_batch(self):
+        n = max(d for d in (1, 2, 4, 8) if d <= N_DEV and 8 % d == 0)
+        params, sp = _case(SMOKE, seed=3)
+        plan = plan_network(SMOKE, capacity=100)
+        got_l, got_s = snn_apply_sharded(
+            params, sp, SMOKE, plan, collect_stats=True,
+            mesh=batch_mesh(n, axis=plan.batch_axis))
+        want_l, want_s = snn_apply_batched(params, sp, SMOKE, plan)
+        np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+        for g, w in zip(got_s, want_s):
+            np.testing.assert_array_equal(np.asarray(g.in_spike_counts),
+                                          np.asarray(w.in_spike_counts))
+            np.testing.assert_allclose(np.asarray(g.in_sparsity),
+                                       np.asarray(w.in_sparsity), rtol=1e-6)
+
+    def test_default_mesh_all_devices(self):
+        params, sp = _case(SMOKE, seed=4, b=N_DEV * 2)
+        got = snn_apply_sharded(params, sp, SMOKE, capacity=100)
+        want = snn_apply_batched(params, sp, SMOKE, capacity=100,
+                                 collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_indivisible_batch_raises(self):
+        params, sp = _case(SMOKE, seed=5, b=3)
+        if N_DEV == 1:
+            with pytest.raises(ValueError, match="lacks the plan's batch axis"):
+                snn_apply_sharded(params, sp, SMOKE,
+                                  mesh=batch_mesh(1, axis="wrong"))
+        else:
+            n = max(d for d in range(2, N_DEV + 1) if 3 % d)
+            with pytest.raises(ValueError, match="does not divide"):
+                snn_apply_sharded(params, sp, SMOKE,
+                                  mesh=batch_mesh(n, axis="batch"))
