@@ -17,18 +17,21 @@ Convolutional Spiking Neural Networks" (TCAD 2022), adapted FPGA -> TPU:
 from .aeq import (BatchedEventQueue, EventQueue, build_aeq, build_aeq_batched,
                   calibrate_capacities, calibrate_capacity, column_index,
                   deinterlace, interlace, scatter_aeq)
-from .csnn import (CSNNConfig, ConvSpec, FCSpec, ann_apply, encode_input,
-                   init_params, snn_apply, snn_apply_batched,
-                   snn_apply_dense, snn_apply_sharded)
+from .csnn import (CSNNConfig, CSNNState, ConvSpec, FCSpec, ann_apply,
+                   encode_input, init_params, init_state, snn_apply,
+                   snn_apply_batched, snn_apply_dense, snn_apply_sharded,
+                   snn_readout, snn_step_chunk)
 from .encoding import mttfs_thresholds, multi_threshold_encode, rate_encode, spike_sparsity
 from .event_conv import (apply_events, apply_events_batched,
                          apply_events_blocked, crop_vm, dense_conv, pad_vm,
                          rotate_kernel)
 from .neuron import IFState, if_reset_step, mttfs_step, ttfs_slope_step
 from .plan import (LayerPlan, NetworkPlan, effective_capacity, pad_capacity,
-                   plan_conv_layer, plan_network)
+                   plan_conv_layer, plan_network, snap_t_chunk)
 from .quantization import QuantSpec, calibrate_scale, dequantize, fake_quant, quantize, saturating_add
-from .scheduler import (LayerStats, run_conv_layer, run_conv_layer_batched,
+from .scheduler import (ConvCarry, LayerStats, init_conv_carry,
+                        run_conv_layer, run_conv_layer_batched,
+                        run_conv_layer_batched_chunk,
                         run_conv_layer_batched_planned, run_conv_layer_dense,
                         run_conv_layer_planned, run_fc_head,
                         run_fc_head_batched)

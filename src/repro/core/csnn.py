@@ -8,7 +8,14 @@ The execution paths share one parameter pytree:
   event-driven scheduler (Algorithm 1), the system under study;
 * ``snn_apply_batched`` — the same inference for a whole sample batch
   with queue construction and kernel launches amortized across it
-  (bit-exact vs ``vmap(snn_apply)``; the serving entry point);
+  (bit-exact vs ``vmap(snn_apply)``; the serving entry point).  Built as
+  a thin wrapper over the step-resumable form below;
+* ``init_state`` / ``snn_step_chunk`` / ``snn_readout`` — the pipeline
+  cut at time-chunk boundaries: an explicit :class:`CSNNState` carry
+  (per-layer MemPot stacks + fired latches + accumulated FC drive)
+  advances ``plan.chunk_steps`` steps per call.  Chaining chunks is
+  bit-exact vs the monolithic apply; the serving engine's continuous
+  batching (slot-level refill) runs on this form;
 * ``snn_apply_sharded`` — ``snn_apply_batched`` shard_mapped over the
   batch axis of a device mesh (queues are per-sample-independent, so the
   shards never communicate; bit-exact vs the unsharded batched path);
@@ -26,16 +33,18 @@ dataclasses so a config file can describe any CSNN in one line.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from .encoding import mttfs_thresholds, multi_threshold_encode
 from .plan import NetworkPlan, plan_network
-from .scheduler import (LayerStats, run_conv_layer_batched_planned,
-                        run_conv_layer_dense, run_conv_layer_planned,
-                        run_fc_head, run_fc_head_batched)
+from .scheduler import (ConvCarry, LayerStats, init_conv_carry,
+                        run_conv_layer_batched_chunk,
+                        run_conv_layer_batched_planned, run_conv_layer_dense,
+                        run_conv_layer_planned, run_fc_head,
+                        run_fc_head_batched)
 
 
 @dataclass(frozen=True)
@@ -55,6 +64,7 @@ class CSNNConfig:
     """`28x28-32C3-32C3-P3-10C3-F10` == the paper's network (defaults)."""
 
     input_hw: tuple[int, int] = (28, 28)
+    input_channels: int = 1   # e.g. 2 for 2-polarity DVS event frames
     layers: Sequence = field(default_factory=lambda: (
         ConvSpec(32), ConvSpec(32, pool=3), ConvSpec(10), FCSpec(10)))
     t_steps: int = 5          # paper: T=5 gave the best accuracy
@@ -71,7 +81,7 @@ def conv_out_hw(hw: tuple[int, int], spec: ConvSpec) -> tuple[int, int]:
 
 def init_params(rng: jax.Array, cfg: CSNNConfig, dtype=jnp.float32) -> dict:
     params = {}
-    hw, c_in = cfg.input_hw, 1
+    hw, c_in = cfg.input_hw, cfg.input_channels
     for idx, spec in enumerate(cfg.layers):
         key = jax.random.fold_in(rng, idx)
         if isinstance(spec, ConvSpec):
@@ -92,7 +102,8 @@ def init_params(rng: jax.Array, cfg: CSNNConfig, dtype=jnp.float32) -> dict:
 
 
 def ann_apply(params: dict, images: jax.Array, cfg: CSNNConfig) -> jax.Array:
-    """Clamped-ReLU CNN forward (training path). images: (B, H, W, 1) in [0,1]."""
+    """Clamped-ReLU CNN forward (training path).
+    images: (B, H, W, cfg.input_channels) in [0,1]."""
     x = images
     for idx, spec in enumerate(cfg.layers):
         if isinstance(spec, ConvSpec):
@@ -117,7 +128,7 @@ def _max_pool(x: jax.Array, window: int) -> jax.Array:
 
 
 def encode_input(images: jax.Array, cfg: CSNNConfig) -> jax.Array:
-    """(B, H, W, 1) floats in [0,1] -> (B, T, H, W, 1) m-TTFS input spikes."""
+    """(B, H, W, C) floats in [0,1] -> (B, T, H, W, C) m-TTFS input spikes."""
     thresholds = mttfs_thresholds(cfg.t_steps)
     enc = lambda img: multi_threshold_encode(img, thresholds, cfg.t_steps)
     return jax.vmap(enc)(images)
@@ -173,6 +184,122 @@ def snn_apply(
     return (logits, stats) if collect_stats else logits
 
 
+class CSNNState(NamedTuple):
+    """Explicit per-layer carry of the event pipeline over a sample batch.
+
+    Everything ``snn_apply_batched`` used to keep implicit inside its
+    per-layer scans, extracted so execution can stop and resume at any
+    chunk boundary:
+
+    * ``convs`` — one :class:`~repro.core.scheduler.ConvCarry` per conv
+      layer (halo-padded MemPot stack + m-TTFS fired latches);
+    * ``fc_drive`` — (B, D) accumulated spike drive into the
+      classification head (exact small integers in the head's dtype, so
+      chunked accumulation is bit-exact vs one whole-T sum).
+
+    A pytree (NamedTuple of arrays): jit/donate/device_put all work.
+    Every row is per-sample independent — the serving engine exploits
+    this by resetting single rows as batch slots retire and refill.
+    """
+
+    convs: tuple
+    fc_drive: jax.Array
+
+
+def init_state(params: dict, cfg: CSNNConfig,
+               plan: NetworkPlan, batch: int) -> CSNNState:
+    """Fresh (t=0) :class:`CSNNState` for ``batch`` samples."""
+    plan.validate(cfg)
+    convs = tuple(init_conv_carry(lp, batch) for lp in plan.layers)
+    last = plan.layers[-1]
+    d = last.out_hw[0] * last.out_hw[1] * last.c_out
+    fc_dtype = jnp.float32
+    for idx, spec in enumerate(cfg.layers):
+        if not isinstance(spec, ConvSpec):
+            fc_dtype = params[f"fc{idx}"]["w"].dtype
+    return CSNNState(convs=convs, fc_drive=jnp.zeros((batch, d), fc_dtype))
+
+
+def snn_step_chunk(
+    params: dict,
+    state: CSNNState,
+    spikes_chunk: jax.Array,
+    cfg: CSNNConfig,
+    plan: NetworkPlan,
+    *,
+    backend: str = "jax",
+    collect_stats: bool = False,
+):
+    """Advance the batched event pipeline by one chunk of time steps.
+
+    spikes_chunk: (B, t_chunk, H, W, C_in) bool — the next ``t_chunk``
+    input time steps for every batch row (``plan.chunk_steps`` per call;
+    any chunk length works, but the serving engine keeps one shape so
+    nothing retraces).  Each conv layer consumes the chunk from its
+    carry, the head drive accumulates the final conv layer's output
+    spikes, and the new :class:`CSNNState` is returned.  Chaining
+    T/t_chunk calls from ``init_state`` reproduces the monolithic
+    pipeline bit-exactly (per time step the computation is identical;
+    only the scans are cut), which is what lets the engine admit new
+    requests mid-flight without perturbing in-flight ones.
+
+    Returns ``state`` or ``(state, [chunk LayerStats, ...])`` with
+    ``collect_stats``.
+    """
+    x, stats, ci = spikes_chunk, [], 0
+    new_convs = []
+    for idx, spec in enumerate(cfg.layers):
+        if isinstance(spec, ConvSpec):
+            p = params[f"conv{idx}"]
+            x, carry, st = run_conv_layer_batched_chunk(
+                x, p["w"], p["b"], cfg.v_t, plan.layers[ci], state.convs[ci],
+                backend=backend)
+            new_convs.append(carry)
+            stats.append(st)
+            ci += 1
+    b, c = x.shape[:2]
+    drive = x.reshape(b, c, -1).astype(state.fc_drive.dtype).sum(axis=1)
+    state = CSNNState(convs=tuple(new_convs),
+                      fc_drive=state.fc_drive + drive)
+    return (state, stats) if collect_stats else state
+
+
+def snn_readout(params: dict, state: CSNNState, cfg: CSNNConfig) -> jax.Array:
+    """Classification-unit readout of a (fully or partially stepped) state.
+
+    Matches ``run_fc_head_batched`` on the accumulated drive: the output
+    neurons integrate weighted spikes plus ``T x bias`` and are never
+    thresholded.  After all T steps the result is bit-exact vs the
+    monolithic ``snn_apply_batched`` logits — ``fc_drive`` holds exact
+    spike counts, so the (B, D) contraction sees identical values.
+    """
+    logits = None
+    for idx, spec in enumerate(cfg.layers):
+        if not isinstance(spec, ConvSpec):
+            p = params[f"fc{idx}"]
+            logits = state.fc_drive @ p["w"] + cfg.t_steps * p["b"]
+    if logits is None:
+        raise ValueError("cfg has no FC head layer")
+    return logits
+
+
+def _merge_chunk_stats(chunks: list) -> list:
+    """Stitch per-chunk LayerStats back into whole-T stats: counts
+    concatenate along the time axis; ``in_sparsity`` averages the
+    (equal-length) chunk means; ``event_block`` is constant."""
+    merged = []
+    for per_layer in zip(*chunks):
+        merged.append(LayerStats(
+            in_spike_counts=jnp.concatenate(
+                [s.in_spike_counts for s in per_layer], axis=1),
+            out_spike_counts=jnp.concatenate(
+                [s.out_spike_counts for s in per_layer], axis=1),
+            in_sparsity=sum(s.in_sparsity for s in per_layer) / len(per_layer),
+            event_block=per_layer[0].event_block,
+        ))
+    return merged
+
+
 def snn_apply_batched(
     params: dict,
     in_spikes: jax.Array,
@@ -187,7 +314,7 @@ def snn_apply_batched(
 ):
     """Event-driven m-TTFS inference for a SAMPLE BATCH.
 
-    in_spikes: (B, T, H, W, 1) bool.  Returns (logits (B, n_classes),
+    in_spikes: (B, T, H, W, C_in) bool.  Returns (logits (B, n_classes),
     [LayerStats, ...]) — stats carry a leading batch dim.  Logits are
     bit-exact vs ``jax.vmap(snn_apply)`` (tests/test_batched.py); the
     difference is purely structural: per layer, ONE fused queue
@@ -197,11 +324,26 @@ def snn_apply_batched(
     path (launch/serve.py, serve/csnn_engine.py) and the batched row of
     Table V.  ``plan`` carries the per-layer sizing; the loose kwargs are
     the deprecated shim spelling, ignored when a plan is given.
+
+    Execution is a wrapper over the step-resumable form: ``init_state``
+    then ``snn_step_chunk`` over ``plan.chunk_steps`` slices (one chunk —
+    the original monolithic graph — unless the plan sets ``t_chunk``),
+    then ``snn_readout``.  Bit-exact for every chunking
+    (tests/test_chunked.py).
     """
     plan = _resolve_plan(cfg, plan, capacity, channel_block, sat_bits)
-    x, stats = _conv_stack_batched(params, in_spikes, cfg, plan, backend)
-    logits = _fc_head_batched(params, x, cfg)
-    return (logits, stats) if collect_stats else logits
+    t, chunk = cfg.t_steps, plan.chunk_steps
+    state = init_state(params, cfg, plan, in_spikes.shape[0])
+    chunk_stats = []
+    for k in range(0, t, chunk):
+        state, stats = snn_step_chunk(
+            params, state, in_spikes[:, k:k + chunk], cfg, plan,
+            backend=backend, collect_stats=True)
+        chunk_stats.append(stats)
+    logits = snn_readout(params, state, cfg)
+    if not collect_stats:
+        return logits
+    return logits, _merge_chunk_stats(chunk_stats)
 
 
 def _conv_stack_batched(params: dict, x: jax.Array, cfg: CSNNConfig,

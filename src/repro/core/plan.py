@@ -60,6 +60,22 @@ def effective_capacity(requested: int, hw: int) -> int:
     return min(pad_capacity(requested), hw)
 
 
+def snap_t_chunk(t_steps: int, requested: int) -> int:
+    """Largest divisor of ``t_steps`` that is <= ``requested``.
+
+    Chunked execution (``snn_step_chunk``) requires every chunk to have
+    the same length — slots in a continuous-batching batch sit at
+    different time offsets, so a ragged tail chunk would force a second
+    compiled shape and break slot alignment.  Snapping to a divisor keeps
+    one shape and exact T coverage."""
+    if t_steps < 1 or requested < 1:
+        raise ValueError(f"t_steps={t_steps} and requested={requested} "
+                         f"must be >= 1")
+    for c in range(min(requested, t_steps), 0, -1):
+        if t_steps % c == 0:
+            return c
+
+
 @dataclass(frozen=True)
 class LayerPlan:
     """Static per-layer resource plan (the design-time sizing record).
@@ -109,6 +125,13 @@ class NetworkPlan:
     t_steps: int
     batch_tile: int = 8             # serving engine pads batches to this
     batch_axis: str = "batch"       # mesh axis snn_apply_sharded shards over
+    t_chunk: Optional[int] = None   # time steps per snn_step_chunk call
+                                    # (None = t_steps: one monolithic chunk)
+
+    @property
+    def chunk_steps(self) -> int:
+        """Resolved chunk length: ``t_chunk`` or the whole T window."""
+        return self.t_chunk if self.t_chunk is not None else self.t_steps
 
     @property
     def total_event_slots(self) -> int:
@@ -135,7 +158,12 @@ class NetworkPlan:
         if self.t_steps != cfg.t_steps:
             raise ValueError(
                 f"plan t_steps={self.t_steps} != cfg t_steps={cfg.t_steps}")
-        hw, c_in = tuple(cfg.input_hw), 1
+        if self.t_chunk is not None and (
+                not 1 <= self.t_chunk <= self.t_steps
+                or self.t_steps % self.t_chunk != 0):
+            raise ValueError(
+                f"t_chunk={self.t_chunk} must divide t_steps={self.t_steps}")
+        hw, c_in = tuple(cfg.input_hw), cfg.input_channels
         for lp, (idx, spec) in zip(self.layers, conv_specs):
             if lp.in_hw != hw or lp.c_in != c_in or lp.c_out != spec.channels:
                 raise ValueError(f"{lp!r} does not match cfg layer {idx} "
@@ -145,7 +173,8 @@ class NetworkPlan:
         return self
 
     def __repr__(self) -> str:
-        lines = [f"NetworkPlan(T={self.t_steps}, batch_tile={self.batch_tile}, "
+        lines = [f"NetworkPlan(T={self.t_steps}, t_chunk={self.chunk_steps}, "
+                 f"batch_tile={self.batch_tile}, "
                  f"batch_axis={self.batch_axis!r}, "
                  f"total_event_slots={self.total_event_slots})"]
         lines += [f"  {lp!r}" for lp in self.layers]
@@ -213,6 +242,7 @@ def plan_network(
     batch_axis: str = "batch",
     per_layer: bool = True,
     vmem_budget: Optional[int] = None,
+    t_chunk: Optional[int] = None,
 ) -> NetworkPlan:
     """Derive a :class:`NetworkPlan` from a ``CSNNConfig``.
 
@@ -223,6 +253,12 @@ def plan_network(
     calibrated from its own distribution instead — the two-tier adaptive
     capacity from the ROADMAP.  ``per_layer=False`` keeps the legacy
     shared-capacity sizing (the baseline).
+
+    ``t_chunk`` sets how many time steps one ``snn_step_chunk`` call
+    consumes (``snap_t_chunk`` snaps it to a divisor of T); ``None``
+    keeps the monolithic whole-T execution.  The input channel count is
+    read from ``cfg.input_channels`` (multi-channel inputs, e.g.
+    2-polarity DVS encodings).
     """
     from .csnn import ConvSpec, conv_out_hw
     conv_specs = [(i, s) for i, s in enumerate(cfg.layers)
@@ -241,7 +277,9 @@ def plan_network(
         caps = [calibrate_capacity(np.asarray(s), percentile=percentile,
                                    margin=margin, align=8) for s in stats]
 
-    plans, hw, c_in = [], tuple(cfg.input_hw), 1
+    if t_chunk is not None:
+        t_chunk = snap_t_chunk(cfg.t_steps, t_chunk)
+    plans, hw, c_in = [], tuple(cfg.input_hw), cfg.input_channels
     for ci, (idx, spec) in enumerate(conv_specs):
         plans.append(plan_conv_layer(
             idx, f"conv{idx}", hw, c_in, spec.channels, capacity=caps[ci],
@@ -250,4 +288,5 @@ def plan_network(
             vmem_budget=vmem_budget))
         hw, c_in = conv_out_hw(hw, spec), spec.channels
     return NetworkPlan(layers=tuple(plans), t_steps=cfg.t_steps,
-                       batch_tile=batch_tile, batch_axis=batch_axis)
+                       batch_tile=batch_tile, batch_axis=batch_axis,
+                       t_chunk=t_chunk)

@@ -54,6 +54,29 @@ class LayerStats(NamedTuple):
     event_block: jax.Array = 0   # () chosen block_e (autotuned; perf record)
 
 
+class ConvCarry(NamedTuple):
+    """One conv layer's per-time-step carry over a sample batch.
+
+    This is what Algorithm 1 keeps between time steps: the halo-padded
+    MemPot stack and the m-TTFS spike-indicator latches.  Extracting it
+    lets execution stop at any chunk boundary and resume bit-exactly
+    (``run_conv_layer_batched_chunk``) — the basis of continuous batching
+    in the serving engine.  Stored channel-flat (C_out last); the block
+    split/merge happens inside the chunk runner.
+    """
+
+    vm: jax.Array     # (B, H+2, W+2, C_out) membrane potentials, halo-padded
+    fired: jax.Array  # (B, H, W, C_out) spike-indicator bits
+
+
+def init_conv_carry(lp: LayerPlan, batch: int, vm_dtype=None) -> ConvCarry:
+    """Fresh (all-zero) carry for one conv layer and ``batch`` samples."""
+    h, w = lp.in_hw
+    dt = lp.vm_dtype if vm_dtype is None else vm_dtype
+    return ConvCarry(vm=jnp.zeros((batch, h + 2, w + 2, lp.c_out), dt),
+                     fired=jnp.zeros((batch, h, w, lp.c_out), jnp.bool_))
+
+
 def _build_all_aeqs(spikes_in: jax.Array, capacity: int) -> EventQueue:
     """Compact (T, H, W, C_in) binary activations into per-(t, c_in) queues
     in one fused sort (``build_aeq_batched``, bit-exact vs per-fmap
@@ -268,23 +291,68 @@ def run_conv_layer_batched_planned(
     leading batch dim: in_spike_counts (B, T, C_in), out_spike_counts
     (B, T, C_out), in_sparsity (B,)).  Bit-exact vs
     ``jax.vmap(run_conv_layer_planned)`` — the paper's per-sample schedule
-    is preserved; only the launch structure is batched.
+    is preserved; only the launch structure is batched.  Implemented as
+    one whole-T call of :func:`run_conv_layer_batched_chunk` from a fresh
+    carry.
+    """
+    carry = init_conv_carry(lp, spikes_in.shape[0], vm_dtype=vm_dtype)
+    spikes_out, _, stats = run_conv_layer_batched_chunk(
+        spikes_in, kernels, bias, v_t, lp, carry, backend=backend,
+        vm_dtype=vm_dtype)
+    return spikes_out, stats
+
+
+def _split_blocks(arr: jax.Array, n_blocks: int, cb: int) -> jax.Array:
+    """(B, ..., C_out) -> (n_blocks, B, ..., Cb); channel c maps to block
+    c // Cb, lane c % Cb — the same contiguous split as the kernel reshape."""
+    out = arr.reshape(arr.shape[:-1] + (n_blocks, cb))
+    return jnp.moveaxis(out, -2, 0)
+
+
+def _merge_blocks(arr: jax.Array) -> jax.Array:
+    """Inverse of ``_split_blocks``."""
+    out = jnp.moveaxis(arr, 0, -2)
+    return out.reshape(out.shape[:-2] + (-1,))
+
+
+def run_conv_layer_batched_chunk(
+    spikes_in: jax.Array,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    lp: LayerPlan,
+    carry: ConvCarry,
+    *,
+    backend: str = "jax",
+    vm_dtype=None,
+) -> tuple[jax.Array, ConvCarry, LayerStats]:
+    """Step one conv layer through a CHUNK of time steps from ``carry``.
+
+    spikes_in: (B, t_chunk, H, W, C_in) bool — any chunk length >= 1.
+    carry:     the layer's :class:`ConvCarry` at the chunk start (a fresh
+               ``init_conv_carry`` at t=0, the previous chunk's result
+               otherwise).
+
+    Returns (spikes_out (B, t_chunk, H', W', C_out) bool, new carry,
+    chunk LayerStats).  Per time step the computation is identical to the
+    monolithic path — only the scan is cut at the chunk boundary — so
+    chaining chunks over a T-step input is bit-exact vs one whole-T call
+    (tests/test_chunked.py).  This is the device-side half of the serving
+    engine's slot-level refill: the engine holds one shared carry batch
+    and resets individual rows as slots retire and admit.
     """
     b_sz, t_steps, h, w, c_in = spikes_in.shape
     c_out = kernels.shape[-1]
     channel_block = lp.channel_block
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
-    # (B, T, H, W, C_in) -> queues indexed [t, b, c_in], built in one pass
-    fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (T, B, C_in, H, W)
+    # (B, t, H, W, C_in) -> queues indexed [t, b, c_in], built in one pass
+    fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (t, B, C_in, H, W)
     queues = build_aeq_batched(fmaps, lp.capacity)
     block_e = lp.block_e
 
-    def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
+    def run_block(kernel_block, bias_block, vm0, fired0):
         # kernel_block: (3, 3, C_in, Cb); bias_block: (Cb,)
-        block = kernel_block.shape[-1]
-        vm0 = jnp.zeros((b_sz, h + 2, w + 2, block), vm_dtype)  # MemPot stack
-        fired0 = jnp.zeros((b_sz, h, w, block), jnp.bool_)
-
+        # vm0: (B, H+2, W+2, Cb); fired0: (B, H, W, Cb)
         def time_step(carry, t):
             vm, fired = carry
 
@@ -315,27 +383,34 @@ def run_conv_layer_batched_planned(
             vm = vm.at[:, 1:-1, 1:-1, :].set(v_new)
             return (vm, fired), spk
 
-        (_, _), spikes = jax.lax.scan(time_step, (vm0, fired0), jnp.arange(t_steps))
-        return spikes  # (T, B, H, W, Cb)
+        (vm, fired), spikes = jax.lax.scan(time_step, (vm0, fired0),
+                                           jnp.arange(t_steps))
+        return spikes, vm, fired  # spikes: (t, B, H, W, Cb)
 
-    kb = kernels.reshape(3, 3, c_in, c_out // channel_block, channel_block)
+    n_blocks = c_out // channel_block
+    kb = kernels.reshape(3, 3, c_in, n_blocks, channel_block)
     kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, 3, 3, C_in, Cb)
-    bb = bias.reshape(c_out // channel_block, channel_block)
-    spikes_blocks = jax.lax.map(lambda kb_bb: run_block(*kb_bb), (kb, bb))
-    spikes_out = jnp.moveaxis(spikes_blocks, 0, 4)  # (T, B, H, W, n_blocks, Cb)
+    bb = bias.reshape(n_blocks, channel_block)
+    vm_b = _split_blocks(carry.vm.astype(vm_dtype), n_blocks, channel_block)
+    fired_b = _split_blocks(carry.fired, n_blocks, channel_block)
+    spikes_blocks, vm_out, fired_out = jax.lax.map(
+        lambda a: run_block(*a), (kb, bb, vm_b, fired_b))
+    new_carry = ConvCarry(vm=_merge_blocks(vm_out),
+                          fired=_merge_blocks(fired_out))
+    spikes_out = jnp.moveaxis(spikes_blocks, 0, 4)  # (t, B, H, W, n_blocks, Cb)
     spikes_out = spikes_out.reshape(t_steps, b_sz, h, w, c_out)
-    spikes_out = jnp.swapaxes(spikes_out, 0, 1)     # (B, T, H, W, C_out)
+    spikes_out = jnp.swapaxes(spikes_out, 0, 1)     # (B, t, H, W, C_out)
 
     stats = LayerStats(
-        in_spike_counts=jnp.swapaxes(queues.count, 0, 1),  # (B, T, C_in)
+        in_spike_counts=jnp.swapaxes(queues.count, 0, 1),  # (B, t, C_in)
         out_spike_counts=jnp.sum(spikes_out, axis=(2, 3)).astype(jnp.int32),
         in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32),
                                    axis=(1, 2, 3, 4)),
         event_block=jnp.asarray(lp.block_e, jnp.int32),
     )
     if lp.pool is not None:
-        return _pool_all(spikes_out, lp.pool), stats
-    return spikes_out, stats
+        return _pool_all(spikes_out, lp.pool), new_carry, stats
+    return spikes_out, new_carry, stats
 
 
 def run_fc_head(spikes_in: jax.Array, weights: jax.Array, bias: jax.Array) -> jax.Array:

@@ -10,6 +10,11 @@ batched event-driven CSNN inference (the paper workload) as its own arch.
   # async micro-batching engine with plan + per-layer event counts:
   PYTHONPATH=src python -m repro.launch.serve --arch csnn-paper --smoke \
       --requests 8 --engine --verbose
+
+  # continuous batching: slot-level refill instead of run-to-completion
+  # flushes, with a slot-utilization report:
+  PYTHONPATH=src python -m repro.launch.serve --arch csnn-paper --smoke \
+      --requests 8 --engine --continuous --t-chunk 1
 """
 import argparse
 import sys
@@ -35,10 +40,12 @@ def serve_csnn(args) -> int:
     from repro.core.csnn import encode_input, init_params, snn_apply_batched
     from repro.core.plan import plan_network
 
+    args.engine = args.engine or args.continuous  # --continuous implies it
     cfg = csnn_paper.SMOKE if args.smoke else csnn_paper.FULL
     params = init_params(jax.random.PRNGKey(0), cfg)
     h, w = cfg.input_hw
-    imgs = jax.random.uniform(jax.random.PRNGKey(1), (args.requests, h, w, 1))
+    imgs = jax.random.uniform(
+        jax.random.PRNGKey(1), (args.requests, h, w, cfg.input_channels))
     batch_tile = args.batch_tile
     plan = plan_network(cfg, capacity=args.capacity,
                         channel_block=args.channel_block,
@@ -51,7 +58,9 @@ def serve_csnn(args) -> int:
         max_batch = -(-args.requests // batch_tile) * batch_tile
         engine = CSNNEngine(params, cfg, plan,
                             CSNNServeConfig(max_batch=max_batch,
-                                            max_delay_ms=args.deadline_ms))
+                                            max_delay_ms=args.deadline_ms,
+                                            continuous=args.continuous,
+                                            t_chunk=args.t_chunk))
         compile_s = engine.warmup()
         times = []
         for _ in range(max(args.iters, 1)):
@@ -60,10 +69,18 @@ def serve_csnn(args) -> int:
             times.append(time.perf_counter() - t0)
         dt = statistics.median(times)
         steady = f"{args.requests / dt:.1f} samples/s (median of {len(times)})"
-        extra = (f"engine: batches={engine.stats['batches']} "
-                 f"full={engine.stats['flushes_full']} "
-                 f"deadline={engine.stats['flushes_deadline']} "
-                 f"padded_slots={engine.stats['padded_slots']}")
+        if args.continuous:
+            extra = (f"engine: chunks={engine.stats['chunks']} "
+                     f"admitted={engine.stats['admitted']} "
+                     f"refills={engine.stats['refills']} "
+                     f"slot_utilization={engine.slot_utilization:.0%} "
+                     f"wait_ms_max={engine.stats['wait_ms_max']:.1f} "
+                     f"deadline_misses={engine.stats['deadline_misses']}")
+        else:
+            extra = (f"engine: batches={engine.stats['batches']} "
+                     f"full={engine.stats['flushes_full']} "
+                     f"deadline={engine.stats['flushes_deadline']} "
+                     f"padded_slots={engine.stats['padded_slots']}")
     else:
         fn = jax.jit(lambda s: snn_apply_batched(
             params, s, cfg, plan, collect_stats=False))
@@ -84,10 +101,12 @@ def serve_csnn(args) -> int:
     for i, p in enumerate(preds.tolist()):
         print(f"req {i}: class {p}")
     print(f"compile: {compile_s:.2f} s (excluded from throughput)")
+    mode = ("continuous" if args.engine and args.continuous
+            else "engine" if args.engine else "batched")
     print(f"throughput: {steady} "
           f"(batch={args.requests}, T={cfg.t_steps}, "
           f"capacity={args.capacity}, channel_block={args.channel_block}, "
-          f"mode={'engine' if args.engine else 'batched'})")
+          f"mode={mode})")
     if extra:
         print(extra)
     if args.verbose:
@@ -117,6 +136,13 @@ def main(argv=None):
     ap.add_argument("--engine", action="store_true",
                     help="route requests through the async micro-batching "
                          "CSNNEngine (csnn-paper only)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="with --engine: continuous batching — slot-level "
+                         "refill between t_chunk steps instead of "
+                         "run-to-completion flushes")
+    ap.add_argument("--t-chunk", type=int, default=0,
+                    help="continuous-mode refill granularity in time steps "
+                         "(0 = plan default; snapped to a divisor of T)")
     ap.add_argument("--batch-tile", type=int, default=8,
                     help="engine pads partial batches to this multiple")
     ap.add_argument("--deadline-ms", type=float, default=10.0,

@@ -1,4 +1,4 @@
-"""Test-session bootstrap: CPU backend pin + hypothesis fallback.
+"""Test-session bootstrap: CPU backend pin + hypothesis fallback + timeout.
 
 * Pins JAX to the CPU platform before any test module imports jax, so the
   suite behaves identically on TPU hosts, CI runners and laptops (all
@@ -8,19 +8,56 @@
   fallback from ``_hypothesis_fallback.py`` under that name so the
   property tests still collect and run.  CI installs real hypothesis and
   takes priority automatically.
+* A SIGALRM-based per-test timeout (pytest-timeout is not available in
+  the container) so a hung test — e.g. an engine future that never
+  resolves — fails fast instead of stalling the whole suite.  Override
+  with PYTEST_TEST_TIMEOUT (seconds, 0 disables).
 """
 from __future__ import annotations
 
 import importlib.util
 import os
+import signal
 import sys
 from pathlib import Path
+
+import pytest
 
 os.environ.setdefault("JAX_PLATFORM_NAME", "cpu")
 
 import jax
 
 jax.config.update("jax_platform_name", "cpu")
+
+_TEST_TIMEOUT_S = int(os.environ.get("PYTEST_TEST_TIMEOUT", "300"))
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout(request):
+    """Fail any single test that exceeds the timeout (hang guard).
+
+    SIGALRM only fires on the main thread and only interrupts Python-level
+    code, which is exactly the hang class we care about (stuck asyncio
+    loops, deadlocked futures); it is a no-op on non-Linux/main-thread
+    edge cases.
+    """
+    if (_TEST_TIMEOUT_S <= 0 or not hasattr(signal, "SIGALRM")
+            or signal.getsignal(signal.SIGALRM) not in
+            (signal.SIG_DFL, signal.SIG_IGN, None)):
+        yield
+        return
+
+    def on_timeout(signum, frame):
+        pytest.fail(f"test exceeded {_TEST_TIMEOUT_S}s per-test timeout "
+                    f"(PYTEST_TEST_TIMEOUT to adjust)", pytrace=False)
+
+    old = signal.signal(signal.SIGALRM, on_timeout)
+    signal.alarm(_TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 try:
     import hypothesis  # noqa: F401  (real package wins when present)

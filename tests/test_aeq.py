@@ -16,6 +16,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 class TestRoundTrip:
+    @pytest.mark.slow
     @given(st.integers(2, 28), st.integers(2, 28), st.floats(0.0, 1.0),
            st.integers(0, 10_000))
     @settings(max_examples=25, deadline=None)
@@ -41,6 +42,7 @@ class TestRoundTrip:
 class TestInterlacedOrder:
     @given(st.integers(3, 24), st.integers(3, 24), st.floats(0.05, 0.8),
            st.integers(0, 10_000))
+    @pytest.mark.slow
     @settings(max_examples=20, deadline=None)
     def test_emission_order_by_column(self, h, w, density, seed):
         """Events come out column 0..8 (the paper's hazard-free order)."""
@@ -99,6 +101,7 @@ class TestCalibration:
 class TestBatchedBuilder:
     @given(st.integers(2, 16), st.integers(2, 16), st.floats(0.0, 1.0),
            st.integers(1, 6), st.integers(0, 10_000))
+    @pytest.mark.slow
     @settings(max_examples=20, deadline=None)
     def test_batched_equals_vmapped_single(self, h, w, density, n, seed):
         """The fused one-sort builder is bit-exact vs per-fmap compaction."""

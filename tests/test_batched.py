@@ -31,6 +31,7 @@ def _batch_spikes(rng, b, t, h, w, c, density=0.2):
 class TestApplyEventsBatched:
     @given(st.integers(1, 5), st.integers(4, 14), st.integers(4, 14),
            st.floats(0.0, 0.8), st.integers(0, 10_000))
+    @pytest.mark.slow
     @settings(max_examples=15, deadline=None)
     def test_matches_vmapped_apply_events(self, b, h, w, density, seed):
         rng = np.random.default_rng(seed)

@@ -1,0 +1,149 @@
+"""Step-resumable event pipeline: the chunked stepper must be bit-exact.
+
+Contract (core/csnn.py): ``init_state`` + ``snn_step_chunk`` over any
+divisor chunking of T + ``snn_readout`` reproduces ``snn_apply_batched``
+exactly — per time step the computation is identical, only the scans are
+cut at chunk boundaries.  This is what lets the serving engine admit
+requests mid-flight (tests/test_continuous.py) without perturbing
+in-flight ones.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CSNNConfig, ConvSpec, FCSpec, encode_input,
+                        init_params, init_state, plan_network, snap_t_chunk,
+                        snn_apply, snn_apply_batched, snn_readout,
+                        snn_step_chunk)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CSNNConfig(input_hw=(8, 8),
+                 layers=(ConvSpec(4), ConvSpec(4, pool=2), FCSpec(3)),
+                 t_steps=4)
+
+
+def _setup(seed=0, b=3, density=0.3):
+    params = init_params(jax.random.PRNGKey(seed), CFG)
+    plan = plan_network(CFG, capacity=64, channel_block=2, batch_tile=4)
+    rng = np.random.default_rng(seed)
+    spikes = jnp.asarray(rng.random((b, CFG.t_steps, 8, 8, 1)) < density)
+    return params, plan, spikes
+
+
+class TestChunkedStepper:
+    @pytest.mark.parametrize("t_chunk", [1, 2, 4])
+    def test_manual_chunking_bit_exact(self, t_chunk):
+        """Chaining snn_step_chunk over t_chunk slices + readout ==
+        monolithic snn_apply_batched, bit for bit."""
+        params, plan, spikes = _setup()
+        want = snn_apply_batched(params, spikes, CFG, plan,
+                                 collect_stats=False)
+        state = init_state(params, CFG, plan, spikes.shape[0])
+        for k in range(0, CFG.t_steps, t_chunk):
+            state = snn_step_chunk(params, state,
+                                   spikes[:, k:k + t_chunk], CFG, plan)
+        got = snn_readout(params, state, CFG)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("t_chunk", [1, 2, 4])
+    def test_planned_t_chunk_wrapper_bit_exact(self, t_chunk):
+        """snn_apply_batched with a t_chunk plan scans the chunks itself
+        and stays bit-exact vs the single-chunk plan (and vs vmap)."""
+        params, _, spikes = _setup()
+        plan_c = plan_network(CFG, capacity=64, channel_block=2,
+                              batch_tile=4, t_chunk=t_chunk)
+        want = jax.vmap(lambda s: snn_apply(params, s, CFG,
+                                            capacity=64, channel_block=2,
+                                            collect_stats=False))(spikes)
+        got = snn_apply_batched(params, spikes, CFG, plan_c,
+                                collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_chunked_stats_concatenate_over_time(self):
+        params, _, spikes = _setup()
+        plan_c = plan_network(CFG, capacity=64, channel_block=2,
+                              batch_tile=4, t_chunk=2)
+        _, stats = snn_apply_batched(params, spikes, CFG, plan_c)
+        plan_m = plan_network(CFG, capacity=64, channel_block=2, batch_tile=4)
+        _, want = snn_apply_batched(params, spikes, CFG, plan_m)
+        for st_c, st_m in zip(stats, want):
+            np.testing.assert_array_equal(np.asarray(st_c.in_spike_counts),
+                                          np.asarray(st_m.in_spike_counts))
+            np.testing.assert_array_equal(np.asarray(st_c.out_spike_counts),
+                                          np.asarray(st_m.out_spike_counts))
+
+    def test_state_is_a_pytree(self):
+        params, plan, spikes = _setup()
+        state = init_state(params, CFG, plan, 3)
+        leaves = jax.tree_util.tree_leaves(state)
+        assert leaves and all(hasattr(l, "shape") for l in leaves)
+        # jit over the state works (the serving engine relies on it)
+        step = jax.jit(lambda st, sp: snn_step_chunk(params, st, sp, CFG,
+                                                     plan))
+        st2 = step(state, spikes[:, :CFG.t_steps])
+        assert st2.fc_drive.shape == state.fc_drive.shape
+
+
+class TestTChunkPlanning:
+    def test_snap_t_chunk_divisors(self):
+        assert snap_t_chunk(4, 2) == 2
+        assert snap_t_chunk(4, 3) == 2
+        assert snap_t_chunk(5, 2) == 1   # 5 is prime: falls to 1
+        assert snap_t_chunk(6, 4) == 3
+        assert snap_t_chunk(6, 99) == 6  # capped at T
+
+    def test_plan_network_snaps_t_chunk(self):
+        plan = plan_network(CFG, t_chunk=3)  # 3 does not divide T=4 -> 2
+        assert plan.t_chunk == 2
+        assert plan.chunk_steps == 2
+
+    def test_default_plan_is_monolithic(self):
+        plan = plan_network(CFG)
+        assert plan.t_chunk is None
+        assert plan.chunk_steps == CFG.t_steps
+
+    def test_validate_rejects_non_divisor_t_chunk(self):
+        import dataclasses
+        plan = plan_network(CFG, t_chunk=2)
+        bad = dataclasses.replace(plan, t_chunk=3)
+        with pytest.raises(ValueError, match="t_chunk"):
+            bad.validate(CFG)
+
+
+class TestInputChannels:
+    """plan_network/validate used to hardcode C_in=1; multi-channel input
+    (e.g. a 2-polarity DVS encoding) must plan and run end to end."""
+
+    CFG2 = CSNNConfig(input_hw=(8, 8), input_channels=2,
+                      layers=(ConvSpec(4), FCSpec(3)), t_steps=3)
+
+    def test_plan_threads_input_channels(self):
+        plan = plan_network(self.CFG2, capacity=64)
+        assert plan.layers[0].c_in == 2
+        plan.validate(self.CFG2)  # geometry must round-trip
+
+    def test_init_params_shapes(self):
+        params = init_params(jax.random.PRNGKey(0), self.CFG2)
+        assert params["conv0"]["w"].shape == (3, 3, 2, 4)
+
+    def test_batched_bit_exact_vs_single(self):
+        params = init_params(jax.random.PRNGKey(1), self.CFG2)
+        plan = plan_network(self.CFG2, capacity=64, channel_block=2)
+        rng = np.random.default_rng(2)
+        spikes = jnp.asarray(rng.random((2, 3, 8, 8, 2)) < 0.3)
+        want = jax.vmap(lambda s: snn_apply(params, s, self.CFG2, plan,
+                                            collect_stats=False))(spikes)
+        got = snn_apply_batched(params, spikes, self.CFG2, plan,
+                                collect_stats=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_encode_input_keeps_channels(self):
+        imgs = jnp.zeros((2, 8, 8, 2))
+        sp = encode_input(imgs, self.CFG2)
+        assert sp.shape == (2, 3, 8, 8, 2)
+
+    def test_single_channel_plans_unchanged(self):
+        plan = plan_network(CFG, capacity=64)
+        assert plan.layers[0].c_in == 1

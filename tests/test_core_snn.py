@@ -129,6 +129,7 @@ class TestEventConv:
         kernel = jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))
         return fmap, kernel
 
+    @pytest.mark.slow
     @given(st.integers(3, 24), st.integers(3, 24), st.floats(0.0, 1.0), st.integers(0, 10_000))
     @settings(max_examples=30, deadline=None)
     def test_bitexact_vs_sliding_window(self, h, w, density, seed):

@@ -26,6 +26,7 @@ def _spikes(rng, h, w, density):
 class TestBitExactVsDense:
     @given(st.integers(3, 25), st.integers(3, 25), st.floats(0.0, 1.0),
            st.integers(0, 10_000))
+    @pytest.mark.slow
     @settings(max_examples=25, deadline=None)
     def test_float32_any_density(self, h, w, density, seed):
         rng = np.random.default_rng(seed)
@@ -40,6 +41,7 @@ class TestBitExactVsDense:
     @pytest.mark.parametrize("dtype,kmax", [(jnp.int16, 20), (jnp.int8, 3)])
     @given(st.integers(3, 19), st.integers(3, 19), st.floats(0.0, 1.0),
            st.integers(0, 10_000))
+    @pytest.mark.slow
     @settings(max_examples=15, deadline=None)
     def test_integer_datapaths(self, dtype, kmax, h, w, density, seed):
         """In the non-saturating regime int event conv == int dense conv.
@@ -71,6 +73,7 @@ class TestBitExactVsDense:
 class TestBlockedEarlyExit:
     @given(st.integers(4, 20), st.integers(4, 20), st.floats(0.0, 0.6),
            st.integers(1, 97), st.integers(0, 10_000))
+    @pytest.mark.slow
     @settings(max_examples=20, deadline=None)
     def test_blocked_equals_unblocked(self, h, w, density, block, seed):
         """Self-timed early exit is invisible in the results, any block size."""

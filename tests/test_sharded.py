@@ -20,6 +20,10 @@ from repro.sharding.specs import batch_mesh
 
 jax.config.update("jax_platform_name", "cpu")
 
+# the 8-way forced-CPU-mesh tests are the heaviest in the suite; the CI
+# multi-device job opts back in with `-m ""`
+pytestmark = pytest.mark.slow
+
 SMOKE = CSNNConfig(input_hw=(10, 10),
                    layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
                    t_steps=4)
