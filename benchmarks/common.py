@@ -1,4 +1,12 @@
-"""Shared benchmark utilities: timing, CSV emission, cached CSNN training."""
+"""Shared benchmark utilities: timing, CSV + JSON emission, cached CSNN
+training.
+
+Every ``emit`` row is also recorded in-process; ``write_bench_json``
+then dumps one table's rows (median throughput + the derived config
+string) to ``BENCH_<table>.json`` so the perf trajectory is
+machine-readable across PRs — CI runs ``benchmarks.run table5 --json``,
+fails if the file is missing, and uploads it as an artifact.
+"""
 from __future__ import annotations
 
 import json
@@ -10,6 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+# every emit() lands here; write_bench_json() snapshots one table's rows
+_ROWS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -26,6 +37,27 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                  "derived": derived})
+
+
+def write_bench_json(table: str, path: str | Path | None = None) -> Path:
+    """Write ``BENCH_<table>.json`` with every row emitted for ``table``.
+
+    Rows are matched by the ``<table>/`` name prefix; the file carries
+    enough environment context (jax version, backend) to compare the
+    trajectory across PRs without re-deriving it from CI logs.
+    """
+    rows = [r for r in _ROWS if r["name"].startswith(f"{table}/")]
+    out = Path(path) if path is not None else Path.cwd() / f"BENCH_{table}.json"
+    out.write_text(json.dumps({
+        "table": table,
+        "rows": rows,
+        "env": {"jax": jax.__version__, "backend": jax.default_backend(),
+                "device_count": jax.device_count()},
+    }, indent=2) + "\n")
+    print(f"# wrote {out} ({len(rows)} rows)")
+    return out
 
 
 def trained_csnn(steps: int = 400, n_train: int = 3000, seed: int = 0):

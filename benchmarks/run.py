@@ -4,9 +4,13 @@ the paper table it reproduces).
 
 Optional argv filters select a subset by table name, e.g.
 ``python -m benchmarks.run table5`` — used by CI as a smoke invocation.
+``--json`` additionally writes ``BENCH_<table>.json`` per selected table
+that supports it (currently table5) — the machine-readable perf
+trajectory CI archives as an artifact.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import traceback
 
@@ -18,7 +22,14 @@ def main(argv=None) -> None:
 
     modules = (table4_accuracy, table3_sparsity_utilization,
                table1_parallelism, table5_throughput, table2_roofline)
-    wanted = list(sys.argv[1:] if argv is None else argv)
+    args = list(sys.argv[1:] if argv is None else argv)
+    flags = {a for a in args if a.startswith("--")}
+    unknown = flags - {"--json"}
+    if unknown:
+        print(f"unknown flags {sorted(unknown)}; supported: --json",
+              file=sys.stderr)
+        sys.exit(2)
+    wanted = [a for a in args if not a.startswith("--")]
     if wanted:
         selected = [m for m in modules
                     if any(w in m.__name__ for w in wanted)]
@@ -32,7 +43,11 @@ def main(argv=None) -> None:
     failures = 0
     for mod in modules:
         try:
-            mod.main()
+            kwargs = {}
+            if ("--json" in flags
+                    and "json_out" in inspect.signature(mod.main).parameters):
+                kwargs["json_out"] = True
+            mod.main(**kwargs)
         except Exception:
             failures += 1
             print(f"{mod.__name__},0.0,ERROR")

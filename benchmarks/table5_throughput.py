@@ -12,13 +12,19 @@ Beyond-paper rows: the batched event pipeline (``snn_apply_batched``) vs
 ``vmap`` over the single-sample path vs the dense baseline — the batched
 rows are the serving configuration and must be at least as fast per
 sample as vmap (amortized queue compaction + batch-wide early exit) —
-plus the per-layer-planned pipeline (``plan_network`` capacities, the
-padded-slot reduction recorded in the derived column), the async
+plus the memory-interlaced event-parallel pipeline (``event_par``
+autotuned per layer: banked MemPot tiles, whole hazard-free columns
+applied per step; bit-exact vs the sequential batched row and asserted
+faster), the per-layer-planned pipeline (``plan_network`` capacities,
+the padded-slot reduction recorded in the derived column), the async
 micro-batching serving engine (``serve.csnn_engine``, requests submitted
 one at a time and flushed on batch/deadline thresholds), and — under a
 bursty Poisson arrival trace — continuous batching (slot-level refill,
 ``t_chunk``-granular admission) vs the run-to-completion engine on the
 identical trace (bit-exact logits, higher observed throughput).
+
+``--json`` (via benchmarks.run) writes the rows to BENCH_table5.json —
+the machine-readable throughput trajectory tracked across PRs.
 """
 from __future__ import annotations
 
@@ -35,10 +41,10 @@ from repro.core.csnn import (encode_input, snn_apply, snn_apply_batched,
 from repro.core.plan import plan_network
 from repro.serve.csnn_engine import CSNNEngine, CSNNServeConfig
 
-from .common import emit, timeit, trained_csnn
+from .common import emit, timeit, trained_csnn, write_bench_json
 
 
-def main():
+def main(json_out: bool = False):
     cfg, params, (xtr, ytr, xte, yte) = trained_csnn()
     batch = 4
 
@@ -85,6 +91,31 @@ def main():
     emit("table5/batched_pipeline", us_batched,
          f"capacity={cap};batch={batch};vs_vmap={us_vmap / us_batched:.2f}x;"
          f"vs_dense={us_dense / us_batched:.2f}x")
+
+    # memory-interlaced event-parallel pipeline: event_par autotuned per
+    # layer, banked MemPot tiles, sort-free compaction, one vectorized
+    # column application per (t, c_in, bank).  Bit-exact vs the batched
+    # row (asserted) and the headline speedup of the interlaced refactor.
+    plan_il = plan_network(cfg, capacity=cap, channel_block=8,
+                           batch_tile=batch, event_par=None)
+    il_fn = jax.jit(lambda s: snn_apply_batched(
+        params, s, cfg, plan_il, collect_stats=False))
+    assert np.array_equal(np.asarray(il_fn(spikes)),
+                          np.asarray(batched_fn(spikes))), \
+        "interlaced pipeline must be bit-exact vs the sequential batched row"
+    us_il = timeit(il_fn, spikes) / batch
+    speedup = us_batched / us_il
+    emit("table5/interlaced", us_il,
+         f"event_par={[lp.event_par for lp in plan_il.layers]};"
+         f"vs_batched={speedup:.2f}x;vs_dense={us_dense / us_il:.2f}x")
+    # the speedup assertion only makes sense when the autotuner actually
+    # picked a parallel width (always true on the paper net; guards the
+    # degenerate all-sequential case where both rows trace identical
+    # computations and the ratio is pure timer noise)
+    if any(lp.event_par > 1 for lp in plan_il.layers):
+        assert speedup > 1.0, (
+            f"interlaced event-parallel row must beat the sequential "
+            f"batched row, got {speedup:.2f}x")
 
     # per-layer plan: same calibrated request, capacities capped per layer
     plan = plan_network(cfg, capacity=cap, channel_block=8, batch_tile=batch)
@@ -178,6 +209,9 @@ def main():
          f"slot_util={cont.slot_utilization:.0%};"
          f"vs_async_engine={us_rtc / us_cont:.2f}x")
 
+    if json_out:
+        write_bench_json("table5")
+
 
 if __name__ == "__main__":
-    main()
+    main(json_out="--json" in __import__("sys").argv[1:])

@@ -14,17 +14,20 @@ Convolutional Spiking Neural Networks" (TCAD 2022), adapted FPGA -> TPU:
 * csnn         — model assembly (ANN train path + SNN inference paths)
 * pipeline_sim — cycle-level FPGA pipeline model for PE utilization (C8)
 """
-from .aeq import (BatchedEventQueue, EventQueue, build_aeq, build_aeq_batched,
-                  calibrate_capacities, calibrate_capacity, column_index,
-                  deinterlace, interlace, scatter_aeq)
+from .aeq import (BankedEvents, BatchedEventQueue, EventQueue, build_aeq,
+                  build_aeq_batched, build_bank_masks, calibrate_capacities,
+                  calibrate_capacity, column_index, deinterlace, interlace,
+                  interlaced_capacity, scatter_aeq, segment_pad)
 from .csnn import (CSNNConfig, CSNNState, ConvSpec, FCSpec, ann_apply,
                    encode_input, init_params, init_state, snn_apply,
                    snn_apply_batched, snn_apply_dense, snn_apply_sharded,
                    snn_readout, snn_step_chunk)
 from .encoding import mttfs_thresholds, multi_threshold_encode, rate_encode, spike_sparsity
-from .event_conv import (apply_events, apply_events_batched,
-                         apply_events_blocked, crop_vm, dense_conv, pad_vm,
-                         rotate_kernel)
+from .event_conv import (apply_banked_columns, apply_events,
+                         apply_events_banked, apply_events_banked_batched,
+                         apply_events_batched, apply_events_blocked, bank_vm,
+                         crop_vm, dense_conv, pad_vm, rotate_kernel,
+                         shifted_bank_masks, tap_matrix, unbank_vm)
 from .neuron import IFState, if_reset_step, mttfs_step, ttfs_slope_step
 from .plan import (LayerPlan, NetworkPlan, effective_capacity, pad_capacity,
                    plan_conv_layer, plan_network, snap_t_chunk)

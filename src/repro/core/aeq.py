@@ -15,15 +15,32 @@ preserved: it is what makes same-column events hazard-free (their 3x3
 neighbourhoods can never overlap) and we keep it so the cycle-level
 pipeline simulator and the Pallas kernel see the same schedule as the RTL.
 
-Two entry points share the compaction logic: ``build_aeq`` compacts one
-fmap, and ``build_aeq_batched`` compacts a whole stack of fmaps (any
+The interlace structure is a first-class layout, not just an ordering:
+
+* every queue carries **column segment offsets/counts** (``seg_offsets``/
+  ``seg_counts``, one entry per interlace column s=0..8) describing which
+  contiguous queue slices are mutually hazard-free — the metadata the
+  event-parallel kernels exploit;
+* ``segment_pad`` re-lays a queue out so each column segment is padded to
+  a multiple of ``event_par`` — then *every* aligned group of
+  ``event_par`` consecutive slots is column-homogeneous by construction
+  (the layout consumed by ``event_conv_pallas_interlaced``);
+* ``build_bank_masks`` compacts fmaps straight into the paper's NINE
+  membrane RAM banks (Fig. 6): per-column occupancy masks over the banked
+  macro grid, honouring the same capacity truncation as the queue but
+  needing no sort at all — the builder behind the bank-parallel jax path
+  (``event_conv.apply_events_interlaced*``).
+
+Two queue entry points share the compaction logic: ``build_aeq`` compacts
+one fmap, and ``build_aeq_batched`` compacts a whole stack of fmaps (any
 leading dims, e.g. (B, T, C_in, H, W)) in ONE fused batched sort — the
 builder behind the batched inference pipeline (scheduler
-``run_conv_layer_batched``).  Property tests live in tests/test_aeq.py.
+``run_conv_layer_batched``).  Property tests live in tests/test_aeq.py and
+tests/test_interlaced.py.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +52,20 @@ class EventQueue(NamedTuple):
 
     coords: (capacity, 2) int32 — (i, j) per event; undefined where ~valid.
     valid:  (capacity,) bool    — which slots hold real events.
-    count:  () int32            — number of valid events (= valid.sum()).
+    count:  () int32            — spike demand (may exceed kept events on
+                                  overflow; occupancy is valid.sum()).
+    seg_offsets/seg_counts: (9,) int32 — interlace column segments: the
+        kept events of column s occupy queue slots
+        [seg_offsets[s], seg_offsets[s] + seg_counts[s]).  None for
+        raster-ordered queues (``interlaced=False``), where no such
+        contiguous hazard-free slices exist.
     """
 
     coords: jax.Array
     valid: jax.Array
     count: jax.Array
+    seg_offsets: Optional[jax.Array] = None
+    seg_counts: Optional[jax.Array] = None
 
     @property
     def capacity(self) -> int:
@@ -52,7 +77,9 @@ class BatchedEventQueue(NamedTuple):
 
     coords: (..., capacity, 2) int32 — (i, j) per event; -1 where ~valid.
     valid:  (..., capacity) bool     — which slots hold real events.
-    count:  (...,) int32             — valid events per queue.
+    count:  (...,) int32             — spike demand per queue.
+    seg_offsets/seg_counts: (..., 9) int32 — per-queue interlace column
+        segments (see :class:`EventQueue`); None when raster-ordered.
 
     The leading dims are whatever ``build_aeq_batched`` was given, e.g.
     (T, B, C_in) in the batched scheduler.  ``queue_at`` views one member
@@ -62,6 +89,8 @@ class BatchedEventQueue(NamedTuple):
     coords: jax.Array
     valid: jax.Array
     count: jax.Array
+    seg_offsets: Optional[jax.Array] = None
+    seg_counts: Optional[jax.Array] = None
 
     @property
     def capacity(self) -> int:
@@ -72,13 +101,48 @@ class BatchedEventQueue(NamedTuple):
         return int(np.prod(self.coords.shape[:-2], dtype=np.int64))
 
     def queue_at(self, index: tuple) -> EventQueue:
-        return EventQueue(coords=self.coords[index], valid=self.valid[index],
-                          count=self.count[index])
+        return EventQueue(
+            coords=self.coords[index], valid=self.valid[index],
+            count=self.count[index],
+            seg_offsets=None if self.seg_offsets is None
+            else self.seg_offsets[index],
+            seg_counts=None if self.seg_counts is None
+            else self.seg_counts[index])
+
+
+class BankedEvents(NamedTuple):
+    """Kept events of a queue, laid out as the 9 membrane RAM banks.
+
+    masks: (..., 9, HB, WB) bool — bank_masks[..., b, I, J] is True iff a
+        kept event's *halo-padded centre* (i+1, j+1) falls in padded-space
+        bank b = 3*((i+1)%3) + (j+1)%3 at macro cell (I, J).  Events of
+        one interlace column all land in a single bank, so slicing one
+        bank == selecting one hazard-free column.  The banking geometry
+        matches ``event_conv.bank_vm`` exactly.
+    count:      (...,) int32 — spike demand (same semantics as the queue).
+    seg_counts: (..., 9) int32 — kept events per interlace column s
+        (paper order s = 3(i%3)+(j%3), NOT bank order).
+    """
+
+    masks: jax.Array
+    count: jax.Array
+    seg_counts: jax.Array
 
 
 def column_index(i: jax.Array, j: jax.Array) -> jax.Array:
     """Interlacing column s in 0..8 of a coordinate (paper Figs. 6/7)."""
     return (i % 3) * 3 + (j % 3)
+
+
+def interlaced_capacity(capacity: int, event_par: int) -> int:
+    """Queue depth of the ``segment_pad`` layout: each of the 9 column
+    segments is padded to a multiple of ``event_par``, so the worst case
+    adds 9*(event_par-1) slots; rounded up to an ``event_par`` multiple so
+    aligned groups tile the queue evenly."""
+    if event_par <= 1:
+        return capacity
+    base = capacity + 9 * (event_par - 1)
+    return -(-base // event_par) * event_par
 
 
 def _order_keys(h: int, w: int, interlaced: bool) -> jax.Array:
@@ -92,30 +156,22 @@ def _order_keys(h: int, w: int, interlaced: bool) -> jax.Array:
     return order_key.astype(jnp.int32)
 
 
-def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> EventQueue:
-    """Compact a binary fmap (H, W) into an EventQueue.
+def _kept_segments(flat: jax.Array, h: int, w: int,
+                   kept: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Column segments of the first ``kept`` events in interlaced order.
 
-    Events are ordered by (column s, i, j) when ``interlaced`` (the paper's
-    hazard-free read order), else by raster (i, j).  Events beyond
-    ``capacity`` are dropped — exactly what a full hardware queue would do;
-    capacity is calibrated so this never happens in practice
-    (``calibrate_capacity``).
+    flat: (N, H*W) bool active pixels; kept: (N,) int32 events retained
+    after capacity truncation.  Returns (seg_offsets, seg_counts), both
+    (N, 9): truncation drops from the tail of the (s, i, j) order, so the
+    kept count of column s is clip(kept - cum_s, 0, count_s).
     """
-    h, w = fmap.shape
-    fmap = fmap.astype(bool)
-    big = jnp.asarray(9 * h * w + 1, jnp.int32)
-    key = jnp.where(fmap.ravel(), _order_keys(h, w, interlaced), big)
-    sorted_key, perm = jax.lax.sort_key_val(key, jnp.arange(h * w, dtype=jnp.int32))
-    take_n = min(capacity, h * w)  # a queue deeper than the fmap just stays padded
-    take = perm[:take_n]
-    valid = sorted_key[:take_n] < big
-    coords = jnp.stack([take // w, take % w], axis=-1)
-    coords = jnp.where(valid[:, None], coords, -1)
-    if take_n < capacity:
-        pad = capacity - take_n
-        coords = jnp.concatenate([coords, jnp.full((pad, 2), -1, coords.dtype)])
-        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
-    return EventQueue(coords=coords, valid=valid, count=jnp.sum(fmap).astype(jnp.int32))
+    cols = column_index(jnp.arange(h * w) // w, jnp.arange(h * w) % w)
+    onehot = (cols[None, :, None] == jnp.arange(9)[None, None, :])
+    full = jnp.sum(flat[:, :, None] & onehot, axis=1).astype(jnp.int32)
+    cum = jnp.cumsum(full, axis=-1) - full  # exclusive
+    seg_counts = jnp.clip(kept[:, None] - cum, 0, full)
+    seg_offsets = jnp.cumsum(seg_counts, axis=-1) - seg_counts
+    return seg_offsets, seg_counts
 
 
 def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
@@ -128,7 +184,8 @@ def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
     instead of N independent compactions, which is what lets the batched
     inference pipeline amortize queue construction across (B, T, C_in).
     All queues share one calibrated ``capacity`` (the hardware analogue:
-    every BRAM queue instance is sized identically).
+    every BRAM queue instance is sized identically).  Interlaced queues
+    additionally carry their column segment offsets/counts.
     """
     *lead, h, w = fmaps.shape
     n = int(np.prod(lead, dtype=np.int64)) if lead else 1
@@ -147,11 +204,125 @@ def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
         coords = jnp.concatenate(
             [coords, jnp.full((n, pad, 2), -1, coords.dtype)], axis=1)
         valid = jnp.concatenate([valid, jnp.zeros((n, pad), bool)], axis=1)
+    count = jnp.sum(flat, axis=-1).astype(jnp.int32)
+    seg_off = seg_cnt = None
+    if interlaced:
+        kept = jnp.minimum(count, take_n)
+        seg_off, seg_cnt = _kept_segments(flat, h, w, kept)
+        seg_off = seg_off.reshape(*lead, 9)
+        seg_cnt = seg_cnt.reshape(*lead, 9)
     return BatchedEventQueue(
         coords=coords.reshape(*lead, capacity, 2),
         valid=valid.reshape(*lead, capacity),
-        count=jnp.sum(flat, axis=-1).astype(jnp.int32).reshape(tuple(lead)),
-    )
+        count=count.reshape(tuple(lead)),
+        seg_offsets=seg_off, seg_counts=seg_cnt)
+
+
+def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> EventQueue:
+    """Compact a binary fmap (H, W) into an EventQueue.
+
+    Events are ordered by (column s, i, j) when ``interlaced`` (the paper's
+    hazard-free read order), else by raster (i, j).  Events beyond
+    ``capacity`` are dropped — exactly what a full hardware queue would do;
+    capacity is calibrated so this never happens in practice
+    (``calibrate_capacity``).  One-fmap view of ``build_aeq_batched`` (the
+    compaction logic is shared, so the two are bit-identical by
+    construction).
+    """
+    bq = build_aeq_batched(fmap[None], capacity, interlaced=interlaced)
+    return bq.queue_at((0,))
+
+
+def segment_pad(queue: BatchedEventQueue | EventQueue,
+                event_par: int) -> BatchedEventQueue | EventQueue:
+    """Re-lay an interlaced queue so column segments are event_par-aligned.
+
+    Each column segment keeps its events in order but starts at a multiple
+    of ``event_par`` and is padded to a multiple of ``event_par`` with
+    invalid slots, so every aligned group of ``event_par`` consecutive
+    slots holds events of ONE interlace column (or padding).  This is the
+    layout ``event_conv_pallas_interlaced`` consumes: aligned groups are
+    hazard-free by construction and the sequential column-boundary
+    fallback never fires.  Replaying the padded queue sequentially is
+    bit-exact vs the original (padding slots are invalid no-ops; relative
+    event order is unchanged).
+
+    The returned queue has capacity ``interlaced_capacity(cap, event_par)``
+    and ``seg_offsets`` pointing into the padded layout.
+    """
+    if queue.seg_offsets is None:
+        raise ValueError("segment_pad needs an interlaced queue carrying "
+                         "column segments (build_aeq(..., interlaced=True))")
+    single = isinstance(queue, EventQueue)
+    if single:
+        queue = BatchedEventQueue(*(x[None] for x in queue))
+    coords, valid = queue.coords, queue.valid
+    seg_cnt, seg_off = queue.seg_counts, queue.seg_offsets
+    lead = coords.shape[:-2]
+    n = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    cap = coords.shape[-2]
+    cap_pad = interlaced_capacity(cap, event_par)
+    coords = coords.reshape(n, cap, 2)
+    valid = valid.reshape(n, cap)
+    seg_cnt = seg_cnt.reshape(n, 9)
+    seg_off = seg_off.reshape(n, 9)
+
+    pad_cnt = -(-seg_cnt // event_par) * event_par
+    pad_off = jnp.cumsum(pad_cnt, axis=-1) - pad_cnt
+    col = column_index(coords[..., 0], coords[..., 1])
+    col = jnp.where(valid, col, 0)
+    rank = jnp.arange(cap)[None, :] - jnp.take_along_axis(seg_off, col, -1)
+    newpos = jnp.take_along_axis(pad_off, col, -1) + rank
+    newpos = jnp.where(valid, newpos, cap_pad)  # dropped by mode="drop"
+
+    def scatter_one(c, v, pos):
+        oc = jnp.full((cap_pad, 2), -1, c.dtype).at[pos].set(c, mode="drop")
+        ov = jnp.zeros((cap_pad,), bool).at[pos].set(v, mode="drop")
+        return oc, ov
+
+    oc, ov = jax.vmap(scatter_one)(coords, valid, newpos)
+    out = BatchedEventQueue(
+        coords=oc.reshape(*lead, cap_pad, 2),
+        valid=ov.reshape(*lead, cap_pad),
+        count=queue.count,
+        seg_offsets=pad_off.reshape(*lead, 9),
+        seg_counts=queue.seg_counts)
+    return out.queue_at((0,)) if single else out
+
+
+def build_bank_masks(fmaps: jax.Array, capacity: int) -> BankedEvents:
+    """Compact binary fmaps (..., H, W) straight into the 9 RAM banks.
+
+    Sort-free equivalent of ``build_aeq_batched`` for mask consumers: the
+    kept-event set (the first ``min(capacity, H*W)`` events in the
+    interlaced (s, i, j) order — identical truncation to the queue, as
+    asserted in tests/test_interlaced.py) is computed with per-column
+    cumulative ranks instead of a sort, then banked in padded space so the
+    result plugs directly into ``event_conv.apply_events_interlaced*``.
+    """
+    *lead, h, w = fmaps.shape
+    n = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    flat = fmaps.reshape(n, h, w).astype(bool)
+    il = interlace(flat)                       # (n, 9, hb, wb) unpadded banks
+    hb, wb = il.shape[-2:]
+    il_flat = il.reshape(n, 9, hb * wb)
+    # within a column, (I, J) raster order == (i, j) order (i = 3I + si)
+    seg_full = jnp.sum(il_flat, axis=-1).astype(jnp.int32)       # (n, 9)
+    count = jnp.sum(seg_full, axis=-1)
+    kept = jnp.minimum(count, min(capacity, h * w))
+    seg_off = jnp.cumsum(seg_full, axis=-1) - seg_full           # exclusive
+    rank_in_col = jnp.cumsum(il_flat, axis=-1) - il_flat         # exclusive
+    rank = seg_off[:, :, None] + rank_in_col
+    kept_il = il_flat & (rank < kept[:, None, None])
+    kept_map = deinterlace(kept_il.reshape(n, 9, hb, wb), (h, w))
+    seg_counts = jnp.clip(kept[:, None] - seg_off, 0, seg_full)
+    # bank the halo-padded centres: event (i, j) sits at padded (i+1, j+1)
+    padded = jnp.pad(kept_map, [(0, 0), (1, 1), (1, 1)])
+    masks = interlace(padded)
+    return BankedEvents(
+        masks=masks.reshape(*lead, *masks.shape[-3:]),
+        count=count.reshape(tuple(lead)).astype(jnp.int32),
+        seg_counts=seg_counts.reshape(*lead, 9))
 
 
 def scatter_aeq(queue: EventQueue, shape: tuple[int, int]) -> jax.Array:
@@ -200,25 +371,30 @@ def calibrate_capacities(per_layer_counts, *, percentile: float = 99.9,
 # ---------------------------------------------------------------------------
 
 def interlace(vm: jax.Array) -> jax.Array:
-    """(H, W) membrane potentials -> (9, ceil(H/3), ceil(W/3)) memory columns.
+    """(..., H, W) values -> (..., 9, ceil(H/3), ceil(W/3)) memory columns.
 
     Column s = 3*(i%3) + (j%3); within a column, the element of the 3x3
     macro-block (I, J) = (i//3, j//3) lives at address (I, J).  Any 3x3
     window of the original map touches each column exactly once — this is
     the invariant the FPGA exploits for 9 conflict-free ports, and the
-    property test in tests/test_aeq.py asserts it.
+    property test in tests/test_aeq.py asserts it.  Leading dims (batch,
+    time, ...) pass through unchanged.
     """
-    h, w = vm.shape
+    *lead, h, w = vm.shape
     ph, pw = -h % 3, -w % 3
-    vm = jnp.pad(vm, ((0, ph), (0, pw)))
-    hh, ww = vm.shape
-    # (H, W) -> (H/3, 3, W/3, 3) -> (3, 3, H/3, W/3) -> (9, H/3, W/3)
-    blocks = vm.reshape(hh // 3, 3, ww // 3, 3).transpose(1, 3, 0, 2)
-    return blocks.reshape(9, hh // 3, ww // 3)
+    vm = jnp.pad(vm, [(0, 0)] * len(lead) + [(0, ph), (0, pw)])
+    hh, ww = vm.shape[-2:]
+    nl = len(lead)
+    # (..., H, W) -> (..., H/3, 3, W/3, 3) -> (..., 3, 3, H/3, W/3) -> (..., 9, ...)
+    blocks = vm.reshape(*lead, hh // 3, 3, ww // 3, 3)
+    blocks = blocks.transpose(*range(nl), nl + 1, nl + 3, nl, nl + 2)
+    return blocks.reshape(*lead, 9, hh // 3, ww // 3)
 
 
 def deinterlace(cols: jax.Array, shape: tuple[int, int]) -> jax.Array:
-    """Inverse of ``interlace``; crops back to the original (H, W)."""
-    _, bh, bw = cols.shape
-    blocks = cols.reshape(3, 3, bh, bw).transpose(2, 0, 3, 1)
-    return blocks.reshape(bh * 3, bw * 3)[: shape[0], : shape[1]]
+    """Inverse of ``interlace``; crops back to the original (..., H, W)."""
+    *lead, _, bh, bw = cols.shape
+    nl = len(lead)
+    blocks = cols.reshape(*lead, 3, 3, bh, bw)
+    blocks = blocks.transpose(*range(nl), nl + 2, nl, nl + 3, nl + 1)
+    return blocks.reshape(*lead, bh * 3, bw * 3)[..., : shape[0], : shape[1]]

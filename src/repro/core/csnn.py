@@ -296,6 +296,7 @@ def _merge_chunk_stats(chunks: list) -> list:
                 [s.out_spike_counts for s in per_layer], axis=1),
             in_sparsity=sum(s.in_sparsity for s in per_layer) / len(per_layer),
             event_block=per_layer[0].event_block,
+            event_par=per_layer[0].event_par,
         ))
     return merged
 
@@ -428,7 +429,8 @@ def snn_apply_sharded(
         return _conv_stack_batched(p, sp, cfg, plan, backend)
 
     n_conv = len(plan.layers)
-    out_specs = (P(axis), [LayerStats(P(axis), P(axis), P(axis), P())] * n_conv)
+    out_specs = (P(axis),
+                 [LayerStats(P(axis), P(axis), P(axis), P(), P())] * n_conv)
     # check_vma off: per-shard constants (event_block) come back replicated
     # from device-varying inputs, which strict vma tracking rejects.
     fn = shard_map(body, mesh=mesh, in_specs=(P(), P(axis)),

@@ -28,9 +28,24 @@ TPU adaptation (DESIGN.md Sec. 2):
   Skipped slots would have contributed exact zeros, so results stay
   bit-identical to the unbatched path.
 
+Memory-interlaced event-parallel path (paper Fig. 6 cashed in, beyond the
+ordering): ``bank_vm`` splits the halo-padded membrane tile into the 9
+RAM banks keyed by padded position (r%3, c%3).  All events of ONE
+interlace column touch every bank at a single fixed (tap, macro-shift)
+pair, so one column's whole event set applies as ONE vectorized
+masked-select over the bank stack — no scatter, no per-event loop, no
+hazards (same-column events are >= 3 apart, hence disjoint).  Columns are
+applied in the paper's s = 0..8 order, so each membrane cell sees its
+contributions in exactly the sequential queue order: the banked path is
+bit-exact vs `apply_events` (including the per-event saturating int
+datapaths — a cell receives at most one event per column).  See
+``apply_banked_columns`` / ``apply_events_banked*``; the occupancy masks
+come from ``aeq.build_bank_masks``.
+
 `ref:` the pure sliding-window oracle is `dense_conv` below (a thin
 wrapper over `lax.conv_general_dilated`); the bit-exactness property is
-tested with hypothesis in tests/test_event_conv.py.
+tested with hypothesis in tests/test_event_conv.py and
+tests/test_interlaced.py.
 """
 from __future__ import annotations
 
@@ -38,6 +53,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .aeq import EventQueue
 
@@ -178,6 +194,193 @@ def apply_events_batched(vm_padded: jax.Array, coords: jax.Array,
 
     _, vm = jax.lax.while_loop(cond, body, (jnp.asarray(0, jnp.int32), vm_padded))
     return vm
+
+
+# ---------------------------------------------------------------------------
+# Memory-interlaced event-parallel application (banked MemPot tiles).
+# ---------------------------------------------------------------------------
+
+def _interlace_tables():
+    """Static (column, bank) routing of the interlaced conv update.
+
+    For an event of interlace column s = 3(i%3)+(j%3), kernel tap
+    (a, b) in {0,1,2}^2 writes padded cell (i+a, j+b), which always lands
+    in padded-space bank t = 3*((i%3+a)%3) + (j%3+b)%3 at a fixed macro
+    shift relative to the event's centre bank.  Tables (all 9x9, indexed
+    [s, t]): PERM = flat tap index a*3+b feeding bank t from column s;
+    DI/DJ = macro-cell shift of the write vs the centre mask;
+    COL_BANK[s] = padded-space bank holding column-s centres (i+1, j+1).
+    """
+    perm = np.zeros((9, 9), np.int64)
+    di = np.zeros((9, 9), np.int64)
+    dj = np.zeros((9, 9), np.int64)
+    col_bank = np.zeros(9, np.int64)
+    for s in range(9):
+        si, sj = divmod(s, 3)
+        col_bank[s] = ((si + 1) % 3) * 3 + (sj + 1) % 3
+        for t in range(9):
+            ti, tj = divmod(t, 3)
+            a = (ti - si) % 3
+            b = (tj - sj) % 3
+            perm[s, t] = a * 3 + b
+            di[s, t] = (si + a) // 3 - (si + 1) // 3
+            dj[s, t] = (sj + b) // 3 - (sj + 1) // 3
+    return perm, di, dj, col_bank
+
+
+_PERM, _DI, _DJ, _COL_BANK = _interlace_tables()
+
+
+def bank_vm(vm_padded: jax.Array) -> jax.Array:
+    """(..., Hp, Wp, C) halo-padded tile -> (..., 9, HB, WB, C) RAM banks.
+
+    Bank t = 3*(r%3) + (c%3) of padded position (r, c); macro address
+    (r//3, c//3).  Hp/Wp are zero-padded up to multiples of 3 (the extra
+    rows are never written — events write rows <= Hp-1 — and are dropped
+    again by ``unbank_vm``).  Same banking as ``aeq.interlace``, with the
+    trailing channel axis riding along.
+    """
+    *lead, hp, wp, c = vm_padded.shape
+    hb, wb = -(-hp // 3), -(-wp // 3)
+    nl = len(lead)
+    v = jnp.pad(vm_padded,
+                [(0, 0)] * nl + [(0, 3 * hb - hp), (0, 3 * wb - wp), (0, 0)])
+    v = v.reshape(*lead, hb, 3, wb, 3, c)
+    v = v.transpose(*range(nl), nl + 1, nl + 3, nl, nl + 2, nl + 4)
+    return v.reshape(*lead, 9, hb, wb, c)
+
+
+def unbank_vm(vm_banked: jax.Array, hp: int, wp: int) -> jax.Array:
+    """Inverse of ``bank_vm``: (..., 9, HB, WB, C) -> (..., Hp, Wp, C)."""
+    *lead, _, hb, wb, c = vm_banked.shape
+    nl = len(lead)
+    v = vm_banked.reshape(*lead, 3, 3, hb, wb, c)
+    v = v.transpose(*range(nl), nl + 2, nl, nl + 3, nl + 1, nl + 4)
+    v = v.reshape(*lead, 3 * hb, 3 * wb, c)
+    return v[..., :hp, :wp, :]
+
+
+def shifted_bank_masks(masks: jax.Array) -> jax.Array:
+    """Pre-shift bank occupancy masks into per-(column, bank) write masks.
+
+    masks: (..., 9, HB, WB) bool from ``aeq.build_bank_masks`` (bank
+    occupancy of the kept events' padded centres).  Returns
+    (..., 9 cols, 9 banks, HB, WB): entry [s, t, I, J] is True iff bank
+    t's cell (I, J) receives column s's tap — i.e. the centre mask of
+    column s shifted by the static (DI, DJ)[s, t] macro offset.  Built as
+    81 static slices of one zero-padded array and a single stack, so the
+    cost is one pass over the mask data; precompute it once per queue and
+    reuse across channel blocks.
+    """
+    hb, wb = masks.shape[-2:]
+    nl = masks.ndim - 3
+    mp = jnp.pad(masks, [(0, 0)] * (nl + 1) + [(1, 1), (1, 1)])
+    per_col = []
+    for s in range(9):
+        m = mp[..., _COL_BANK[s], :, :]
+        per_bank = []
+        for t in range(9):
+            r0 = 1 - int(_DI[s, t])
+            c0 = 1 - int(_DJ[s, t])
+            per_bank.append(m[..., r0:r0 + hb, c0:c0 + wb])
+        per_col.append(jnp.stack(per_bank, axis=nl))
+    return jnp.stack(per_col, axis=nl)
+
+
+def tap_matrix(kernel: jax.Array) -> jax.Array:
+    """(3, 3, ...) unrotated kernel -> (9 cols, 9 banks, ...) tap values.
+
+    Entry [s, t] is the (already 180deg-rotated) tap that column-s events
+    contribute to bank t.  One static gather; hoist it out of scan/loop
+    bodies so the per-column select chain stays fusable.
+    """
+    k_rot = rotate_kernel(kernel)
+    flat = k_rot.reshape((9,) + k_rot.shape[2:])
+    return flat[_PERM]
+
+
+def _acc_masked(bank: jax.Array, tap: jax.Array, mask: jax.Array) -> jax.Array:
+    """bank + tap*mask with the saturating int datapath; exact either way.
+
+    mask is 0/1, so the contribution is exactly ``tap`` or exactly zero
+    (x*1 and x+0 are identities in IEEE and integer arithmetic alike; the
+    only non-identity is the sign of zero on untouched cells, which no
+    downstream computation can observe — zeros compare equal and additions
+    from +0-initialised potentials never produce -0).  For int dtypes the
+    masked add is widened and clipped, preserving per-event saturation
+    (clip is the identity on in-range untouched cells).
+    """
+    m = mask[..., None]
+    sat = _SAT_RANGE.get(bank.dtype)
+    if sat is None:
+        return bank + tap * m.astype(bank.dtype)
+    wide = bank.astype(jnp.int32) + tap.astype(jnp.int32) * m.astype(jnp.int32)
+    return jnp.clip(wide, sat[0], sat[1]).astype(bank.dtype)
+
+
+def apply_banked_columns(vm_banked: jax.Array, smasks: jax.Array,
+                         taps: jax.Array) -> jax.Array:
+    """Apply one queue's events to a banked tile, one column at a time.
+
+    vm_banked: (..., 9, HB, WB, C) from ``bank_vm``.
+    smasks:    (..., 9 cols, 9 banks, HB, WB) from ``shifted_bank_masks``.
+    taps:      (9 cols, 9 banks, C) from ``tap_matrix`` (vm dtype).
+
+    Each column step applies ALL of that column's events at once
+    (disjointness makes this exact: a cell receives at most one event per
+    column), and the s = 0..8 order reproduces the sequential queue order
+    per membrane cell, so the result equals ``apply_events`` bit for bit —
+    per-event int saturation included.  The loop nest runs BANK-major:
+    each of the 9 banks is pulled out once and receives its 9 column
+    contributions as a cache-resident multiply-add chain (a bank is 1/9th
+    of the tile), which is what makes the banked unit faster than the
+    per-event walk — RAM traffic is one read+write of the tile per queue
+    instead of one 3x3 patch round-trip per event.
+    """
+    banks = []
+    for t in range(9):
+        bank = vm_banked[..., t, :, :, :]
+        for s in range(9):
+            bank = _acc_masked(bank, taps[s, t], smasks[..., s, t, :, :])
+        banks.append(bank)
+    return jnp.stack(banks, axis=-4)
+
+
+def apply_events_banked(vm_padded: jax.Array, masks: jax.Array,
+                        kernel: jax.Array) -> jax.Array:
+    """Banked-path equivalent of ``apply_events`` for one tile.
+
+    vm_padded: (Hp, Wp) or (Hp, Wp, C); masks: (9, HB, WB) bank occupancy
+    of the kept events (``aeq.build_bank_masks``); kernel: (3, 3) or
+    (3, 3, C) unrotated.  Bit-exact vs ``apply_events`` on the queue of
+    the same events (tests/test_interlaced.py).
+    """
+    squeeze = vm_padded.ndim == 2
+    vm = vm_padded[..., None] if squeeze else vm_padded
+    k = kernel[..., None] if squeeze else kernel
+    hp, wp = vm.shape[-3:-1]
+    out = unbank_vm(
+        apply_banked_columns(bank_vm(vm), shifted_bank_masks(masks),
+                             tap_matrix(k).astype(vm.dtype)),
+        hp, wp)
+    return out[..., 0] if squeeze else out
+
+
+def apply_events_banked_batched(vm_padded: jax.Array, masks: jax.Array,
+                                kernel: jax.Array) -> jax.Array:
+    """Banked path over a stack of tiles: one queue per batch member.
+
+    vm_padded: (Q, Hp, Wp, C); masks: (Q, 9, HB, WB); kernel: (3, 3, C)
+    shared by every queue.  Pure elementwise selects, so the batch
+    dimension vectorizes for free — bit-exact vs per-queue
+    ``apply_events`` (no shared early-exit bound is needed: empty columns
+    contribute all-False masks).
+    """
+    hp, wp = vm_padded.shape[-3:-1]
+    return unbank_vm(
+        apply_banked_columns(bank_vm(vm_padded), shifted_bank_masks(masks),
+                             tap_matrix(kernel).astype(vm_padded.dtype)),
+        hp, wp)
 
 
 def dense_conv(fmap: jax.Array, kernel: jax.Array) -> jax.Array:

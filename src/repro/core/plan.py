@@ -24,22 +24,37 @@ Sizing rules (all static, all pure functions of geometry + calibration):
   (``kernels.event_conv.ops.autotune_block_e``) unless pinned.
 * **vm_tile** — the (H+2, W+2, channel_block) halo-padded MemPot tile
   held VMEM-resident per conv-unit launch.
+* **event_par** — the memory-interlaced event-parallel width (paper
+  Fig. 6 cashed in): 1 keeps the sequential one-event-at-a-time conv
+  unit; > 1 selects the interlace-aware kernel variants, which apply
+  same-column (hazard-free) events in parallel — the banked-select jax
+  path and the ``event_conv_pallas_interlaced*`` kernels.  ``None``
+  autotunes it next to ``block_e`` (``autotune_event_par``: snapped to a
+  power of two, VMEM-aware, floored to 1 when queues are too shallow to
+  pay for parallelism).  When > 1, ``block_e`` is additionally snapped to
+  a multiple of ``event_par`` dividing the segment-padded
+  :attr:`LayerPlan.queue_depth`.
 
 Every rule only ever *lowers* the effective queue depth to the point
 where nothing can be dropped (or keeps the requested truncation depth),
 so planned execution is bit-exact vs the legacy shared-capacity kwargs —
-the deprecation shims in scheduler.py/csnn.py rely on this.
+the deprecation shims in scheduler.py/csnn.py rely on this; the
+``event_par`` variants are bit-exact vs the sequential schedule by the
+interlace disjointness argument (tests/test_interlaced.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.kernels.event_conv.ops import autotune_block_e, snap_divisor
+from repro.kernels.event_conv.ops import (autotune_block_e,
+                                          autotune_event_par,
+                                          snap_block_e_for_par,
+                                          snap_divisor)
 
-from .aeq import calibrate_capacity
+from .aeq import calibrate_capacity, interlaced_capacity
 
 _VM_DTYPES = {None: "float32", 8: "int8", 16: "int16"}
 
@@ -93,9 +108,11 @@ class LayerPlan:
     pool: Optional[int]           # OR-max-pool window (None = no pool)
     capacity: int                 # effective AEQ depth per (t, c_in) queue
     channel_block: int            # output channels per MemPot tile
-    block_e: int                  # event-block size (divides capacity)
+    block_e: int                  # event-block size (divides queue_depth)
     vm_tile: tuple[int, int, int]  # halo-padded MemPot tile (H+2, W+2, cb)
     sat_bits: Optional[int] = None  # 8/16-bit saturating datapath, None=f32
+    event_par: int = 1            # same-column events applied in parallel
+                                  # (1 = sequential legacy conv unit)
 
     @property
     def vm_dtype(self):
@@ -103,18 +120,26 @@ class LayerPlan:
         return jnp.dtype(_VM_DTYPES[self.sat_bits])
 
     @property
+    def queue_depth(self) -> int:
+        """Allocated queue slots: ``capacity``, or the segment-padded
+        depth (``aeq.interlaced_capacity``) when the interlaced Pallas
+        layout is in play (``event_par`` > 1)."""
+        return interlaced_capacity(self.capacity, self.event_par)
+
+    @property
     def event_slots(self) -> int:
         """Padded queue slots allocated per time step (all C_in queues)."""
-        return self.capacity * self.c_in
+        return self.queue_depth * self.c_in
 
     def __repr__(self) -> str:
         h, w = self.in_hw
         oh, ow = self.out_hw
         pool = f" pool{self.pool}" if self.pool else ""
+        par = f", par={self.event_par}" if self.event_par > 1 else ""
         return (f"LayerPlan({self.name}: {h}x{w}x{self.c_in} -> "
                 f"{oh}x{ow}x{self.c_out}{pool}, cap={self.capacity}, "
                 f"cb={self.channel_block}, block_e={self.block_e}, "
-                f"vm={self.vm_tile}, {_VM_DTYPES[self.sat_bits]})")
+                f"vm={self.vm_tile}, {_VM_DTYPES[self.sat_bits]}{par})")
 
 
 @dataclass(frozen=True)
@@ -196,6 +221,7 @@ def plan_conv_layer(
     per_layer: bool = True,
     batch_tile: int = 1,
     vmem_budget: Optional[int] = None,
+    event_par: Optional[int] = 1,
 ) -> LayerPlan:
     """Derive one conv layer's plan from its geometry.
 
@@ -204,7 +230,10 @@ def plan_conv_layer(
     at once, not one.  ``per_layer=False`` reproduces the legacy
     shared-capacity sizing (queue arrays padded to the shared depth
     regardless of fmap size) — kept as the baseline the per-layer plans
-    are measured against.
+    are measured against.  ``event_par=None`` autotunes the interlaced
+    event-parallel width next to ``block_e``; the default 1 keeps the
+    sequential conv-unit schedule (and with it the legacy shims'
+    bit-exactness-by-identity).
     """
     h, w = in_hw
     cap = (effective_capacity(capacity, h * w) if per_layer
@@ -212,12 +241,25 @@ def plan_conv_layer(
     cb = snap_divisor(c_out, channel_block)
     vm_tile = (h + 2, w + 2, cb)
     vm_bytes = {None: 4, 8: 1, 16: 2}[sat_bits]
+    kwargs = {"vmem_budget": vmem_budget} if vmem_budget else {}
+    if event_par is None:
+        ep = autotune_event_par(cap, (max(batch_tile, 1),) + vm_tile,
+                                vm_bytes=vm_bytes, **kwargs)
+    else:
+        ep = max(1, int(event_par))
+    depth = interlaced_capacity(cap, ep)
     if block_e is None:
-        kwargs = {"vmem_budget": vmem_budget} if vmem_budget else {}
-        be = autotune_block_e(cap, (max(batch_tile, 1),) + vm_tile,
+        be = autotune_block_e(depth, (max(batch_tile, 1),) + vm_tile,
                               vm_bytes=vm_bytes, **kwargs)
     else:
-        be = snap_divisor(cap, block_e)
+        be = block_e
+    if ep > 1:
+        # the interlaced grid walks event_par-aligned groups of the
+        # segment-padded queue: block_e must be a multiple of event_par
+        # that divides the padded depth
+        be = snap_block_e_for_par(depth, be, ep)
+    else:
+        be = snap_divisor(depth, be)
     if pool:
         out_hw = (-(-h // pool), -(-w // pool))
     else:
@@ -225,7 +267,7 @@ def plan_conv_layer(
     return LayerPlan(index=index, name=name, in_hw=in_hw, out_hw=out_hw,
                      c_in=c_in, c_out=c_out, pool=pool, capacity=cap,
                      channel_block=cb, block_e=be, vm_tile=vm_tile,
-                     sat_bits=sat_bits)
+                     sat_bits=sat_bits, event_par=ep)
 
 
 def plan_network(
@@ -243,6 +285,7 @@ def plan_network(
     per_layer: bool = True,
     vmem_budget: Optional[int] = None,
     t_chunk: Optional[int] = None,
+    event_par: Optional[int] | Sequence[Optional[int]] = 1,
 ) -> NetworkPlan:
     """Derive a :class:`NetworkPlan` from a ``CSNNConfig``.
 
@@ -258,7 +301,9 @@ def plan_network(
     consumes (``snap_t_chunk`` snaps it to a divisor of T); ``None``
     keeps the monolithic whole-T execution.  The input channel count is
     read from ``cfg.input_channels`` (multi-channel inputs, e.g.
-    2-polarity DVS encodings).
+    2-polarity DVS encodings).  ``event_par`` selects the interlaced
+    event-parallel kernel variant per layer (1 = sequential legacy
+    schedule, ``None`` = autotune, or one value per conv layer).
     """
     from .csnn import ConvSpec, conv_out_hw
     conv_specs = [(i, s) for i, s in enumerate(cfg.layers)
@@ -267,9 +312,12 @@ def plan_network(
     caps = list(capacity) if not isinstance(capacity, int) else [capacity] * n
     cbs = (list(channel_block) if not isinstance(channel_block, int)
            else [channel_block] * n)
-    if len(caps) != n or len(cbs) != n:
-        raise ValueError(f"need one capacity/channel_block per conv layer "
-                         f"({n}), got {len(caps)}/{len(cbs)}")
+    eps = (list(event_par) if isinstance(event_par, (list, tuple))
+           else [event_par] * n)
+    if len(caps) != n or len(cbs) != n or len(eps) != n:
+        raise ValueError(f"need one capacity/channel_block/event_par per "
+                         f"conv layer ({n}), got "
+                         f"{len(caps)}/{len(cbs)}/{len(eps)}")
     if stats is not None:
         if len(stats) != n:
             raise ValueError(f"need one stats entry per conv layer ({n}), "
@@ -285,7 +333,7 @@ def plan_network(
             idx, f"conv{idx}", hw, c_in, spec.channels, capacity=caps[ci],
             pool=spec.pool, channel_block=cbs[ci], block_e=block_e,
             sat_bits=sat_bits, per_layer=per_layer, batch_tile=batch_tile,
-            vmem_budget=vmem_budget))
+            vmem_budget=vmem_budget, event_par=eps[ci]))
         hw, c_in = conv_out_hw(hw, spec), spec.channels
     return NetworkPlan(layers=tuple(plans), t_steps=cfg.t_steps,
                        batch_tile=batch_tile, batch_axis=batch_axis,

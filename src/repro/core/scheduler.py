@@ -25,11 +25,27 @@ self-timed early exit shared across the batch.  MemPot becomes a
 single-sample path (tests/test_batched.py).
 
 Plan/execute split: the ``*_planned`` runners are the real implementation
-— all resource sizing (queue depth, channel block, event block) lives in
-a static :class:`~repro.core.plan.LayerPlan` derived once per network by
-``plan_network``.  The legacy kwargs signatures remain as deprecation
-shims that derive a single-layer plan on the fly, bit-exact vs the
-planned path (tests/test_plan.py).
+— all resource sizing (queue depth, channel block, event block, event
+parallelism) lives in a static :class:`~repro.core.plan.LayerPlan`
+derived once per network by ``plan_network``.  The legacy kwargs
+signatures remain as deprecation shims that derive a single-layer plan on
+the fly, bit-exact vs the planned path (tests/test_plan.py).
+
+Kernel variants (selected per layer by ``LayerPlan.event_par``):
+
+* ``event_par == 1`` — the sequential conv unit: walk each (t, c_in)
+  queue one event at a time (``apply_events*`` on the jax backend,
+  ``event_conv_pallas*`` on the pallas backend).
+* ``event_par > 1`` — the memory-interlaced event-parallel unit.  On the
+  jax backend the MemPot stack is held **banked** (9 RAM banks, paper
+  Fig. 6) for the whole time step and each interlace column's events are
+  applied as one vectorized masked select (``aeq.build_bank_masks`` +
+  ``event_conv.apply_banked_columns``; no sort, no per-event loop).  On
+  the pallas backend the queues are segment-padded (``aeq.segment_pad``)
+  and fed to ``event_conv_pallas_interlaced*``, which applies
+  ``event_par`` hazard-free events per gather->add->scatter step.  Both
+  variants are bit-exact vs the sequential schedule
+  (tests/test_interlaced.py).
 """
 from __future__ import annotations
 
@@ -38,9 +54,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .aeq import BatchedEventQueue, EventQueue, build_aeq_batched
-from .event_conv import (apply_events, apply_events_batched, crop_vm,
-                         dense_conv, pad_vm)
+from .aeq import (EventQueue, build_aeq_batched, build_bank_masks,
+                  segment_pad)
+from .event_conv import (apply_banked_columns, apply_events,
+                         apply_events_batched, bank_vm, crop_vm, dense_conv,
+                         pad_vm, shifted_bank_masks, tap_matrix, unbank_vm)
 from .plan import LayerPlan, plan_conv_layer
 from .threshold import threshold_unit
 
@@ -52,6 +70,7 @@ class LayerStats(NamedTuple):
     out_spike_counts: jax.Array  # (T, C_out) spikes after thresholding (pre-pool)
     in_sparsity: jax.Array       # () fraction of zeros in the input activations
     event_block: jax.Array = 0   # () chosen block_e (autotuned; perf record)
+    event_par: jax.Array = 1     # () interlaced parallel width (1=sequential)
 
 
 class ConvCarry(NamedTuple):
@@ -75,15 +94,6 @@ def init_conv_carry(lp: LayerPlan, batch: int, vm_dtype=None) -> ConvCarry:
     dt = lp.vm_dtype if vm_dtype is None else vm_dtype
     return ConvCarry(vm=jnp.zeros((batch, h + 2, w + 2, lp.c_out), dt),
                      fired=jnp.zeros((batch, h, w, lp.c_out), jnp.bool_))
-
-
-def _build_all_aeqs(spikes_in: jax.Array, capacity: int) -> EventQueue:
-    """Compact (T, H, W, C_in) binary activations into per-(t, c_in) queues
-    in one fused sort (``build_aeq_batched``, bit-exact vs per-fmap
-    compaction).  ``capacity`` is the plan's effective depth (already
-    padded/capped by ``plan.effective_capacity``)."""
-    q = build_aeq_batched(spikes_in.transpose(0, 3, 1, 2), capacity)
-    return EventQueue(coords=q.coords, valid=q.valid, count=q.count)
 
 
 def run_conv_layer(
@@ -140,29 +150,59 @@ def run_conv_layer_planned(
     c_out = kernels.shape[-1]
     channel_block = lp.channel_block
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
-    queues = _build_all_aeqs(spikes_in, lp.capacity)
+    banked = lp.event_par > 1 and backend != "pallas"
+    fmaps = spikes_in.transpose(0, 3, 1, 2)  # (T, C_in, H, W)
+    if banked:
+        # interlaced event-parallel path: sort-free bank-mask compaction,
+        # write masks pre-shifted once and reused by every channel block
+        events = build_bank_masks(fmaps, lp.capacity)
+        smasks = shifted_bank_masks(events.masks)  # (T, C_in, 9, 9, hb, wb)
+        counts = events.count
+    else:
+        queues = build_aeq_batched(fmaps, lp.capacity)
+        if lp.event_par > 1:
+            queues = segment_pad(queues, lp.event_par)
+        counts = queues.count
 
     def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
         # kernel_block: (3, 3, C_in, B); bias_block: (B,)
         block = kernel_block.shape[-1]
         vm0 = pad_vm(jnp.zeros((h, w, block), vm_dtype))  # MemPot, reused (Alg. 1 l.2)
         fired0 = jnp.zeros((h, w, block), jnp.bool_)
+        if banked:  # (C_in, 9 cols, 9 banks, block) tap routing, hoisted
+            taps = jnp.moveaxis(tap_matrix(kernel_block), 2, 0).astype(vm_dtype)
 
-        def time_step(carry, t):
-            vm, fired = carry
+        def apply_all_cins(vm, t):
+            if banked:
+                vb = bank_vm(vm)
+                vb = jax.lax.fori_loop(
+                    0, c_in,
+                    lambda ci, vb: apply_banked_columns(vb, smasks[t, ci],
+                                                        taps[ci]),
+                    vb)
+                return unbank_vm(vb, h + 2, w + 2)
 
             def per_cin(ci, vm):
                 if backend == "pallas":
-                    from repro.kernels.event_conv.kernel import event_conv_pallas
+                    from repro.kernels.event_conv.kernel import (
+                        event_conv_pallas, event_conv_pallas_interlaced)
+                    k_ci = kernel_block[:, :, ci, :].astype(vm.dtype)
+                    if lp.event_par > 1:
+                        return event_conv_pallas_interlaced(
+                            vm, queues.coords[t, ci], queues.valid[t, ci],
+                            k_ci, block_e=lp.block_e, event_par=lp.event_par)
                     return event_conv_pallas(
                         vm, queues.coords[t, ci], queues.valid[t, ci],
-                        kernel_block[:, :, ci, :].astype(vm.dtype),
-                        block_e=lp.block_e)
+                        k_ci, block_e=lp.block_e)
                 q = EventQueue(queues.coords[t, ci], queues.valid[t, ci],
                                queues.count[t, ci])
                 return apply_events(vm, q, kernel_block[:, :, ci, :])
 
-            vm = jax.lax.fori_loop(0, c_in, per_cin, vm)
+            return jax.lax.fori_loop(0, c_in, per_cin, vm)
+
+        def time_step(carry, t):
+            vm, fired = carry
+            vm = apply_all_cins(vm, t)
             inner = crop_vm(vm)
 
             def thresh_one(v, f, b):
@@ -185,10 +225,11 @@ def run_conv_layer_planned(
     spikes_out = spikes_out.reshape(t_steps, h, w, c_out)
 
     stats = LayerStats(
-        in_spike_counts=queues.count,
+        in_spike_counts=counts,
         out_spike_counts=jnp.sum(spikes_out, axis=(1, 2)).astype(jnp.int32),
         in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32)),
         event_block=jnp.asarray(lp.block_e, jnp.int32),
+        event_par=jnp.asarray(lp.event_par, jnp.int32),
     )
     if lp.pool is not None:
         return _pool_all(spikes_out, lp.pool), stats
@@ -345,24 +386,58 @@ def run_conv_layer_batched_chunk(
     c_out = kernels.shape[-1]
     channel_block = lp.channel_block
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
-    # (B, t, H, W, C_in) -> queues indexed [t, b, c_in], built in one pass
+    banked = lp.event_par > 1 and backend != "pallas"
+    # (B, t, H, W, C_in) -> per-(t, b, c_in) event sets, built in one pass
     fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (t, B, C_in, H, W)
-    queues = build_aeq_batched(fmaps, lp.capacity)
+    if banked:
+        # interlaced event-parallel path: compact straight into the 9
+        # membrane RAM banks (sort-free) and pre-shift the write masks
+        # once; every (t, c_in, channel-block) step below then applies a
+        # whole hazard-free column per vectorized select.  The pre-shifted
+        # stack is 81/9 x the bank masks and lives for the whole chunk —
+        # the chunk length (plan.t_chunk) is the knob that bounds it; the
+        # amortization across channel blocks AND time steps is what pays
+        # for the banked path (recomputing per step would cost more than
+        # the conv work it saves on wide-C_in layers).
+        events = build_bank_masks(fmaps, lp.capacity)
+        # (t, B, C_in, 9, 9, hb, wb) -> (t, C_in, B, ...) for scan + fori
+        smasks = jnp.swapaxes(shifted_bank_masks(events.masks), 1, 2)
+        counts = events.count
+    else:
+        queues = build_aeq_batched(fmaps, lp.capacity)
+        if lp.event_par > 1:
+            queues = segment_pad(queues, lp.event_par)
+        counts = queues.count
     block_e = lp.block_e
 
     def run_block(kernel_block, bias_block, vm0, fired0):
         # kernel_block: (3, 3, C_in, Cb); bias_block: (Cb,)
         # vm0: (B, H+2, W+2, Cb); fired0: (B, H, W, Cb)
-        def time_step(carry, t):
-            vm, fired = carry
+        if banked:  # (C_in, 9 cols, 9 banks, Cb) tap routing, hoisted
+            taps = jnp.moveaxis(tap_matrix(kernel_block), 2, 0).astype(vm_dtype)
+
+        def apply_all_cins(vm, smasks_t, t):
+            if banked:
+                vb = bank_vm(vm)  # (B, 9, hb, wb, Cb)
+                vb = jax.lax.fori_loop(
+                    0, c_in,
+                    lambda ci, vb: apply_banked_columns(vb, smasks_t[ci],
+                                                        taps[ci]),
+                    vb)
+                return unbank_vm(vb, h + 2, w + 2)
 
             def per_cin(ci, vm):
                 coords = queues.coords[t, :, ci]   # (B, cap, 2)
                 valid = queues.valid[t, :, ci]     # (B, cap)
                 k_ci = kernel_block[:, :, ci, :]
                 if backend == "pallas":
-                    from repro.kernels.event_conv.kernel import \
-                        event_conv_pallas_batched
+                    from repro.kernels.event_conv.kernel import (
+                        event_conv_pallas_batched,
+                        event_conv_pallas_interlaced_batched)
+                    if lp.event_par > 1:
+                        return event_conv_pallas_interlaced_batched(
+                            vm, coords, valid, k_ci.astype(vm.dtype),
+                            block_e=block_e, event_par=lp.event_par)
                     return event_conv_pallas_batched(
                         vm, coords, valid, k_ci.astype(vm.dtype),
                         block_e=block_e)
@@ -370,7 +445,12 @@ def run_conv_layer_batched_chunk(
                     vm, coords, valid, queues.count[t, :, ci], k_ci,
                     block=block_e)
 
-            vm = jax.lax.fori_loop(0, c_in, per_cin, vm)
+            return jax.lax.fori_loop(0, c_in, per_cin, vm)
+
+        def time_step(carry, xs):
+            smasks_t, t = xs
+            vm, fired = carry
+            vm = apply_all_cins(vm, smasks_t, t)
             inner = vm[:, 1:-1, 1:-1, :]
 
             def thresh_one(v, f, b):
@@ -383,8 +463,9 @@ def run_conv_layer_batched_chunk(
             vm = vm.at[:, 1:-1, 1:-1, :].set(v_new)
             return (vm, fired), spk
 
-        (vm, fired), spikes = jax.lax.scan(time_step, (vm0, fired0),
-                                           jnp.arange(t_steps))
+        xs = (smasks if banked else jnp.zeros((t_steps, 0), jnp.bool_),
+              jnp.arange(t_steps))
+        (vm, fired), spikes = jax.lax.scan(time_step, (vm0, fired0), xs)
         return spikes, vm, fired  # spikes: (t, B, H, W, Cb)
 
     n_blocks = c_out // channel_block
@@ -402,11 +483,12 @@ def run_conv_layer_batched_chunk(
     spikes_out = jnp.swapaxes(spikes_out, 0, 1)     # (B, t, H, W, C_out)
 
     stats = LayerStats(
-        in_spike_counts=jnp.swapaxes(queues.count, 0, 1),  # (B, t, C_in)
+        in_spike_counts=jnp.swapaxes(counts, 0, 1),  # (B, t, C_in)
         out_spike_counts=jnp.sum(spikes_out, axis=(2, 3)).astype(jnp.int32),
         in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32),
                                    axis=(1, 2, 3, 4)),
         event_block=jnp.asarray(lp.block_e, jnp.int32),
+        event_par=jnp.asarray(lp.event_par, jnp.int32),
     )
     if lp.pool is not None:
         return _pool_all(spikes_out, lp.pool), new_carry, stats

@@ -2,14 +2,27 @@
 
 Each kernel ships three files: kernel.py (pl.pallas_call + BlockSpec VMEM
 tiling, validated in interpret mode), ops.py (jit'd public wrapper with
-padding/tiling glue), ref.py (pure-jnp oracle the tests sweep against).
+padding/tiling glue and shape validation), ref.py (pure-jnp oracle the
+tests sweep against).
 
 * event_conv      — the convolution unit (paper Sec. VI-B): VMEM-resident
                     membrane-potential tile, grid over AEQ event blocks,
                     channel-lane parallelism, saturating int8/16 adders.
+                    Two schedules: the sequential one-event-per-step unit
+                    and the memory-interlaced event-parallel unit
+                    (``event_conv_pallas_interlaced*``: ``event_par``
+                    same-column hazard-free events per vectorized
+                    gather->add->scatter step, selected by
+                    ``LayerPlan.event_par``).
 * threshold_pool  — the thresholding unit (Sec. VI-C): fused bias +
                     compare + m-TTFS indicator + 3x3 OR-max-pool.
 
 Both are wired into the Algorithm-1 scheduler via
-core.scheduler.run_conv_layer(backend="pallas").
+core.scheduler.run_conv_layer*(backend="pallas").
+
+Interpret mode is a single switch (``kernels.runtime.resolve_interpret``):
+every wrapper defaults to ``interpret=None``, which resolves from the
+REPRO_PALLAS_INTERPRET env var, else to interpret-on unless the default
+backend is a real TPU — so validating on hardware is a one-line flip
+(``REPRO_PALLAS_INTERPRET=0``) instead of an every-call-site edit.
 """

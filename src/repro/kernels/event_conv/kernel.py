@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: event-driven 3x3 convolution (paper conv unit, C2+C3).
+"""Pallas TPU kernels: event-driven 3x3 convolution (paper conv unit, C2+C3).
 
 Maps the FPGA convolution unit onto the TPU memory hierarchy:
 
@@ -12,35 +12,64 @@ Maps the FPGA convolution unit onto the TPU memory hierarchy:
   (``input_output_aliases`` accumulates in place across grid steps) —
   the analogue of the AEQ feeding the pipeline a steady event stream.
 * Parallelism is over the **C output channels in the lane dimension**
-  (the TPU-native replacement for the FPGA's 9 tap-parallel PEs); the
-  events of a queue are applied sequentially, which preserves program
-  order exactly, so the RAW hazards of the FPGA pipeline cannot occur.
+  (the TPU-native replacement for the FPGA's 9 tap-parallel PEs).
 * Integer dtypes use saturating adds (paper C7): the accumulation is
   widened to int32 and clamped back to the storage width.
+
+Two schedules per entry point:
+
+* **sequential** (``event_conv_pallas``/``_batched``): events are applied
+  one at a time, preserving program order exactly, so RAW hazards cannot
+  occur — the paper's one-event-per-cycle conv unit.
+* **interlaced event-parallel** (``event_conv_pallas_interlaced``/
+  ``_batched``): each grid step walks groups of ``event_par`` consecutive
+  queue slots.  The AEQ emits events in interlace-column order
+  (s = 3(i%3)+(j%3)), and same-column events are >= 3 apart in i or j, so
+  their 3x3 patches are DISJOINT: a column-homogeneous group is applied
+  as one vectorized gather -> add -> scatter (all patch reads complete
+  before any write; disjoint writes never reorder a single cell's
+  accumulation, so the result is bit-exact vs the sequential kernel —
+  saturating int paths included, since a cell sees at most one event per
+  group).  A group that straddles a column boundary falls back to the
+  sequential body for just that group.  Feeding the kernel a
+  segment-padded queue (``aeq.segment_pad``; what the ops wrapper and the
+  planned scheduler do) makes every group homogeneous by construction, so
+  the fallback never fires and the serial dependence chain only remains
+  *across* groups.  Invalid slots are replayed as copies of the group's
+  first valid event — they re-write the identical updated patch, which is
+  idempotent under the all-reads-first schedule.
 
 Block shapes: the C axis should be a multiple of 128 (lane width) and the
 vm tile must fit VMEM: (H+2)(W+2)*C*4B; for the paper's 28x28 layers with
 C=128 that is ~0.46 MB — comfortable against ~16 MB VMEM.
 
-Two entry points:
+Batched variants run a 2-D grid over (queue, event block): one
+``pallas_call`` streams every queue's events against its own
+VMEM-resident vm tile.  The event-block axis is innermost, so each
+queue's tile is loaded once and revisited until its stream is exhausted.
 
-* ``event_conv_pallas``          — one queue, 1-D grid over event blocks;
-* ``event_conv_pallas_batched``  — many queues, 2-D grid over
-  (queue, event block): one ``pallas_call`` streams every queue's events
-  against its own VMEM-resident vm tile (the multi-queue analogue of the
-  self-timed AEQ feed; the batch dimension of the batched inference
-  pipeline).  The event-block axis is innermost, so each queue's tile is
-  loaded once and revisited until its stream is exhausted.
+Interpret mode is resolved by ``kernels.runtime.resolve_interpret``
+(REPRO_PALLAS_INTERPRET env var; defaults on off-TPU).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import partial, reduce
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
+
+
+def _acc_patch(patch, contrib, dtype):
+    sat = _SAT_RANGE.get(dtype)
+    if sat is not None:  # saturating fixed-point PE adders (paper C7)
+        wide = patch.astype(jnp.int32) + contrib.astype(jnp.int32)
+        return jnp.clip(wide, sat[0], sat[1]).astype(dtype)
+    return patch + contrib
 
 
 def _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref, *,
@@ -55,7 +84,6 @@ def _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref, *,
     """
     k_rot = kernel_ref[...][::-1, ::-1, :]  # 180deg rotation (paper Fig. 4)
     zero = jnp.zeros_like(k_rot)
-    sat = _SAT_RANGE.get(out_ref.dtype)
 
     def body(e, _):
         i = coords_ref[prefix + (e, 0)]
@@ -67,16 +95,79 @@ def _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref, *,
         j = jnp.where(v, j, 0)
         contrib = jnp.where(v, k_rot, zero)
         idx = prefix + (pl.dslice(i, 3), pl.dslice(j, 3), slice(None))
-        patch = out_ref[idx]
-        if sat is not None:  # saturating fixed-point PE adders (paper C7)
-            wide = patch.astype(jnp.int32) + contrib.astype(jnp.int32)
-            updated = jnp.clip(wide, sat[0], sat[1]).astype(out_ref.dtype)
-        else:
-            updated = patch + contrib
-        out_ref[idx] = updated
+        out_ref[idx] = _acc_patch(out_ref[idx], contrib, out_ref.dtype)
         return ()
 
     jax.lax.fori_loop(0, block_e, body, ())
+
+
+def _apply_event_block_interlaced(coords_ref, valid_ref, kernel_ref, out_ref,
+                                  *, block_e, event_par, prefix=()):
+    """Apply ``block_e`` entries as ``event_par``-wide hazard-free groups.
+
+    Per group: read the slots' (i, j, valid); pick the first valid event
+    as the group anchor; if every valid slot shares the anchor's interlace
+    column (always true on segment-padded queues), gather all patches,
+    add, and scatter — reads complete before writes, and same-column
+    disjointness makes the writes conflict-free.  Invalid slots replay the
+    anchor (same patch, same contribution — an idempotent duplicate
+    write); a group with no valid slots degenerates to writing the (0,0)
+    patch back unchanged.  Otherwise fall back to the sequential body for
+    this group only (the column-boundary case on unpadded queues).
+    """
+    k_rot = kernel_ref[...][::-1, ::-1, :]
+    zero = jnp.zeros_like(k_rot)
+    n_groups = block_e // event_par
+
+    def group(g, _):
+        base = g * event_par
+        ii, jj, vv = [], [], []
+        for p in range(event_par):
+            ii.append(coords_ref[prefix + (base + p, 0)])
+            jj.append(coords_ref[prefix + (base + p, 1)])
+            vv.append(valid_ref[prefix + (base + p,)] != 0)
+        cols = [(i % 3) * 3 + (j % 3) for i, j in zip(ii, jj)]
+        # first-valid anchor (coords + column); zeros when the group is empty
+        zero_i = jnp.zeros_like(ii[0])
+        ai, aj, acol, found = zero_i, zero_i, zero_i, jnp.asarray(False)
+        for p in range(event_par):
+            take = vv[p] & ~found
+            ai = jnp.where(take, ii[p], ai)
+            aj = jnp.where(take, jj[p], aj)
+            acol = jnp.where(take, cols[p], acol)
+            found = found | vv[p]
+        homog = reduce(jnp.logical_and,
+                       [~vv[p] | (cols[p] == acol) for p in range(event_par)])
+
+        def patch_idx(i, j):
+            return prefix + (pl.dslice(i, 3), pl.dslice(j, 3), slice(None))
+
+        @pl.when(homog)
+        def _parallel():
+            mi = [jnp.where(vv[p], ii[p], ai) for p in range(event_par)]
+            mj = [jnp.where(vv[p], jj[p], aj) for p in range(event_par)]
+            contrib = [jnp.where(vv[p] | found, k_rot, zero)
+                       for p in range(event_par)]
+            patches = [out_ref[patch_idx(mi[p], mj[p])]
+                       for p in range(event_par)]                 # gather
+            updated = [_acc_patch(patches[p], contrib[p], out_ref.dtype)
+                       for p in range(event_par)]                 # add
+            for p in range(event_par):                            # scatter
+                out_ref[patch_idx(mi[p], mj[p])] = updated[p]
+
+        @pl.when(~homog)
+        def _sequential():
+            for p in range(event_par):
+                i = jnp.where(vv[p], ii[p], 0)
+                j = jnp.where(vv[p], jj[p], 0)
+                contrib = jnp.where(vv[p], k_rot, zero)
+                idx = patch_idx(i, j)
+                out_ref[idx] = _acc_patch(out_ref[idx], contrib,
+                                          out_ref.dtype)
+
+        return ()
+
+    jax.lax.fori_loop(0, n_groups, group, ())
 
 
 def _event_conv_kernel(coords_ref, valid_ref, kernel_ref, vm_ref, out_ref, *, block_e):
@@ -93,7 +184,7 @@ def event_conv_pallas(
     kernel: jax.Array,
     *,
     block_e: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Apply an event queue to halo-padded membrane potentials.
 
@@ -107,7 +198,10 @@ def event_conv_pallas(
     """
     e = coords.shape[0]
     if e % block_e != 0:
-        raise ValueError(f"E={e} must be a multiple of block_e={block_e}")
+        raise ValueError(
+            f"event stream length E={e} must be a multiple of "
+            f"block_e={block_e}: the grid tiles the queue evenly — go "
+            f"through the ops.py wrappers, which pad the queue for you")
     hp, wp, c = vm_padded.shape
     grid = (e // block_e,)
     return pl.pallas_call(
@@ -122,7 +216,7 @@ def event_conv_pallas(
         out_specs=pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((hp, wp, c), vm_padded.dtype),
         input_output_aliases={3: 0},  # accumulate vm in place across grid steps
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(coords, valid.astype(jnp.int8), kernel, vm_padded)
 
 
@@ -142,7 +236,7 @@ def event_conv_pallas_batched(
     kernel: jax.Array,
     *,
     block_e: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Apply Q event queues to Q halo-padded membrane-potential tiles.
 
@@ -160,7 +254,10 @@ def event_conv_pallas_batched(
     """
     q, e, _ = coords.shape
     if e % block_e != 0:
-        raise ValueError(f"E={e} must be a multiple of block_e={block_e}")
+        raise ValueError(
+            f"event stream length E={e} must be a multiple of "
+            f"block_e={block_e}: the grid tiles the queue evenly — go "
+            f"through the ops.py wrappers, which pad the queues for you")
     if vm_padded.shape[0] != q:
         raise ValueError(
             f"queue count mismatch: vm has {vm_padded.shape[0]} tiles, "
@@ -179,5 +276,120 @@ def event_conv_pallas_batched(
         out_specs=pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((q, hp, wp, c), vm_padded.dtype),
         input_output_aliases={3: 0},  # accumulate each tile in place
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
+    )(coords, valid.astype(jnp.int8), kernel, vm_padded)
+
+
+def _check_interlaced_blocks(e: int, block_e: int, event_par: int) -> None:
+    if event_par < 2:
+        raise ValueError(
+            f"event_par={event_par}: the interlaced kernel needs >= 2 "
+            f"events per group (use event_conv_pallas for the sequential "
+            f"schedule)")
+    if block_e % event_par != 0:
+        raise ValueError(
+            f"block_e={block_e} must be a multiple of event_par="
+            f"{event_par} so parallel groups tile each event block")
+    if e % block_e != 0:
+        raise ValueError(
+            f"event stream length E={e} must be a multiple of "
+            f"block_e={block_e}: the grid tiles the queue evenly — go "
+            f"through the ops.py wrappers, which pad the queue for you")
+
+
+def _event_conv_interlaced_kernel(coords_ref, valid_ref, kernel_ref, vm_ref,
+                                  out_ref, *, block_e, event_par):
+    _apply_event_block_interlaced(coords_ref, valid_ref, kernel_ref, out_ref,
+                                  block_e=block_e, event_par=event_par)
+
+
+@partial(jax.jit, static_argnames=("block_e", "event_par", "interpret"))
+def event_conv_pallas_interlaced(
+    vm_padded: jax.Array,
+    coords: jax.Array,
+    valid: jax.Array,
+    kernel: jax.Array,
+    *,
+    block_e: int = 128,
+    event_par: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Interlace-parallel ``event_conv_pallas``: ``event_par`` same-column
+    events per vectorized gather->add->scatter step.
+
+    Same contract as ``event_conv_pallas``; feed it interlace-ordered
+    queues (ideally ``aeq.segment_pad``-ed, which makes every aligned
+    group column-homogeneous so the sequential fallback never fires).
+    Bit-exact vs the sequential kernel for float32/int16/int8
+    (tests/test_interlaced.py).
+    """
+    e = coords.shape[0]
+    _check_interlaced_blocks(e, block_e, event_par)
+    hp, wp, c = vm_padded.shape
+    grid = (e // block_e,)
+    return pl.pallas_call(
+        partial(_event_conv_interlaced_kernel, block_e=block_e,
+                event_par=event_par),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e, 2), lambda b: (b, 0)),
+            pl.BlockSpec((block_e,), lambda b: (b,)),
+            pl.BlockSpec((3, 3, c), lambda b: (0, 0, 0)),
+            pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, wp, c), vm_padded.dtype),
+        input_output_aliases={3: 0},
+        interpret=resolve_interpret(interpret),
+    )(coords, valid.astype(jnp.int8), kernel, vm_padded)
+
+
+def _event_conv_interlaced_batched_kernel(coords_ref, valid_ref, kernel_ref,
+                                          vm_ref, out_ref, *, block_e,
+                                          event_par):
+    _apply_event_block_interlaced(coords_ref, valid_ref, kernel_ref, out_ref,
+                                  block_e=block_e, event_par=event_par,
+                                  prefix=(0,))
+
+
+@partial(jax.jit, static_argnames=("block_e", "event_par", "interpret"))
+def event_conv_pallas_interlaced_batched(
+    vm_padded: jax.Array,
+    coords: jax.Array,
+    valid: jax.Array,
+    kernel: jax.Array,
+    *,
+    block_e: int = 128,
+    event_par: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Interlace-parallel ``event_conv_pallas_batched`` (2-D grid over
+    (queue, event block), ``event_par`` hazard-free events per step).
+
+    Same contract as the sequential batched kernel and bit-exact vs it;
+    per-queue segment padding (``aeq.segment_pad``) keeps every group
+    column-homogeneous.
+    """
+    q, e, _ = coords.shape
+    _check_interlaced_blocks(e, block_e, event_par)
+    if vm_padded.shape[0] != q:
+        raise ValueError(
+            f"queue count mismatch: vm has {vm_padded.shape[0]} tiles, "
+            f"coords describe {q} queues")
+    _, hp, wp, c = vm_padded.shape
+    grid = (q, e // block_e)
+    return pl.pallas_call(
+        partial(_event_conv_interlaced_batched_kernel, block_e=block_e,
+                event_par=event_par),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_e, 2), lambda qi, b: (qi, b, 0)),
+            pl.BlockSpec((1, block_e), lambda qi, b: (qi, b)),
+            pl.BlockSpec((3, 3, c), lambda qi, b: (0, 0, 0)),
+            pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, hp, wp, c), vm_padded.dtype),
+        input_output_aliases={3: 0},
+        interpret=resolve_interpret(interpret),
     )(coords, valid.astype(jnp.int8), kernel, vm_padded)

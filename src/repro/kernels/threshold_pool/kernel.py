@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
 
 
@@ -52,7 +54,7 @@ def threshold_pool_pallas(
     v_t: float,
     pool: int | None,
     block_c: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused threshold unit over (H, W, C) membrane potentials.
 
@@ -88,5 +90,5 @@ def threshold_pool_pallas(
             jax.ShapeDtypeStruct((h, w, c), jnp.int8),
             jax.ShapeDtypeStruct((ph, pw, c), jnp.int8),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(vm, bias.reshape(1, 1, c), fired)

@@ -24,7 +24,7 @@ def threshold_pool(
     pool: int | None = None,
     block_c: int = 128,
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused bias + threshold + m-TTFS indicator + optional OR-max-pool.
 

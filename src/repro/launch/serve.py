@@ -47,9 +47,11 @@ def serve_csnn(args) -> int:
     imgs = jax.random.uniform(
         jax.random.PRNGKey(1), (args.requests, h, w, cfg.input_channels))
     batch_tile = args.batch_tile
+    event_par = (None if args.event_par < 0
+                 else args.event_par if args.event_par else 1)
     plan = plan_network(cfg, capacity=args.capacity,
                         channel_block=args.channel_block,
-                        batch_tile=batch_tile)
+                        batch_tile=batch_tile, event_par=event_par)
     if args.verbose:
         print(plan)
 
@@ -133,6 +135,10 @@ def main(argv=None):
                     help="AEQ depth per queue (csnn-paper only)")
     ap.add_argument("--channel-block", type=int, default=8,
                     help="output channels per MemPot tile (csnn-paper only)")
+    ap.add_argument("--event-par", type=int, default=-1,
+                    help="interlaced event-parallel width for csnn plans: "
+                         "-1 autotunes per layer (default), 0/1 keeps the "
+                         "sequential conv unit, >1 pins the width")
     ap.add_argument("--engine", action="store_true",
                     help="route requests through the async micro-batching "
                          "CSNNEngine (csnn-paper only)")
