@@ -5,8 +5,9 @@ the paper table it reproduces).
 Optional argv filters select a subset by table name, e.g.
 ``python -m benchmarks.run table5`` — used by CI as a smoke invocation.
 ``--json`` additionally writes ``BENCH_<table>.json`` per selected table
-that supports it (currently table5) — the machine-readable perf
-trajectory CI archives as an artifact.
+that supports it (table5, and table6_streaming which writes
+``BENCH_streaming.json``) — the machine-readable perf trajectory CI
+archives as an artifact.
 """
 from __future__ import annotations
 
@@ -18,10 +19,11 @@ import traceback
 def main(argv=None) -> None:
     from . import (table1_parallelism, table2_roofline,
                    table3_sparsity_utilization, table4_accuracy,
-                   table5_throughput)
+                   table5_throughput, table6_streaming)
 
     modules = (table4_accuracy, table3_sparsity_utilization,
-               table1_parallelism, table5_throughput, table2_roofline)
+               table1_parallelism, table5_throughput, table2_roofline,
+               table6_streaming)
     args = list(sys.argv[1:] if argv is None else argv)
     flags = {a for a in args if a.startswith("--")}
     unknown = flags - {"--json"}

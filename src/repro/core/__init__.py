@@ -14,10 +14,13 @@ Convolutional Spiking Neural Networks" (TCAD 2022), adapted FPGA -> TPU:
 * csnn         — model assembly (ANN train path + SNN inference paths)
 * pipeline_sim — cycle-level FPGA pipeline model for PE utilization (C8)
 """
-from .aeq import (BankedEvents, BatchedEventQueue, EventQueue, build_aeq,
-                  build_aeq_batched, build_bank_masks, calibrate_capacities,
-                  calibrate_capacity, column_index, deinterlace, interlace,
-                  interlaced_capacity, scatter_aeq, segment_pad)
+from .aeq import (BankedEvents, BatchedEventQueue, EventQueue, StreamChunk,
+                  StreamState, append_events, append_events_batched,
+                  build_aeq, build_aeq_batched, build_bank_masks,
+                  calibrate_capacities, calibrate_capacity, column_index,
+                  deinterlace, init_stream_state, interlace,
+                  interlaced_capacity, make_stream_chunk, scatter_aeq,
+                  segment_pad, stream_frames, stream_queues)
 from .csnn import (CSNNConfig, CSNNState, ConvSpec, FCSpec, ann_apply,
                    encode_input, init_params, init_state, snn_apply,
                    snn_apply_batched, snn_apply_dense, snn_apply_sharded,
@@ -35,6 +38,7 @@ from .quantization import QuantSpec, calibrate_scale, dequantize, fake_quant, qu
 from .scheduler import (ConvCarry, LayerStats, init_conv_carry,
                         run_conv_layer, run_conv_layer_batched,
                         run_conv_layer_batched_chunk,
+                        run_conv_layer_batched_chunk_streamed,
                         run_conv_layer_batched_planned, run_conv_layer_dense,
                         run_conv_layer_planned, run_fc_head,
                         run_fc_head_batched)

@@ -38,10 +38,12 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from .aeq import StreamState
 from .encoding import mttfs_thresholds, multi_threshold_encode
 from .plan import NetworkPlan, plan_network
 from .scheduler import (ConvCarry, LayerStats, init_conv_carry,
                         run_conv_layer_batched_chunk,
+                        run_conv_layer_batched_chunk_streamed,
                         run_conv_layer_batched_planned, run_conv_layer_dense,
                         run_conv_layer_planned, run_fc_head,
                         run_fc_head_batched)
@@ -235,8 +237,13 @@ def snn_step_chunk(
     spikes_chunk: (B, t_chunk, H, W, C_in) bool — the next ``t_chunk``
     input time steps for every batch row (``plan.chunk_steps`` per call;
     any chunk length works, but the serving engine keeps one shape so
-    nothing retraces).  Each conv layer consumes the chunk from its
-    carry, the head drive accumulates the final conv layer's output
+    nothing retraces) — OR a :class:`~repro.core.aeq.StreamState` with
+    banks (B, t_chunk, C_in, 9, HB, WB): pre-ingested raw DVS events
+    (``aeq.append_events*``), in which case the first conv layer consumes
+    the input queues finalized sort-free from the banks instead of
+    re-compacting dense frames (bit-exact either way;
+    tests/test_streaming.py).  Each conv layer consumes the chunk from
+    its carry, the head drive accumulates the final conv layer's output
     spikes, and the new :class:`CSNNState` is returned.  Chaining
     T/t_chunk calls from ``init_state`` reproduces the monolithic
     pipeline bit-exactly (per time step the computation is identical;
@@ -251,9 +258,14 @@ def snn_step_chunk(
     for idx, spec in enumerate(cfg.layers):
         if isinstance(spec, ConvSpec):
             p = params[f"conv{idx}"]
-            x, carry, st = run_conv_layer_batched_chunk(
-                x, p["w"], p["b"], cfg.v_t, plan.layers[ci], state.convs[ci],
-                backend=backend)
+            if isinstance(x, StreamState):  # streamed input, layer 0 only
+                x, carry, st = run_conv_layer_batched_chunk_streamed(
+                    x, p["w"], p["b"], cfg.v_t, plan.layers[ci],
+                    state.convs[ci], backend=backend)
+            else:
+                x, carry, st = run_conv_layer_batched_chunk(
+                    x, p["w"], p["b"], cfg.v_t, plan.layers[ci],
+                    state.convs[ci], backend=backend)
             new_convs.append(carry)
             stats.append(st)
             ci += 1

@@ -113,6 +113,11 @@ class LayerPlan:
     sat_bits: Optional[int] = None  # 8/16-bit saturating datapath, None=f32
     event_par: int = 1            # same-column events applied in parallel
                                   # (1 = sequential legacy conv unit)
+    ingest_capacity: Optional[int] = None  # raw-event buffer depth per
+                                  # StreamChunk admission (DVS ingestion;
+                                  # input layer only, None = not ingesting)
+    ingest_depth: Optional[int] = None     # time bins buffered per stream
+                                  # admission window (None = not ingesting)
 
     @property
     def vm_dtype(self):
@@ -136,10 +141,12 @@ class LayerPlan:
         oh, ow = self.out_hw
         pool = f" pool{self.pool}" if self.pool else ""
         par = f", par={self.event_par}" if self.event_par > 1 else ""
+        ing = (f", ingest={self.ingest_capacity}x{self.ingest_depth}"
+               if self.ingest_capacity is not None else "")
         return (f"LayerPlan({self.name}: {h}x{w}x{self.c_in} -> "
                 f"{oh}x{ow}x{self.c_out}{pool}, cap={self.capacity}, "
                 f"cb={self.channel_block}, block_e={self.block_e}, "
-                f"vm={self.vm_tile}, {_VM_DTYPES[self.sat_bits]}{par})")
+                f"vm={self.vm_tile}, {_VM_DTYPES[self.sat_bits]}{par}{ing})")
 
 
 @dataclass(frozen=True)
@@ -194,6 +201,11 @@ class NetworkPlan:
                 raise ValueError(f"{lp!r} does not match cfg layer {idx} "
                                  f"(in_hw={hw}, c_in={c_in}, "
                                  f"c_out={spec.channels})")
+            if lp.ingest_depth is not None and not (
+                    1 <= lp.ingest_depth <= self.t_steps):
+                raise ValueError(
+                    f"{lp!r} ingest_depth={lp.ingest_depth} must be in "
+                    f"[1, t_steps={self.t_steps}]")
             hw, c_in = conv_out_hw(hw, spec), spec.channels
         return self
 
@@ -222,6 +234,8 @@ def plan_conv_layer(
     batch_tile: int = 1,
     vmem_budget: Optional[int] = None,
     event_par: Optional[int] = 1,
+    ingest_capacity: Optional[int] = None,
+    ingest_depth: Optional[int] = None,
 ) -> LayerPlan:
     """Derive one conv layer's plan from its geometry.
 
@@ -264,10 +278,19 @@ def plan_conv_layer(
         out_hw = (-(-h // pool), -(-w // pool))
     else:
         out_hw = (h, w)
+    if (ingest_capacity is None) != (ingest_depth is None):
+        raise ValueError("ingest_capacity and ingest_depth must be set "
+                         "together (both None for non-ingesting layers)")
+    if ingest_capacity is not None and (ingest_capacity < 1
+                                        or ingest_depth < 1):
+        raise ValueError(f"ingest_capacity={ingest_capacity} and "
+                         f"ingest_depth={ingest_depth} must be >= 1")
     return LayerPlan(index=index, name=name, in_hw=in_hw, out_hw=out_hw,
                      c_in=c_in, c_out=c_out, pool=pool, capacity=cap,
                      channel_block=cb, block_e=be, vm_tile=vm_tile,
-                     sat_bits=sat_bits, event_par=ep)
+                     sat_bits=sat_bits, event_par=ep,
+                     ingest_capacity=ingest_capacity,
+                     ingest_depth=ingest_depth)
 
 
 def plan_network(
@@ -286,6 +309,8 @@ def plan_network(
     vmem_budget: Optional[int] = None,
     t_chunk: Optional[int] = None,
     event_par: Optional[int] | Sequence[Optional[int]] = 1,
+    ingest: bool = False,
+    ingest_capacity: Optional[int] = None,
 ) -> NetworkPlan:
     """Derive a :class:`NetworkPlan` from a ``CSNNConfig``.
 
@@ -304,6 +329,16 @@ def plan_network(
     2-polarity DVS encodings).  ``event_par`` selects the interlaced
     event-parallel kernel variant per layer (1 = sequential legacy
     schedule, ``None`` = autotune, or one value per conv layer).
+
+    ``ingest=True`` sizes the streaming-DVS ingestion buffers on the
+    input layer: ``ingest_depth`` is the admission window in time bins
+    (the chunk length), and ``ingest_capacity`` the raw-event buffer
+    depth per admitted :class:`~repro.core.aeq.StreamChunk` — by default
+    one input-queue depth worth of events per (bin, channel) of the
+    window, padded to a 64-multiple so jitted admission keeps one shape
+    (the hardware analogue: the ingress FIFO in front of the AEQ
+    builders).  Raw events beyond the buffer are refused at admission
+    (host-side backpressure), never silently dropped mid-queue.
     """
     from .csnn import ConvSpec, conv_out_hw
     conv_specs = [(i, s) for i, s in enumerate(cfg.layers)
@@ -329,11 +364,20 @@ def plan_network(
         t_chunk = snap_t_chunk(cfg.t_steps, t_chunk)
     plans, hw, c_in = [], tuple(cfg.input_hw), cfg.input_channels
     for ci, (idx, spec) in enumerate(conv_specs):
+        ing_cap = ing_depth = None
+        if ci == 0 and (ingest or ingest_capacity is not None):
+            ing_depth = t_chunk if t_chunk is not None else cfg.t_steps
+            h0, w0 = hw
+            auto = (effective_capacity(caps[ci], h0 * w0)
+                    * c_in * ing_depth)
+            ing_cap = (ingest_capacity if ingest_capacity is not None
+                       else pad_capacity(auto))
         plans.append(plan_conv_layer(
             idx, f"conv{idx}", hw, c_in, spec.channels, capacity=caps[ci],
             pool=spec.pool, channel_block=cbs[ci], block_e=block_e,
             sat_bits=sat_bits, per_layer=per_layer, batch_tile=batch_tile,
-            vmem_budget=vmem_budget, event_par=eps[ci]))
+            vmem_budget=vmem_budget, event_par=eps[ci],
+            ingest_capacity=ing_cap, ingest_depth=ing_depth))
         hw, c_in = conv_out_hw(hw, spec), spec.channels
     return NetworkPlan(layers=tuple(plans), t_steps=cfg.t_steps,
                        batch_tile=batch_tile, batch_axis=batch_axis,

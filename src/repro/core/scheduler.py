@@ -54,8 +54,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .aeq import (EventQueue, build_aeq_batched, build_bank_masks,
-                  segment_pad)
+from .aeq import (BatchedEventQueue, EventQueue, StreamState,
+                  build_aeq_batched, build_bank_masks, segment_pad,
+                  stream_frames, stream_queues)
 from .event_conv import (apply_banked_columns, apply_events,
                          apply_events_batched, bank_vm, crop_vm, dense_conv,
                          pad_vm, shifted_bank_masks, tap_matrix, unbank_vm)
@@ -383,9 +384,6 @@ def run_conv_layer_batched_chunk(
     and resets individual rows as slots retire and admit.
     """
     b_sz, t_steps, h, w, c_in = spikes_in.shape
-    c_out = kernels.shape[-1]
-    channel_block = lp.channel_block
-    vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
     banked = lp.event_par > 1 and backend != "pallas"
     # (B, t, H, W, C_in) -> per-(t, b, c_in) event sets, built in one pass
     fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (t, B, C_in, H, W)
@@ -401,13 +399,101 @@ def run_conv_layer_batched_chunk(
         # the conv work it saves on wide-C_in layers).
         events = build_bank_masks(fmaps, lp.capacity)
         # (t, B, C_in, 9, 9, hb, wb) -> (t, C_in, B, ...) for scan + fori
+        queues = None
         smasks = jnp.swapaxes(shifted_bank_masks(events.masks), 1, 2)
         counts = events.count
     else:
         queues = build_aeq_batched(fmaps, lp.capacity)
         if lp.event_par > 1:
             queues = segment_pad(queues, lp.event_par)
-        counts = queues.count
+        smasks, counts = None, queues.count
+    sparsity = 1.0 - jnp.mean(spikes_in.astype(jnp.float32),
+                              axis=(1, 2, 3, 4))
+    return _run_chunk_from_events(
+        queues, smasks, counts, sparsity, (b_sz, t_steps, h, w, c_in),
+        kernels, bias, v_t, lp, carry, banked=banked, backend=backend,
+        vm_dtype=vm_dtype)
+
+
+def run_conv_layer_batched_chunk_streamed(
+    stream: StreamState,
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    lp: LayerPlan,
+    carry: ConvCarry,
+    *,
+    backend: str = "jax",
+    vm_dtype=None,
+) -> tuple[jax.Array, ConvCarry, LayerStats]:
+    """Chunk runner over PRE-INGESTED input events instead of dense frames.
+
+    stream: :class:`~repro.core.aeq.StreamState` with banks
+    (B, t_chunk, C_in, 9, HB, WB) — raw DVS events appended incrementally
+    by ``aeq.append_events*``.  The conv-unit schedule, thresholding and
+    carry handling are byte-for-byte the ones of
+    :func:`run_conv_layer_batched_chunk`; only the queue construction
+    differs — ``aeq.stream_queues`` finalizes the banks sort-free (the
+    sequential/pallas variants; ``segment_pad`` applies on top exactly as
+    in the binned path), and the banked event-parallel variant compacts
+    the streamed occupancy with the same ``build_bank_masks`` call the
+    binned path uses.  Bit-exact vs binning the same events into frames
+    and calling the dense-chunk runner (tests/test_streaming.py).
+    """
+    h, w = lp.in_hw
+    b_sz, t_steps, c_in = stream.banks.shape[:3]
+    banked = lp.event_par > 1 and backend != "pallas"
+    # dense view only where the binned path itself is dense (sparsity
+    # stat; bank-mask compaction input) — a reshape/transpose, no sort
+    frames = stream_frames(stream, (h, w))         # (B, t, C_in, H, W)
+    if banked:
+        events = build_bank_masks(frames.transpose(1, 0, 2, 3, 4),
+                                  lp.capacity)
+        queues = None
+        smasks = jnp.swapaxes(shifted_bank_masks(events.masks), 1, 2)
+        counts = events.count
+    else:
+        queues = stream_queues(stream, lp.capacity, (h, w))  # lead (B, t, C)
+        # (B, t, C_in, ...) -> (t, B, C_in, ...): the layout the
+        # per-(t, c_in) kernel launches below index
+        queues = BatchedEventQueue(*(None if x is None
+                                     else jnp.swapaxes(x, 0, 1)
+                                     for x in queues))
+        if lp.event_par > 1:
+            queues = segment_pad(queues, lp.event_par)
+        smasks, counts = None, queues.count
+    sparsity = 1.0 - jnp.mean(frames.astype(jnp.float32), axis=(1, 2, 3, 4))
+    return _run_chunk_from_events(
+        queues, smasks, counts, sparsity, (b_sz, t_steps, h, w, c_in),
+        kernels, bias, v_t, lp, carry, banked=banked, backend=backend,
+        vm_dtype=vm_dtype)
+
+
+def _run_chunk_from_events(
+    queues: Optional[BatchedEventQueue],
+    smasks: Optional[jax.Array],
+    counts: jax.Array,
+    sparsity: jax.Array,
+    shape: tuple[int, int, int, int, int],
+    kernels: jax.Array,
+    bias: jax.Array,
+    v_t,
+    lp: LayerPlan,
+    carry: ConvCarry,
+    *,
+    banked: bool,
+    backend: str,
+    vm_dtype=None,
+) -> tuple[jax.Array, ConvCarry, LayerStats]:
+    """Shared chunk body: consume pre-built per-(t, b, c_in) event sets
+    (queues for the sequential/pallas variants, pre-shifted bank masks for
+    the banked variant) — the part of the chunk runner that is identical
+    whether the events came from dense frames or from the streaming
+    ingestion path."""
+    b_sz, t_steps, h, w, c_in = shape
+    c_out = kernels.shape[-1]
+    channel_block = lp.channel_block
+    vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
     block_e = lp.block_e
 
     def run_block(kernel_block, bias_block, vm0, fired0):
@@ -485,8 +571,7 @@ def run_conv_layer_batched_chunk(
     stats = LayerStats(
         in_spike_counts=jnp.swapaxes(counts, 0, 1),  # (B, t, C_in)
         out_spike_counts=jnp.sum(spikes_out, axis=(2, 3)).astype(jnp.int32),
-        in_sparsity=1.0 - jnp.mean(spikes_in.astype(jnp.float32),
-                                   axis=(1, 2, 3, 4)),
+        in_sparsity=sparsity,
         event_block=jnp.asarray(lp.block_e, jnp.int32),
         event_par=jnp.asarray(lp.event_par, jnp.int32),
     )

@@ -15,6 +15,12 @@ batched event-driven CSNN inference (the paper workload) as its own arch.
   # flushes, with a slot-utilization report:
   PYTHONPATH=src python -m repro.launch.serve --arch csnn-paper --smoke \
       --requests 8 --engine --continuous --t-chunk 1
+
+  # streaming DVS ingestion: requests are raw (t, y, x, polarity) event
+  # traces (synthetic moving-edge scenes) admitted bank-scatter-style
+  # with no per-frame encode or sort (implies --engine --continuous):
+  PYTHONPATH=src python -m repro.launch.serve --arch csnn-paper --smoke \
+      --requests 8 --stream
 """
 import argparse
 import sys
@@ -26,12 +32,16 @@ def serve_csnn(args) -> int:
 
     Default mode runs one pre-built batch through ``snn_apply_batched``;
     ``--engine`` routes the same requests through the async micro-batching
-    ``CSNNEngine`` (enqueue individually, flush on batch/deadline).
-    Compile time is measured separately from steady state (the first
-    timed call used to include retrace on shape change); ``--verbose``
-    prints the derived NetworkPlan and per-layer event counts.
+    ``CSNNEngine`` (enqueue individually, flush on batch/deadline);
+    ``--stream`` serves raw DVS event traces (synthetic moving-edge
+    scenes, 2-polarity) through the continuous engine's streaming
+    admission — no per-frame threshold encode, no sort.  Compile time is
+    measured separately from steady state (the first timed call used to
+    include retrace on shape change); ``--verbose`` prints the derived
+    NetworkPlan and per-layer event counts.
     """
     import statistics
+    from dataclasses import replace
 
     import jax
     import jax.numpy as jnp
@@ -40,18 +50,29 @@ def serve_csnn(args) -> int:
     from repro.core.csnn import encode_input, init_params, snn_apply_batched
     from repro.core.plan import plan_network
 
-    args.engine = args.engine or args.continuous  # --continuous implies it
+    # --stream implies --continuous implies --engine
+    args.continuous = args.continuous or args.stream
+    args.engine = args.engine or args.continuous
     cfg = csnn_paper.SMOKE if args.smoke else csnn_paper.FULL
+    if args.stream:  # polarity (OFF/ON) maps onto the 2-channel input path
+        cfg = replace(cfg, input_channels=2)
     params = init_params(jax.random.PRNGKey(0), cfg)
     h, w = cfg.input_hw
-    imgs = jax.random.uniform(
-        jax.random.PRNGKey(1), (args.requests, h, w, cfg.input_channels))
+    if args.stream:
+        from repro.data.dvs import dvs_moving_edges
+        reqs, _ = dvs_moving_edges(args.requests, cfg.t_steps, (h, w),
+                                   seed=1)
+        n_events = sum(tr.shape[0] for tr in reqs)
+    else:
+        reqs = list(jax.random.uniform(
+            jax.random.PRNGKey(1), (args.requests, h, w, cfg.input_channels)))
     batch_tile = args.batch_tile
     event_par = (None if args.event_par < 0
                  else args.event_par if args.event_par else 1)
     plan = plan_network(cfg, capacity=args.capacity,
                         channel_block=args.channel_block,
-                        batch_tile=batch_tile, event_par=event_par)
+                        batch_tile=batch_tile, event_par=event_par,
+                        ingest=args.stream)
     if args.verbose:
         print(plan)
 
@@ -62,12 +83,13 @@ def serve_csnn(args) -> int:
                             CSNNServeConfig(max_batch=max_batch,
                                             max_delay_ms=args.deadline_ms,
                                             continuous=args.continuous,
-                                            t_chunk=args.t_chunk))
+                                            t_chunk=args.t_chunk,
+                                            stream=args.stream))
         compile_s = engine.warmup()
         times = []
         for _ in range(max(args.iters, 1)):
             t0 = time.perf_counter()
-            logits = jnp.asarray(engine.run_requests(list(imgs)))
+            logits = jnp.asarray(engine.run_requests(reqs))
             times.append(time.perf_counter() - t0)
         dt = statistics.median(times)
         steady = f"{args.requests / dt:.1f} samples/s (median of {len(times)})"
@@ -78,6 +100,9 @@ def serve_csnn(args) -> int:
                      f"slot_utilization={engine.slot_utilization:.0%} "
                      f"wait_ms_max={engine.stats['wait_ms_max']:.1f} "
                      f"deadline_misses={engine.stats['deadline_misses']}")
+            if args.stream:
+                extra += (f"\nstream: events={n_events} "
+                          f"({n_events / dt:.0f} events/s admitted)")
         else:
             extra = (f"engine: batches={engine.stats['batches']} "
                      f"full={engine.stats['flushes_full']} "
@@ -86,7 +111,7 @@ def serve_csnn(args) -> int:
     else:
         fn = jax.jit(lambda s: snn_apply_batched(
             params, s, cfg, plan, collect_stats=False))
-        spikes = encode_input(imgs, cfg)
+        spikes = encode_input(jnp.stack(reqs), cfg)
         t0 = time.perf_counter()
         logits = jax.block_until_ready(fn(spikes))
         compile_s = time.perf_counter() - t0  # first call: compile + run
@@ -103,7 +128,8 @@ def serve_csnn(args) -> int:
     for i, p in enumerate(preds.tolist()):
         print(f"req {i}: class {p}")
     print(f"compile: {compile_s:.2f} s (excluded from throughput)")
-    mode = ("continuous" if args.engine and args.continuous
+    mode = ("stream" if args.stream
+            else "continuous" if args.engine and args.continuous
             else "engine" if args.engine else "batched")
     print(f"throughput: {steady} "
           f"(batch={args.requests}, T={cfg.t_steps}, "
@@ -111,8 +137,8 @@ def serve_csnn(args) -> int:
           f"mode={mode})")
     if extra:
         print(extra)
-    if args.verbose:
-        spikes = encode_input(imgs, cfg)
+    if args.verbose and not args.stream:
+        spikes = encode_input(jnp.stack(reqs), cfg)
         _, stats = jax.jit(lambda s: snn_apply_batched(
             params, s, cfg, plan, collect_stats=True))(spikes)
         for lp, st in zip(plan.layers, stats):
@@ -146,6 +172,10 @@ def main(argv=None):
                     help="with --engine: continuous batching — slot-level "
                          "refill between t_chunk steps instead of "
                          "run-to-completion flushes")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve raw DVS event traces through the "
+                         "continuous engine's streaming admission "
+                         "(implies --engine --continuous; csnn-paper only)")
     ap.add_argument("--t-chunk", type=int, default=0,
                     help="continuous-mode refill granularity in time steps "
                          "(0 = plan default; snapped to a divisor of T)")

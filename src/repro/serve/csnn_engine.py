@@ -33,6 +33,18 @@ run-to-completion engine: state rows are per-sample independent, so a
 request sees exactly the same T-step computation whichever slots its
 neighbours occupy (tests/test_continuous.py).
 
+**Streaming DVS ingestion (``CSNNServeConfig(stream=True)``, continuous
+mode only)** — requests are raw DVS event streams ((N, 4) int32 rows of
+(t, y, x, polarity)) instead of images.  Host-side admission becomes a
+cheap bank append (``data.dvs.events_to_banks``: one vectorized scatter
+into the interlace-column layout) instead of a jitted multi-threshold
+encode, and each device chunk receives a
+:class:`~repro.core.aeq.StreamState` window whose input queues are
+finalized sort-free on device (``aeq.stream_queues``) — no dense frame,
+no per-frame sort anywhere on the admission path.  Logits are bit-exact
+vs binning the same events into frames and serving those
+(tests/test_streaming.py).
+
 Every batch/chunk shape can be pre-compiled with ``warmup()`` so
 steady-state latency never includes a retrace.  Observability lives in
 ``engine.stats`` (flush reasons, padded slots, chunk counts, slot
@@ -50,9 +62,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.aeq import StreamState
 from repro.core.csnn import (CSNNConfig, ConvSpec, encode_input, init_state,
                              snn_apply_batched, snn_readout, snn_step_chunk)
 from repro.core.plan import NetworkPlan, plan_network, snap_t_chunk
+from repro.data.dvs import events_to_banks
 
 _STOP = object()
 
@@ -84,6 +98,9 @@ class CSNNServeConfig:
     t_chunk: int = 0            # refill granularity in time steps
                                 # (0 = plan.t_chunk, else 1; snapped to a
                                 # divisor of T)
+    stream: bool = False        # requests are raw DVS event streams (N, 4)
+                                # admitted by bank append, not images
+                                # (continuous mode only)
 
 
 class CSNNEngine:
@@ -113,6 +130,10 @@ class CSNNEngine:
         self.plan = plan if plan is not None else plan_network(
             cfg, batch_tile=serve_cfg.max_batch)
         self.serve_cfg = serve_cfg
+        if serve_cfg.stream and not serve_cfg.continuous:
+            raise ValueError(
+                "CSNNServeConfig(stream=True) requires continuous=True — "
+                "streaming admission rides the slot-level refill loop")
         if (not serve_cfg.continuous
                 and serve_cfg.max_batch % self.plan.batch_tile != 0):
             # continuous mode never tile-pads: its batch shape is the slot
@@ -229,10 +250,16 @@ class CSNNEngine:
         t0 = time.perf_counter()
         if self.serve_cfg.continuous:
             state = init_state(self._params, self.cfg, self.plan, self._slots)
-            self._encode(jnp.zeros((1, h, w, c), jnp.float32))
+            if not self.serve_cfg.stream:  # stream admission never encodes
+                self._encode(jnp.zeros((1, h, w, c), jnp.float32))
             for b in self._buckets:  # one compile per occupancy bucket
                 idx = np.full(b, self._slots, dtype=np.int32)  # all pads
-                chunk = jnp.zeros((b, self._t_chunk, h, w, c), jnp.bool_)
+                if self.serve_cfg.stream:
+                    chunk = StreamState(banks=jnp.zeros(
+                        (b, self._t_chunk, c, 9, -(-h // 3), -(-w // 3)),
+                        jnp.bool_))
+                else:
+                    chunk = jnp.zeros((b, self._t_chunk, h, w, c), jnp.bool_)
                 state, logits = self._step(state, idx, chunk,
                                            np.zeros(b, dtype=bool))
                 jax.block_until_ready(logits)
@@ -364,15 +391,27 @@ class CSNNEngine:
         pending = []            # arrivals awaiting a free slot (lazily encoded)
         stop_seen = False
 
+        stream = self.serve_cfg.stream
+
         def encoded(item):
             """Lazily encode a pending entry in place: [spk|None, img,
             fut, arrived].  The backlog is encoded in the window right
             after a chunk dispatch (host work concurrent with the
             device's async-dispatched execution); an entry admitted
-            before that window pays its encode here, on demand."""
+            before that window pays its encode here, on demand.
+
+            Stream mode skips the jitted threshold encode entirely: the
+            payload is a raw (N, 4) event trace, scattered straight into
+            the (T, C, 9, HB, WB) interlace-column banks — a single
+            vectorized numpy assignment per request."""
             if item[0] is None:
-                item[0] = np.asarray(
-                    self._encode(jnp.asarray(item[1])[None])[0], dtype=bool)
+                if stream:
+                    item[0] = events_to_banks(
+                        np.asarray(item[1]), T, (h, w), c)
+                else:
+                    item[0] = np.asarray(
+                        self._encode(jnp.asarray(item[1])[None])[0],
+                        dtype=bool)
             return item[0]
 
         def drain_nowait():
@@ -430,7 +469,9 @@ class CSNNEngine:
             act = [i for i in range(S) if active[i]]
             b = next(bb for bb in self._buckets if bb >= n_active)
             idx = np.full(b, S, dtype=np.int32)
-            chunk = np.zeros((b, tc, h, w, c), dtype=bool)
+            chunk = np.zeros(
+                (b, tc, c, 9, -(-h // 3), -(-w // 3)) if stream
+                else (b, tc, h, w, c), dtype=bool)
             admit_b = np.zeros(b, dtype=bool)
             for j, i in enumerate(act):
                 idx[j] = i
@@ -438,8 +479,10 @@ class CSNNEngine:
                 admit_b[j] = admit[i]
             # fused gather + admit-reset + chunk step + readout + scatter,
             # async dispatch
-            state, logits_dev = self._step(state, idx, jnp.asarray(chunk),
-                                           admit_b)
+            sp = jnp.asarray(chunk)
+            if stream:
+                sp = StreamState(banks=sp)
+            state, logits_dev = self._step(state, idx, sp, admit_b)
             self.stats["chunks"] += 1
             self.stats["slot_steps_busy"] += n_active
             self.stats["slot_steps_total"] += b
