@@ -54,7 +54,7 @@ def main():
     # parallelism sweep: channel_block x batch
     base_us = None
     for cb in [1, 2, 4, 8, 16]:
-        fn = jax.jit(jax.vmap(lambda s: snn_apply(
+        fn = jax.jit(jax.vmap(lambda s, cb=cb: snn_apply(
             params, s, cfg, capacity=256, channel_block=cb, collect_stats=False)))
         us = timeit(fn, spikes)
         per_sample = us / spikes.shape[0]

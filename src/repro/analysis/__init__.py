@@ -1,0 +1,92 @@
+"""Static verification layer for the sparse-CSNN accelerator repro.
+
+The paper's hardware is correct by construction: queue depths, bank
+assignments and PE tiling are fixed at design time and obey structural
+invariants (hazard-free memory interlacing, Fig. 6; design-time queue
+sizing, Sec. IV).  This package re-proves those invariants over the
+*software* plan/kernel surface before any device work — run it with
+``python -m repro.analysis [--json] [--selftest] [--only PASS]``.
+It exits nonzero on any finding and writes ``ANALYSIS_report.json``
+with findings plus per-rule proof-obligation counts (so a pass that
+silently checked nothing is distinguishable from a clean one).
+
+Passes and rules
+================
+
+``contracts`` — plan-time sizing invariants, proven over a geometry
+sweep grid (paper net, small/rectangular fmaps, DVS ingestion, int8/16):
+
+* ``plan-block-e-divides-depth`` — event-block grid tiles the queue.
+* ``plan-block-e-par-aligned``   — event_par | block_e and depth.
+* ``plan-capacity-within-fmap``  — AEQ capacity <= padded H*W.
+* ``plan-queue-depth-interlaced``— depth = interlaced_capacity(...).
+* ``plan-channel-block-divides`` — channel blocks tile C_out.
+* ``plan-vm-tile-geometry``      — MemPot tile is halo-padded.
+* ``plan-out-hw-pool``           — post-pool geometry is ceil-divided.
+* ``plan-t-chunk-divides``       — t_chunk | T (slot alignment).
+* ``plan-ingest-sizing``         — DVS ingest buffers cover the window.
+* ``plan-vmem-budget``           — autotuner's VMEM model holds.
+* ``plan-validate-agrees``       — NetworkPlan.validate(cfg) accepts.
+
+``hazards`` — the memory-interlacing theorem and kernel addressing:
+
+* ``hazard-column-disjoint``     — same-column events never share a
+  membrane cell (exhaustive over one congruence period = a proof).
+* ``hazard-mask-routing``        — the 81 shifted_bank_masks slices
+  match brute-force tap enumeration, one tap per bank per column.
+* ``hazard-banked-masks``        — concrete bank-occupancy sets admit
+  hazard-free whole-column application.
+* ``hazard-segment-homogeneous`` — segment_pad groups are column-pure
+  with disjoint footprints; ``hazard-segment-replay`` — padding never
+  reorders or drops kept events.
+* ``oob-blockspec-bounds``       — every pl.BlockSpec index map of the
+  shipped kernels (captured by tracing the real wrappers under
+  ``jax.eval_shape`` with ``pallas_call`` interposed) stays in bounds
+  and covers its operand; aliases pair identical operands.
+* ``oob-event-patch``            — the 3x3 ``pl.dslice`` event patch
+  always lands inside the halo-padded tile.
+
+``kernels`` — abstract interpretation of kernel vs oracle:
+
+* ``kernel-shape-contract``      — ``jax.eval_shape`` parity of every
+  Pallas entry point against its ``ref.py`` oracle.
+* ``kernel-value-parity``        — interpret-mode bit-exactness on
+  adversarial inputs (corner events, duplicates, -1 sentinels).
+* ``kernel-checkify``            — oracle datapaths run clean under
+  ``checkify`` index + NaN checks.
+* ``kernel-sat-overflow``        — int8/int16 saturation is reachable
+  and clamps (never wraps) at maximum fan-in.
+
+``lint`` — AST rules for bug classes this repo has shipped:
+
+* ``lint-mutable-default``             — shared mutable defaults
+  (the PR-4 ``CSNNServeConfig`` bug).
+* ``lint-tracer-cast``                 — int()/bool()/float() on jitted
+  parameters.
+* ``lint-host-call-in-jit``            — np.random/time/random frozen
+  at trace time.
+* ``lint-pallas-call-outside-kernels`` — pallas_call sites outside
+  ``kernels/``.
+* ``lint-missing-donate``              — hot serving entry points
+  jitted without ``donate_argnums``.
+
+Ignore mechanism
+================
+
+Suppress a *lint* finding by appending ``# analysis: ignore[rule-id]``
+(comma-separated ids allowed) to the flagged line or the line above,
+with a justification.  The semantic passes (contracts/hazards/kernels)
+have no ignore escape on purpose: a violated sizing or hazard invariant
+is a real bug, not a style choice — fix the plan or the kernel.
+
+Self-test
+=========
+
+``--selftest`` plants known violations (corrupted plans, a colliding
+interlace scheme, duplicate events in an aligned group, an oversized
+BlockSpec, a wrapping adder, mutable-default sources) and fails unless
+every one is flagged — CI runs it so the auditor cannot rot silently.
+"""
+from .report import Finding, Report, merge
+
+__all__ = ["Finding", "Report", "merge"]

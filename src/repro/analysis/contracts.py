@@ -1,0 +1,342 @@
+"""Plan-time invariant registry: prove the LayerPlan/NetworkPlan contract.
+
+The paper's accelerator is correct because every resource is *sized at
+design time* — queue depths, PE tiling, interlaced membrane RAMs — and
+the sizing obeys structural invariants (Secs. IV-V).  ``plan_network``
+encodes those rules; this module re-proves them *from the outside* over a
+geometry sweep grid, so a regression in the sizing logic (or a hand-built
+plan that skips it) is caught before any device work:
+
+* ``plan-block-e-divides-depth`` — the event-block grid must tile the
+  allocated queue exactly (Pallas grid = depth / block_e steps).
+* ``plan-block-e-par-aligned`` — with ``event_par > 1``, parallel groups
+  must tile event blocks and the segment-padded depth must tile into
+  aligned groups (the hazard-freedom precondition of the interlaced
+  kernel's gather->add->scatter schedule).
+* ``plan-capacity-within-fmap`` — effective AEQ capacity <= padded H*W:
+  a queue deeper than the feature map wastes BRAM/VMEM and can never
+  fill (the per-layer sizing theorem of the plan/execute split).
+* ``plan-queue-depth-interlaced`` — allocated depth equals
+  ``interlaced_capacity(capacity, event_par)`` (the segment-padding
+  worst case: 9 columns each padded to an event_par multiple).
+* ``plan-channel-block-divides`` — channel blocks tile C_out exactly.
+* ``plan-vm-tile-geometry`` — the VMEM-resident MemPot tile is the
+  halo-padded (H+2, W+2, channel_block) shape the kernels index into.
+* ``plan-out-hw-pool`` — post-pool geometry is the ceil-divided fmap
+  (the OR-max-pool window contract chained into the next layer's plan).
+* ``plan-t-chunk-divides`` — chunked execution needs equal-length chunks
+  (slot alignment in continuous batching), so t_chunk | T.
+* ``plan-ingest-sizing`` — streaming ingestion buffers: capacity/depth
+  set together, only on the input layer, depth within [1, T], and the
+  raw-event buffer covers the worst-case admission window
+  (capacity * C_in * depth events) — undersizing silently turns
+  admission backpressure into dropped sensor events.
+* ``plan-vmem-budget`` — the analytic VMEM model the autotuner sizes
+  against: double-buffered MemPot tile stack + event stream blocks +
+  kernel taps must fit the per-core budget.  This is the invariant that
+  keeps ``autotune_block_e``/``autotune_event_par`` honest when the
+  real-TPU lowering lands (ROADMAP).
+* ``plan-validate-agrees`` — ``NetworkPlan.validate(cfg)`` accepts the
+  plan (cross-checks the sweep's own construction).
+
+Every contract is a small pure function registered in ``CONTRACTS``;
+``audit_plan`` runs all of them over one (plan, cfg) pair and
+``run_contracts`` sweeps the built-in geometry grid (paper net, small
+nets, rectangular fmaps, multi-channel DVS ingestion, int8/int16
+datapaths, explicit and autotuned event_par) — not just the shipped
+configuration.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.aeq import interlaced_capacity
+from repro.core.csnn import CSNNConfig, ConvSpec, FCSpec
+from repro.core.plan import LayerPlan, NetworkPlan, pad_capacity, plan_network
+from repro.kernels.event_conv.ops import EVENT_BYTES, VMEM_BUDGET
+
+from .report import Report
+
+# rule id -> (doc, checker).  A checker yields (where, message) pairs for
+# violations and returns the number of obligations it discharged.
+CONTRACTS: dict[str, tuple[str, Callable]] = {}
+
+
+def contract(rule: str, doc: str):
+    def register(fn):
+        CONTRACTS[rule] = (doc, fn)
+        return fn
+    return register
+
+
+def _layer_where(case: str, lp: LayerPlan) -> str:
+    return f"plan[{case}].{lp.name}"
+
+
+@contract("plan-block-e-divides-depth",
+          "event-block grid tiles the allocated queue depth exactly")
+def _check_block_e(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        if lp.block_e < 1 or lp.queue_depth % lp.block_e != 0:
+            rep.flag("contracts", "plan-block-e-divides-depth",
+                     _layer_where(case, lp),
+                     f"block_e={lp.block_e} does not tile queue_depth="
+                     f"{lp.queue_depth}")
+    return n
+
+
+@contract("plan-block-e-par-aligned",
+          "event_par groups tile event blocks and the segment-padded depth")
+def _check_par_alignment(plan: NetworkPlan, cfg, case: str,
+                         rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        if lp.event_par <= 1:
+            continue
+        n += 1
+        if lp.block_e % lp.event_par != 0:
+            rep.flag("contracts", "plan-block-e-par-aligned",
+                     _layer_where(case, lp),
+                     f"block_e={lp.block_e} is not a multiple of "
+                     f"event_par={lp.event_par}")
+        if lp.queue_depth % lp.event_par != 0:
+            rep.flag("contracts", "plan-block-e-par-aligned",
+                     _layer_where(case, lp),
+                     f"queue_depth={lp.queue_depth} is not a multiple of "
+                     f"event_par={lp.event_par}")
+    return n
+
+
+@contract("plan-capacity-within-fmap",
+          "effective AEQ capacity bounded by the padded feature-map size")
+def _check_capacity(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        hw = lp.in_hw[0] * lp.in_hw[1]
+        if lp.capacity > pad_capacity(hw):
+            rep.flag("contracts", "plan-capacity-within-fmap",
+                     _layer_where(case, lp),
+                     f"capacity={lp.capacity} exceeds padded fmap size "
+                     f"pad64({lp.in_hw[0]}*{lp.in_hw[1]})={pad_capacity(hw)}")
+        if lp.capacity < 1:
+            rep.flag("contracts", "plan-capacity-within-fmap",
+                     _layer_where(case, lp),
+                     f"capacity={lp.capacity} must be >= 1")
+    return n
+
+
+@contract("plan-queue-depth-interlaced",
+          "allocated depth equals the segment-padded interlaced capacity")
+def _check_queue_depth(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        want = interlaced_capacity(lp.capacity, lp.event_par)
+        if lp.queue_depth != want:
+            rep.flag("contracts", "plan-queue-depth-interlaced",
+                     _layer_where(case, lp),
+                     f"queue_depth={lp.queue_depth} != interlaced_capacity("
+                     f"{lp.capacity}, {lp.event_par})={want}")
+    return n
+
+
+@contract("plan-channel-block-divides",
+          "channel blocks tile the output channels exactly")
+def _check_channel_block(plan: NetworkPlan, cfg, case: str,
+                         rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        if lp.channel_block < 1 or lp.c_out % lp.channel_block != 0:
+            rep.flag("contracts", "plan-channel-block-divides",
+                     _layer_where(case, lp),
+                     f"channel_block={lp.channel_block} does not divide "
+                     f"c_out={lp.c_out}")
+    return n
+
+
+@contract("plan-vm-tile-geometry",
+          "VMEM MemPot tile is the halo-padded (H+2, W+2, channel_block)")
+def _check_vm_tile(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        want = (lp.in_hw[0] + 2, lp.in_hw[1] + 2, lp.channel_block)
+        if tuple(lp.vm_tile) != want:
+            rep.flag("contracts", "plan-vm-tile-geometry",
+                     _layer_where(case, lp),
+                     f"vm_tile={lp.vm_tile} != halo-padded {want}")
+    return n
+
+
+@contract("plan-out-hw-pool",
+          "post-pool geometry is the ceil-divided feature map")
+def _check_out_hw(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        h, w = lp.in_hw
+        if lp.pool:
+            want = (-(-h // lp.pool), -(-w // lp.pool))
+        else:
+            want = (h, w)
+        if tuple(lp.out_hw) != want:
+            rep.flag("contracts", "plan-out-hw-pool",
+                     _layer_where(case, lp),
+                     f"out_hw={lp.out_hw} != {want} for pool={lp.pool}")
+    return n
+
+
+@contract("plan-t-chunk-divides",
+          "chunk length divides T (equal-length chunks for slot refill)")
+def _check_t_chunk(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    if plan.t_chunk is None:
+        return 0
+    if not (1 <= plan.t_chunk <= plan.t_steps
+            and plan.t_steps % plan.t_chunk == 0):
+        rep.flag("contracts", "plan-t-chunk-divides", f"plan[{case}]",
+                 f"t_chunk={plan.t_chunk} does not divide "
+                 f"t_steps={plan.t_steps}")
+    return 1
+
+
+@contract("plan-ingest-sizing",
+          "streaming ingestion buffers sized for the admission window")
+def _check_ingest(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for li, lp in enumerate(plan.layers):
+        if (lp.ingest_capacity is None) != (lp.ingest_depth is None):
+            rep.flag("contracts", "plan-ingest-sizing",
+                     _layer_where(case, lp),
+                     f"ingest_capacity={lp.ingest_capacity} and "
+                     f"ingest_depth={lp.ingest_depth} must be set together")
+            n += 1
+            continue
+        if lp.ingest_capacity is None:
+            continue
+        n += 1
+        if li != 0:
+            rep.flag("contracts", "plan-ingest-sizing",
+                     _layer_where(case, lp),
+                     "only the input layer admits raw DVS events; inner "
+                     "layers build their queues from upstream spikes")
+        if not 1 <= lp.ingest_depth <= plan.t_steps:
+            rep.flag("contracts", "plan-ingest-sizing",
+                     _layer_where(case, lp),
+                     f"ingest_depth={lp.ingest_depth} outside "
+                     f"[1, t_steps={plan.t_steps}]")
+        window = lp.capacity * lp.c_in * lp.ingest_depth
+        if lp.ingest_capacity < window:
+            rep.flag("contracts", "plan-ingest-sizing",
+                     _layer_where(case, lp),
+                     f"ingest_capacity={lp.ingest_capacity} cannot buffer a "
+                     f"worst-case admission window of {window} events "
+                     f"(capacity={lp.capacity} * c_in={lp.c_in} * "
+                     f"depth={lp.ingest_depth})")
+    return n
+
+
+def vmem_model_bytes(lp: LayerPlan, batch_tile: int) -> int:
+    """The analytic VMEM residency model behind the autotuners: a
+    double-buffered MemPot tile stack, the double-buffered event-stream
+    block, and the resident kernel taps (all in ``lp.vm_dtype`` bytes)."""
+    vm_bytes = {None: 4, 8: 1, 16: 2}[lp.sat_bits]
+    tile = max(batch_tile, 1)
+    for d in lp.vm_tile:
+        tile *= d
+    resident = 2 * tile * vm_bytes
+    stream = 2 * lp.block_e * EVENT_BYTES
+    taps = 9 * lp.channel_block * vm_bytes
+    return resident + stream + taps
+
+
+@contract("plan-vmem-budget",
+          "autotuner VMEM model: resident tiles + stream fit the budget")
+def _check_vmem(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for lp in plan.layers:
+        n += 1
+        used = vmem_model_bytes(lp, plan.batch_tile)
+        if used > VMEM_BUDGET:
+            rep.flag("contracts", "plan-vmem-budget",
+                     _layer_where(case, lp),
+                     f"modelled VMEM residency {used} B exceeds the "
+                     f"{VMEM_BUDGET} B per-core budget (vm_tile={lp.vm_tile}"
+                     f" x batch_tile={plan.batch_tile}, "
+                     f"block_e={lp.block_e})")
+    return n
+
+
+@contract("plan-validate-agrees",
+          "NetworkPlan.validate accepts the plan for its own config")
+def _check_validate(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    if cfg is None:
+        return 0
+    try:
+        plan.validate(cfg)
+    except (ValueError, KeyError) as e:
+        rep.flag("contracts", "plan-validate-agrees", f"plan[{case}]",
+                 f"plan.validate(cfg) rejected the plan: {e}")
+    return 1
+
+
+def audit_plan(plan: NetworkPlan, cfg: Optional[CSNNConfig] = None, *,
+               case: str = "plan", report: Optional[Report] = None) -> Report:
+    """Run every registered contract over one (plan, cfg) pair."""
+    rep = report if report is not None else Report()
+    for rule, (_, fn) in CONTRACTS.items():
+        rep.proved(rule, fn(plan, cfg, case, rep))
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# Geometry sweep grid: the plans the registry is proven over on every run.
+# ---------------------------------------------------------------------------
+
+def sweep_cases() -> list[tuple[str, CSNNConfig, dict]]:
+    """(name, cfg, plan_network kwargs) grid covering the paper net plus
+    the geometry corners the planner must stay sound on: small/rectangular
+    fmaps, pool windows that do not divide H/W, multi-channel DVS inputs
+    with streaming ingestion, saturating int datapaths, explicit and
+    autotuned event_par, tiny and oversized requested capacities."""
+    paper = CSNNConfig()
+    small = CSNNConfig(input_hw=(10, 10),
+                       layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
+                       t_steps=4)
+    rect = CSNNConfig(input_hw=(17, 13),
+                      layers=(ConvSpec(6), ConvSpec(8, pool=3), FCSpec(4)),
+                      t_steps=6)
+    dvs = CSNNConfig(input_hw=(20, 24), input_channels=2,
+                     layers=(ConvSpec(8, pool=2), ConvSpec(4), FCSpec(5)),
+                     t_steps=8)
+    return [
+        ("paper", paper, dict(capacity=256, channel_block=8)),
+        ("paper-autotuned-par", paper,
+         dict(capacity=256, channel_block=8, event_par=None, block_e=None)),
+        ("paper-int8-par4", paper,
+         dict(capacity=256, channel_block=8, sat_bits=8, event_par=4)),
+        ("paper-int16-chunked", paper,
+         dict(capacity=256, sat_bits=16, t_chunk=1)),
+        ("paper-oversized-capacity", paper, dict(capacity=4096)),
+        ("small-tiny-capacity", small, dict(capacity=8)),
+        ("small-par2", small, dict(capacity=100, event_par=2, t_chunk=2)),
+        ("rect-autotuned", rect,
+         dict(capacity=300, channel_block=[3, 4], event_par=None)),
+        ("dvs-ingest", dvs,
+         dict(capacity=128, event_par=None, t_chunk=4, ingest=True)),
+        ("dvs-ingest-explicit", dvs,
+         dict(capacity=64, t_chunk=2, ingest=True,
+              ingest_capacity=pad_capacity(64 * 2 * 2))),
+    ]
+
+
+def run_contracts(report: Optional[Report] = None) -> Report:
+    """Prove every contract over the whole geometry sweep grid."""
+    rep = report if report is not None else Report()
+    for case, cfg, kwargs in sweep_cases():
+        plan = plan_network(cfg, **kwargs)
+        audit_plan(plan, cfg, case=case, report=rep)
+    return rep

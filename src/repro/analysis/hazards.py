@@ -1,0 +1,546 @@
+"""Symbolic hazard-freedom and static bounds checking of the kernel layer.
+
+The correctness of every event-parallel path in this repo rests on one
+structural theorem (paper Sec. "memory interlacing", Fig. 6): **two
+distinct events of the same interlace column s = 3(i%3)+(j%3) have
+disjoint 3x3 write footprints**, so applying a whole column (or any
+same-column group) in parallel can never double-write a membrane cell.
+PR 5 exploits it three ways — the banked-select jax path
+(``event_conv.apply_banked_columns``), the interlaced Pallas kernels, and
+the ``segment_pad`` queue layout that feeds them.  This module *proves*
+the theorem and audits each exploitation site statically:
+
+* ``hazard-column-disjoint`` — exhaustive proof over one full congruence
+  period (a 12x12 window: every (i%3, j%3, di%3, dj%3) case appears, and
+  footprint geometry only depends on those residues, so the finite check
+  is a proof for all H, W).
+* ``hazard-mask-routing`` — the 81 static ``shifted_bank_masks``
+  (column, bank) slices are verified one-hot-by-one-hot against a brute
+  force enumeration of where each kernel tap of each pixel must land
+  (padded-space bank + macro cell), including the bank<->tap bijection
+  per column (each of the 9 banks receives exactly one tap).
+* ``hazard-segment-homogeneous`` — ``segment_pad`` layouts are audited on
+  adversarial feature maps: every aligned ``event_par`` group must be
+  column-homogeneous with pairwise-disjoint footprints among its valid
+  events (the precondition under which the interlaced Pallas kernel's
+  all-reads-before-writes group schedule is exact), and the padded queue
+  must hold exactly the original kept-event multiset in order.
+* ``oob-event-patch`` — interval bounds of the ``pl.dslice`` gather/
+  scatter in ``kernels/event_conv/kernel.py``: event coords are produced
+  in unpadded space [0, H-1] (invalid slots are masked to 0), each event
+  reads/writes a 3x3 patch at that offset in the halo-padded
+  (H+2, W+2, C) tile, so the worst-case slice end (H-1)+3 = H+2 must
+  equal the padded extent — proven per sweep geometry, for both axes.
+* ``oob-blockspec-bounds`` — every ``pl.BlockSpec`` index map of every
+  ``pl.pallas_call`` in ``kernels/event_conv/kernel.py`` and
+  ``kernels/threshold_pool/kernel.py`` is captured by tracing the real
+  wrappers with an interposed ``pallas_call`` and evaluated over the full
+  grid: all block offsets must stay inside the operand, the final blocks
+  must reach the operand end (no silently untouched tail), and
+  ``input_output_aliases`` must pair shape/dtype-identical operands.
+
+The capture step runs the *actual shipped kernels* under
+``jax.eval_shape`` (abstract values only — nothing executes), so the
+audit cannot drift from the code it certifies.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .report import Report
+
+# Cap on exhaustively enumerated grid points per captured pallas_call.
+_MAX_GRID_POINTS = 65536
+
+
+# ---------------------------------------------------------------------------
+# Interlace-column disjointness: the hazard-freedom theorem.
+# ---------------------------------------------------------------------------
+
+def _footprint(i: int, j: int) -> set[tuple[int, int]]:
+    """Padded-space cells written by an event centred at unpadded (i, j):
+    the 3x3 patch at padded offset (i, j) — rows i..i+2, cols j..j+2."""
+    return {(i + a, j + b) for a in range(3) for b in range(3)}
+
+
+def check_column_disjointness(window: int = 12, *,
+                              column_of: Optional[Callable] = None,
+                              report: Optional[Report] = None) -> Report:
+    """Exhaustively prove same-column footprint disjointness on a window
+    covering every congruence case (window >= 6 sees all residue pairs;
+    the default 12 adds two full extra periods of margin).
+
+    ``column_of`` overrides the column assignment (i, j) -> s, which is
+    how the self-test seeds a hazard-colliding interlace scheme.
+    """
+    rep = report if report is not None else Report()
+    col = column_of if column_of is not None else (
+        lambda i, j: (i % 3) * 3 + (j % 3))
+    pixels = list(itertools.product(range(window), range(window)))
+    checked = 0
+    for (i1, j1), (i2, j2) in itertools.combinations(pixels, 2):
+        if col(i1, j1) != col(i2, j2):
+            continue
+        checked += 1
+        if _footprint(i1, j1) & _footprint(i2, j2):
+            rep.flag("hazards", "hazard-column-disjoint",
+                     f"window[{window}x{window}]",
+                     f"events ({i1},{j1}) and ({i2},{j2}) share interlace "
+                     f"column {col(i1, j1)} but their 3x3 write footprints "
+                     f"overlap — parallel application would double-write")
+    rep.proved("hazard-column-disjoint", checked)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# shifted_bank_masks routing: the 81 (column, bank) static slices.
+# ---------------------------------------------------------------------------
+
+def check_mask_routing(hw: tuple[int, int] = (8, 9), *,
+                       report: Optional[Report] = None) -> Report:
+    """Verify the 81 ``shifted_bank_masks`` (column, bank) write masks
+    against a brute-force enumeration, one one-hot event at a time.
+
+    For an event at unpadded (i, j) (padded centre (i+1, j+1), interlace
+    column s), tap (a, b) writes padded cell (i+a, j+b), which lives in
+    bank t = 3*((i+a)%3) + (j+b)%3 at macro cell ((i+a)//3, (j+b)//3).
+    The shifted masks must light exactly those 9 cells in row s, one per
+    bank (the bank<->tap bijection behind the FPGA's 9 conflict-free
+    ports), and every other row must stay dark.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.aeq import interlace
+    from repro.core.event_conv import shifted_bank_masks
+
+    rep = report if report is not None else Report()
+    h, w = hw
+    hb, wb = -(-(h + 2) // 3), -(-(w + 2) // 3)
+    for i in range(h):
+        for j in range(w):
+            s = (i % 3) * 3 + (j % 3)
+            # one-hot occupancy: pad the centre, bank it (the
+            # build_bank_masks layout for this single kept event)
+            fmap = np.zeros((h, w), bool)
+            fmap[i, j] = True
+            padded = np.pad(fmap, ((1, 1), (1, 1)))
+            masks = np.asarray(interlace(jnp.asarray(padded)))
+            got = np.asarray(shifted_bank_masks(jnp.asarray(masks)))
+            want = np.zeros((9, 9, hb, wb), bool)
+            for a in range(3):
+                for b in range(3):
+                    r, c = i + a, j + b
+                    t = 3 * (r % 3) + (c % 3)
+                    want[s, t, r // 3, c // 3] = True
+            if not np.array_equal(got, want):
+                bad = np.argwhere(got != want)
+                rep.flag("hazards", "hazard-mask-routing",
+                         f"event({i},{j})",
+                         f"shifted_bank_masks routes column {s} wrongly at "
+                         f"(col, bank, I, J)={tuple(bad[0])} — "
+                         f"{len(bad)} cell(s) differ from the brute-force "
+                         f"tap enumeration")
+                continue
+            banks_hit = {int(t) for t in np.argwhere(want[s].any((-2, -1)))
+                         .ravel()}
+            if banks_hit != set(range(9)):
+                rep.flag("hazards", "hazard-mask-routing",
+                         f"event({i},{j})",
+                         f"column {s} writes banks {sorted(banks_hit)} — "
+                         f"the 9-tap footprint must hit each bank exactly "
+                         f"once")
+            rep.proved("hazard-mask-routing")
+    return rep
+
+
+def check_banked_masks(masks: np.ndarray, *,
+                       where: str = "bank-masks",
+                       report: Optional[Report] = None) -> Report:
+    """Audit a concrete (9, HB, WB) bank-occupancy mask set (the
+    ``aeq.build_bank_masks`` output consumed by the banked conv path):
+    every pair of occupied cells within one bank must map to padded
+    positions >= 3 apart in some axis (same-bank cells share both
+    residues, so this is disjointness of their 3x3 footprints), i.e. the
+    mask set admits hazard-free whole-column application.
+
+    A mask set violating this cannot come from the banked layout (cells
+    of one bank are distinct macro addresses by construction) — the check
+    exists so hand-built or corrupted mask sets (self-test fixtures, and
+    any future non-grid mask producer) are rejected before use.
+    """
+    rep = report if report is not None else Report()
+    m = np.asarray(masks)
+    if m.ndim != 3 or m.shape[0] != 9:
+        rep.flag("hazards", "hazard-banked-masks", where,
+                 f"expected (9, HB, WB) bank masks, got shape {m.shape}")
+        return rep
+    for t in range(9):
+        cells = np.argwhere(m[t])
+        for (i1, j1), (i2, j2) in itertools.combinations(map(tuple, cells), 2):
+            p1 = (3 * i1 + t // 3, 3 * j1 + t % 3)
+            p2 = (3 * i2 + t // 3, 3 * j2 + t % 3)
+            if abs(p1[0] - p2[0]) < 3 and abs(p1[1] - p2[1]) < 3:
+                rep.flag("hazards", "hazard-banked-masks", where,
+                         f"bank {t} holds events at padded {p1} and {p2} "
+                         f"with overlapping 3x3 footprints")
+        rep.proved("hazard-banked-masks")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# segment_pad layout: the interlaced Pallas kernel's precondition.
+# ---------------------------------------------------------------------------
+
+def _adversarial_fmaps(h: int, w: int) -> list[tuple[str, np.ndarray]]:
+    """Feature maps that stress the queue layout: dense, empty, single
+    pixel, checkerboard, one full interlace column, and a seeded random."""
+    rng = np.random.default_rng(0)
+    full = np.ones((h, w), bool)
+    empty = np.zeros((h, w), bool)
+    single = np.zeros((h, w), bool)
+    single[h // 2, w // 2] = True
+    checker = np.indices((h, w)).sum(0) % 2 == 0
+    one_col = np.zeros((h, w), bool)
+    one_col[0::3, 0::3] = True
+    rand = rng.random((h, w)) < 0.3
+    return [("full", full), ("empty", empty), ("single", single),
+            ("checker", checker), ("one-column", one_col), ("random", rand)]
+
+
+def check_segment_layout(hw: tuple[int, int] = (11, 13),
+                         capacities: Sequence[int] = (16, 64, 1024),
+                         event_pars: Sequence[int] = (2, 4, 8), *,
+                         report: Optional[Report] = None) -> Report:
+    """Audit ``aeq.segment_pad`` output layouts on adversarial fmaps.
+
+    Three obligations per (fmap, capacity, event_par) case:
+
+    1. every aligned group of ``event_par`` slots is column-homogeneous
+       among its valid events (the interlaced kernel's parallel-apply
+       precondition — a heterogeneous group would fall back to the
+       sequential body, or worse, double-write if the fallback were
+       removed);
+    2. valid events inside one group have pairwise-disjoint footprints
+       (hazard freedom realized on the concrete layout, truncation
+       included);
+    3. the padded queue replays the exact kept-event sequence of the
+       unpadded queue (padding inserts invalid no-ops only, order kept).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.aeq import build_aeq, segment_pad
+
+    rep = report if report is not None else Report()
+    h, w = hw
+    for (name, fmap), cap, par in itertools.product(
+            _adversarial_fmaps(h, w), capacities, event_pars):
+        where = f"segment_pad[{name},cap={cap},par={par}]"
+        q = build_aeq(jnp.asarray(fmap), cap)
+        qp = segment_pad(q, par)
+        check_padded_queue(np.asarray(qp.coords), np.asarray(qp.valid), par,
+                           where=where, report=rep)
+        kept = [tuple(c) for c, v in zip(np.asarray(q.coords),
+                                         np.asarray(q.valid)) if v]
+        kept_p = [tuple(c) for c, v in zip(np.asarray(qp.coords),
+                                           np.asarray(qp.valid)) if v]
+        if kept != kept_p:
+            rep.flag("hazards", "hazard-segment-homogeneous", where,
+                     f"segment_pad changed the kept-event sequence "
+                     f"({len(kept)} -> {len(kept_p)} events)")
+        rep.proved("hazard-segment-replay")
+    return rep
+
+
+def check_padded_queue(coords: np.ndarray, valid: np.ndarray,
+                       event_par: int, *, where: str = "queue",
+                       report: Optional[Report] = None) -> Report:
+    """Check one concrete (E, 2) queue layout for group homogeneity and
+    in-group footprint disjointness (seedable with hand-built queues)."""
+    rep = report if report is not None else Report()
+    e = coords.shape[0]
+    if e % event_par != 0:
+        rep.flag("hazards", "hazard-segment-homogeneous", where,
+                 f"queue depth {e} is not a multiple of "
+                 f"event_par={event_par}")
+        return rep
+    for g in range(e // event_par):
+        sl = slice(g * event_par, (g + 1) * event_par)
+        ev = [tuple(map(int, c)) for c, v in zip(coords[sl], valid[sl]) if v]
+        cols = {(i % 3) * 3 + (j % 3) for i, j in ev}
+        if len(cols) > 1:
+            rep.flag("hazards", "hazard-segment-homogeneous", where,
+                     f"aligned group {g} mixes interlace columns "
+                     f"{sorted(cols)}: events {ev}")
+        for (i1, j1), (i2, j2) in itertools.combinations(ev, 2):
+            if abs(i1 - i2) < 3 and abs(j1 - j2) < 3:
+                rep.flag("hazards", "hazard-segment-homogeneous", where,
+                         f"group {g} events ({i1},{j1}) and ({i2},{j2}) "
+                         f"have overlapping 3x3 footprints — parallel "
+                         f"apply would double-write")
+        rep.proved("hazard-segment-homogeneous")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# pallas_call capture: audit the real kernels' grids and BlockSpecs.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CapturedCall:
+    """One intercepted ``pl.pallas_call``: everything needed to bounds-
+    check its BlockSpec index maps without executing the kernel."""
+
+    name: str                         # wrapper entry point
+    grid: tuple[int, ...]
+    in_specs: list                    # pl.BlockSpec per operand
+    out_specs: list                   # pl.BlockSpec per output
+    arg_shapes: list[tuple[int, ...]]
+    arg_dtypes: list
+    out_shapes: list[tuple[int, ...]]
+    out_dtypes: list
+    aliases: dict = field(default_factory=dict)
+
+
+def _spec_parts(spec) -> tuple[Optional[tuple], Optional[Callable]]:
+    """(block_shape, index_map) from a pl.BlockSpec across jax versions
+    (older releases took the arguments in the opposite order)."""
+    bs = getattr(spec, "block_shape", None)
+    im = getattr(spec, "index_map", None)
+    if callable(bs) and not callable(im):
+        bs, im = im, bs
+    return bs, im
+
+
+def capture_pallas_calls() -> list[CapturedCall]:
+    """Trace every Pallas kernel wrapper abstractly with ``pallas_call``
+    interposed, recording grids/BlockSpecs/shapes of the *shipped* code.
+
+    ``jax.eval_shape`` runs the wrappers on abstract values only; the
+    interposer returns zeros of the declared out_shape, so no kernel body
+    executes and no device memory is touched.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from repro.kernels.event_conv import kernel as ev_kernel
+    from repro.kernels.threshold_pool import kernel as tp_kernel
+
+    captured: list[CapturedCall] = []
+    current: list[str] = ["?"]
+    real_pallas_call = pl.pallas_call
+
+    def interposer(body, *, grid=None, in_specs=None, out_specs=None,
+                   out_shape=None, input_output_aliases=None, **kwargs):
+        outs = out_shape if isinstance(out_shape, (list, tuple)) \
+            else [out_shape]
+        specs_out = out_specs if isinstance(out_specs, (list, tuple)) \
+            else [out_specs]
+
+        def run(*args):
+            captured.append(CapturedCall(
+                name=current[0],
+                grid=tuple(grid) if grid is not None else (),
+                in_specs=list(in_specs or []),
+                out_specs=list(specs_out),
+                arg_shapes=[tuple(a.shape) for a in args],
+                arg_dtypes=[a.dtype for a in args],
+                out_shapes=[tuple(o.shape) for o in outs],
+                out_dtypes=[o.dtype for o in outs],
+                aliases=dict(input_output_aliases or {})))
+            zeros = [jnp.zeros(o.shape, o.dtype) for o in outs]
+            return zeros if isinstance(out_shape, (list, tuple)) else zeros[0]
+
+        return run
+
+    # geometry representative enough to exercise every spec dimension
+    h, w, c, e, q = 10, 12, 8, 64, 3
+    f32 = jnp.float32
+    cases = [
+        ("event_conv_pallas", ev_kernel.event_conv_pallas,
+         (jax.ShapeDtypeStruct((h + 2, w + 2, c), f32),
+          jax.ShapeDtypeStruct((e, 2), jnp.int32),
+          jax.ShapeDtypeStruct((e,), jnp.int8),
+          jax.ShapeDtypeStruct((3, 3, c), f32)),
+         dict(block_e=16, interpret=True)),
+        ("event_conv_pallas_batched", ev_kernel.event_conv_pallas_batched,
+         (jax.ShapeDtypeStruct((q, h + 2, w + 2, c), f32),
+          jax.ShapeDtypeStruct((q, e, 2), jnp.int32),
+          jax.ShapeDtypeStruct((q, e), jnp.int8),
+          jax.ShapeDtypeStruct((3, 3, c), f32)),
+         dict(block_e=16, interpret=True)),
+        ("event_conv_pallas_interlaced",
+         ev_kernel.event_conv_pallas_interlaced,
+         (jax.ShapeDtypeStruct((h + 2, w + 2, c), f32),
+          jax.ShapeDtypeStruct((e, 2), jnp.int32),
+          jax.ShapeDtypeStruct((e,), jnp.int8),
+          jax.ShapeDtypeStruct((3, 3, c), f32)),
+         dict(block_e=16, event_par=4, interpret=True)),
+        ("event_conv_pallas_interlaced_batched",
+         ev_kernel.event_conv_pallas_interlaced_batched,
+         (jax.ShapeDtypeStruct((q, h + 2, w + 2, c), f32),
+          jax.ShapeDtypeStruct((q, e, 2), jnp.int32),
+          jax.ShapeDtypeStruct((q, e), jnp.int8),
+          jax.ShapeDtypeStruct((3, 3, c), f32)),
+         dict(block_e=16, event_par=4, interpret=True)),
+        ("threshold_pool_pallas", tp_kernel.threshold_pool_pallas,
+         (jax.ShapeDtypeStruct((9, 12, 8), f32),
+          jax.ShapeDtypeStruct((8,), f32),
+          jax.ShapeDtypeStruct((9, 12, 8), jnp.int8)),
+         dict(v_t=1.0, pool=3, block_c=4, interpret=True)),
+        ("threshold_pool_pallas_nopool", tp_kernel.threshold_pool_pallas,
+         (jax.ShapeDtypeStruct((9, 12, 8), f32),
+          jax.ShapeDtypeStruct((8,), f32),
+          jax.ShapeDtypeStruct((9, 12, 8), jnp.int8)),
+         dict(v_t=0.5, pool=None, block_c=8, interpret=True)),
+    ]
+    def invoke(raw, kwargs, *a):
+        return raw(*a, **kwargs)
+
+    pl.pallas_call = interposer
+    try:
+        for name, fn, avals, kwargs in cases:
+            current[0] = name
+            raw = getattr(fn, "__wrapped__", fn)  # bypass the jit cache
+            jax.eval_shape(partial(invoke, raw, kwargs), *avals)
+    finally:
+        pl.pallas_call = real_pallas_call
+    return captured
+
+
+def check_blockspec_bounds(calls: Optional[list[CapturedCall]] = None, *,
+                           report: Optional[Report] = None) -> Report:
+    """Statically evaluate every captured BlockSpec index map over its
+    full grid and bounds-check the addressed blocks.
+
+    Obligations per (call, operand): every grid point's block offset
+    (index * block_shape) stays inside the operand; the blocks reach the
+    operand's end in every dimension (no untouched tail); aliased
+    input/output pairs agree in shape and dtype.
+    """
+    rep = report if report is not None else Report()
+    if calls is None:
+        calls = capture_pallas_calls()
+    for call in calls:
+        points = 1
+        for g in call.grid:
+            points *= max(g, 1)
+        if points > _MAX_GRID_POINTS:
+            rep.flag("hazards", "oob-blockspec-bounds", f"kernel:{call.name}",
+                     f"grid {call.grid} too large to enumerate "
+                     f"({points} points > {_MAX_GRID_POINTS}) — shrink the "
+                     f"capture geometry")
+            continue
+        grid_points = list(itertools.product(
+            *[range(g) for g in call.grid])) or [()]
+        operands = (
+            [("in", k, s, call.arg_shapes[k])
+             for k, s in enumerate(call.in_specs)]
+            + [("out", k, s, call.out_shapes[k])
+               for k, s in enumerate(call.out_specs)])
+        for kind, k, spec, shape in operands:
+            if spec is None:
+                continue
+            block, index_map = _spec_parts(spec)
+            if block is None or index_map is None:
+                rep.flag("hazards", "oob-blockspec-bounds",
+                         f"kernel:{call.name}",
+                         f"{kind}[{k}] BlockSpec exposes no "
+                         f"(block_shape, index_map) — cannot audit")
+                continue
+            lo = [None] * len(shape)
+            hi = [0] * len(shape)
+            bad = None
+            for gp in grid_points:
+                idx = index_map(*gp)
+                idx = idx if isinstance(idx, tuple) else (idx,)
+                if len(idx) != len(shape) or len(block) != len(shape):
+                    bad = (gp, f"index map arity {len(idx)} / block rank "
+                               f"{len(block)} vs operand rank {len(shape)}")
+                    break
+                for d, (ix, bd, dim) in enumerate(zip(idx, block, shape)):
+                    off = int(ix) * bd
+                    if off < 0 or off + bd > dim:
+                        bad = (gp, f"dim {d}: block [{off}, {off + bd}) "
+                                   f"outside operand extent {dim}")
+                        break
+                    lo[d] = off if lo[d] is None else min(lo[d], off)
+                    hi[d] = max(hi[d], off + bd)
+                if bad:
+                    break
+            if bad:
+                rep.flag("hazards", "oob-blockspec-bounds",
+                         f"kernel:{call.name}",
+                         f"{kind}[{k}] shape {shape}: grid point {bad[0]} "
+                         f"addresses out of bounds — {bad[1]}")
+                continue
+            uncovered = [d for d, dim in enumerate(shape)
+                         if hi[d] < dim or (lo[d] or 0) > 0]
+            if kind == "out" and uncovered:
+                rep.flag("hazards", "oob-blockspec-bounds",
+                         f"kernel:{call.name}",
+                         f"out[{k}] shape {shape}: blocks cover only "
+                         f"[{lo}, {hi}) — output tail is never written")
+                continue
+            rep.proved("oob-blockspec-bounds")
+        for in_idx, out_idx in call.aliases.items():
+            if (call.arg_shapes[in_idx] != call.out_shapes[out_idx]
+                    or call.arg_dtypes[in_idx] != call.out_dtypes[out_idx]):
+                rep.flag("hazards", "oob-blockspec-bounds",
+                         f"kernel:{call.name}",
+                         f"input_output_aliases {{{in_idx}: {out_idx}}} "
+                         f"pairs mismatched operands "
+                         f"{call.arg_shapes[in_idx]} vs "
+                         f"{call.out_shapes[out_idx]}")
+            else:
+                rep.proved("oob-blockspec-bounds")
+    return rep
+
+
+def check_patch_bounds(h: int, w: int, *, window: int = 3,
+                       coord_hi: Optional[tuple[int, int]] = None,
+                       where: Optional[str] = None,
+                       report: Optional[Report] = None) -> Report:
+    """Interval proof of the event-patch ``pl.dslice`` bounds.
+
+    Event coords come from the AEQ in unpadded space — valid events lie
+    in [0, H-1] x [0, W-1] and invalid slots are masked to (0, 0) inside
+    the kernel — and each event addresses a ``window``-wide square patch
+    at that offset in the halo-padded (H+2, W+2, C) tile.  The audit
+    checks max(coord) + window <= padded extent on both axes (and
+    min >= 0), i.e. the halo exactly absorbs the worst-case slice.
+    ``coord_hi`` overrides the coordinate upper bounds (self-test hook).
+    """
+    rep = report if report is not None else Report()
+    hp, wp = h + 2, w + 2
+    hi_i, hi_j = coord_hi if coord_hi is not None else (h - 1, w - 1)
+    loc = where or f"event_conv[{h}x{w}]"
+    for axis, hi, pad in (("i", hi_i, hp), ("j", hi_j, wp)):
+        if hi + window > pad:
+            rep.flag("hazards", "oob-event-patch", loc,
+                     f"{axis}-axis: dslice({axis}={hi}, {window}) reaches "
+                     f"{hi + window} > padded extent {pad} — the halo does "
+                     f"not absorb the worst-case event patch")
+        elif hi < 0:
+            rep.flag("hazards", "oob-event-patch", loc,
+                     f"{axis}-axis: coordinate upper bound {hi} < 0")
+        else:
+            rep.proved("oob-event-patch")
+    return rep
+
+
+def run_hazards(report: Optional[Report] = None) -> Report:
+    """Run every hazard/bounds pass over the built-in sweep."""
+    rep = report if report is not None else Report()
+    check_column_disjointness(report=rep)
+    check_mask_routing(report=rep)
+    check_segment_layout(report=rep)
+    for h, w in ((10, 10), (28, 28), (17, 13), (9, 16), (1, 1)):
+        check_patch_bounds(h, w, report=rep)
+    check_blockspec_bounds(report=rep)
+    return rep

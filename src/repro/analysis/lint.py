@@ -1,0 +1,261 @@
+"""Repo-specific AST lint for the bug classes this codebase has shipped.
+
+Rules (ids are stable; suppress a line with ``# analysis: ignore[rule]``
+on the flagged line or the line above, with a justification comment):
+
+* ``lint-mutable-default`` — mutable default values: ``x=[]`` /
+  ``x={}`` / ``cfg=ServeConfig()`` in function signatures, and bare
+  mutable class attributes in ``@dataclass`` bodies.  One shared
+  instance leaks state across calls — the PR-4 ``CSNNServeConfig`` bug.
+* ``lint-tracer-cast`` — ``int()`` / ``bool()`` / ``float()`` applied
+  directly to a parameter of a jitted function.  Under ``jax.jit`` the
+  parameter is a tracer and the cast raises ``ConcretizationTypeError``
+  at trace time (or silently bakes a constant if it sneaks through via
+  a weak type).
+* ``lint-host-call-in-jit`` — ``np.random.*`` / ``time.*`` /
+  ``random.*`` calls inside a jitted function: they execute once at
+  trace time and freeze into the compiled executable, so every call
+  after the first reuses the "random" number or timestamp.
+* ``lint-pallas-call-outside-kernels`` — ``pl.pallas_call`` invoked
+  outside ``src/repro/kernels/``.  Kernels live behind the plan/execute
+  split; ad-hoc pallas_call sites bypass the autotuner, the interpret
+  switch, and this auditor.
+* ``lint-missing-donate`` — known hot entry points (the serving step
+  functions, which rewrite multi-MB membrane state every tick) must be
+  jitted with ``donate_argnums`` so XLA reuses the input buffers
+  instead of doubling peak memory.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, Optional
+
+from .report import Report
+
+IGNORE_RE = re.compile(r"#\s*analysis:\s*ignore\[([a-zA-Z0-9,\- ]+)\]")
+
+# (path suffix, function name) pairs that must be jitted with donation.
+DONATE_REGISTRY: frozenset[tuple[str, str]] = frozenset({
+    ("serve/csnn_engine.py", "step_bucket"),
+    ("launch/dryrun.py", "decode_fn"),
+})
+
+# Calls that are fine as defaults: immutable factories, plus
+# dataclasses.field — the sanctioned per-instance construction hook.
+_IMMUTABLE_FACTORIES = {"frozenset", "tuple", "dtype", "field"}
+_CASTS = {"int", "bool", "float"}
+_HOST_MODULES = {"time", "random"}
+_NP_NAMES = {"np", "numpy"}
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for an Attribute/Name chain, '' otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True if the expression applies jax.jit: ``jax.jit``, ``jit``,
+    ``partial(jax.jit, ...)`` or ``jax.jit(...)`` / ``partial(...)``
+    call heads used as decorators."""
+    name = _dotted(node)
+    if name in ("jit", "jax.jit"):
+        return True
+    if isinstance(node, ast.Call):
+        head = _dotted(node.func)
+        if head in ("jit", "jax.jit"):
+            return True
+        if head.endswith("partial"):
+            return any(_is_jit_expr(a) for a in node.args)
+    return False
+
+
+class _Lints(ast.NodeVisitor):
+    def __init__(self, rel: str, lines: list[str], in_kernels: bool,
+                 report: Report) -> None:
+        self.rel = rel
+        self.lines = lines
+        self.in_kernels = in_kernels
+        self.rep = report
+        self.jitted_names: set[str] = set()
+        self._fn_stack: list[Optional[set[str]]] = []  # params if jitted
+
+    # -- suppression ----------------------------------------------------
+    def _suppressed(self, lineno: int, rule: str) -> bool:
+        for ln in (lineno, lineno - 1):
+            if 1 <= ln <= len(self.lines):
+                m = IGNORE_RE.search(self.lines[ln - 1])
+                if m and rule in {r.strip() for r in m.group(1).split(",")}:
+                    return True
+        return False
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        if self._suppressed(node.lineno, rule):
+            self.rep.proved(rule)
+            return
+        self.rep.flag("lint", rule, f"{self.rel}:{node.lineno}", message)
+
+    # -- rule: mutable defaults ----------------------------------------
+    def _check_default(self, node: ast.AST) -> None:
+        if node is None:
+            return
+        bad = None
+        if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+            bad = "a mutable literal"
+        elif isinstance(node, ast.Call):
+            head = _dotted(node.func).rsplit(".", 1)[-1]
+            if head not in _IMMUTABLE_FACTORIES:
+                bad = f"a call ({_dotted(node.func) or 'expression'}(...))"
+        if bad is None:
+            self.rep.proved("lint-mutable-default")
+        else:
+            self._flag(
+                "lint-mutable-default", node,
+                f"default value is {bad}, evaluated once and shared "
+                f"across every call — use None and construct inside")
+
+    def _visit_fn(self, node) -> None:
+        for d in list(node.args.defaults) + list(node.args.kw_defaults):
+            self._check_default(d)
+        jitted = any(_is_jit_expr(d) for d in node.decorator_list) \
+            or node.name in self.jitted_names
+        params = None
+        if jitted:
+            a = node.args
+            params = {p.arg for p in
+                      a.posonlyargs + a.args + a.kwonlyargs}
+        self._fn_stack.append(params)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+        if jitted:
+            self.rep.proved("lint-tracer-cast")
+            self.rep.proved("lint-host-call-in-jit")
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        is_dc = any("dataclass" in _dotted(
+            d.func if isinstance(d, ast.Call) else d)
+            for d in node.decorator_list)
+        if is_dc:
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    self._check_default(stmt.value)
+                elif isinstance(stmt, ast.Assign):
+                    self._check_default(stmt.value)
+        self.generic_visit(node)
+
+    # -- rules inside jitted bodies + pallas/jit call sites -------------
+    def visit_Call(self, node: ast.Call) -> None:
+        head = _dotted(node.func)
+        tail = head.rsplit(".", 1)[-1]
+        jit_params = self._fn_stack[-1] if self._fn_stack else None
+
+        if tail == "pallas_call":
+            if self.in_kernels:
+                self.rep.proved("lint-pallas-call-outside-kernels")
+            else:
+                self._flag(
+                    "lint-pallas-call-outside-kernels", node,
+                    "pl.pallas_call outside kernels/ bypasses the "
+                    "plan/execute split and the interpret switch")
+
+        if jit_params is not None:
+            if tail in _CASTS and node.args and isinstance(
+                    node.args[0], ast.Name) and \
+                    node.args[0].id in jit_params:
+                self._flag(
+                    "lint-tracer-cast", node,
+                    f"{tail}() on parameter '{node.args[0].id}' of a "
+                    f"jitted function concretizes a tracer")
+            root = head.split(".", 1)[0]
+            if (root in _NP_NAMES and ".random" in head) or \
+                    root in _HOST_MODULES:
+                self._flag(
+                    "lint-host-call-in-jit", node,
+                    f"'{head}' inside a jitted function runs at trace "
+                    f"time only — its result is frozen into the "
+                    f"compiled executable")
+
+        if head in ("jit", "jax.jit"):
+            target = node.args[0] if node.args else None
+            tname = _dotted(target) if target is not None else ""
+            if tname:
+                self.jitted_names.add(tname.rsplit(".", 1)[-1])
+            for suffix, fn in DONATE_REGISTRY:
+                if self.rel.endswith(suffix) and \
+                        tname.rsplit(".", 1)[-1] == fn:
+                    if any(kw.arg == "donate_argnums"
+                           for kw in node.keywords):
+                        self.rep.proved("lint-missing-donate")
+                    else:
+                        self._flag(
+                            "lint-missing-donate", node,
+                            f"hot entry point '{fn}' jitted without "
+                            f"donate_argnums — doubles peak membrane "
+                            f"memory")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, filename: str,
+                report: Optional[Report] = None) -> Report:
+    """Lint one file's source text (``filename`` is used for rule
+    scoping: kernels/ exemption, donate registry matching)."""
+    rep = report if report is not None else Report()
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as exc:
+        rep.flag("lint", "lint-syntax", f"{filename}:{exc.lineno or 0}",
+                 f"file does not parse: {exc.msg}")
+        return rep
+    in_kernels = "/kernels/" in filename.replace("\\", "/")
+    visitor = _Lints(filename, source.splitlines(), in_kernels, rep)
+    # two passes so `f = jax.jit(f)`-style module-level jitting marks the
+    # function regardless of definition order
+    visitor.visit(tree)
+    if visitor.jitted_names:
+        second = _Lints(filename, source.splitlines(), in_kernels, Report())
+        second.jitted_names = set(visitor.jitted_names)
+        second.visit(tree)
+        known = {(f.rule, f.where) for f in rep.findings}
+        for f in second.rep.findings:
+            if (f.rule, f.where) not in known:
+                rep.add(f)
+    rep.proved("lint-pallas-call-outside-kernels")  # file scanned
+    return rep
+
+
+def _default_paths() -> list[Path]:
+    root = Path(__file__).resolve().parents[3]
+    return [root / "src" / "repro", root / "benchmarks", root / "examples"]
+
+
+def _iter_py(paths: Iterable[Path]) -> Iterable[Path]:
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+
+
+def run_lint(paths: Optional[Iterable[Path]] = None,
+             report: Optional[Report] = None) -> Report:
+    rep = report if report is not None else Report()
+    root = Path(__file__).resolve().parents[3]
+    for path in _iter_py(_default_paths() if paths is None else
+                         [Path(p) for p in paths]):
+        try:
+            rel = str(path.relative_to(root))
+        except ValueError:
+            rel = str(path)
+        lint_source(path.read_text(), rel, report=rep)
+    return rep

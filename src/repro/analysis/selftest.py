@@ -1,0 +1,228 @@
+"""Seeded-violation self-test: every analyzer must flag every fixture.
+
+A static analyzer that silently stops finding things is worse than none,
+so CI runs this after the clean pass: each fixture below plants one known
+violation — a corrupted plan, a hazard-colliding queue layout, an
+oversized/out-of-bounds BlockSpec, a wrapping (non-saturating) adder, a
+mutable-default dataclass — and the corresponding checker must produce a
+finding with the expected rule id.  A fixture that passes clean becomes a
+``selftest-missed`` finding, which fails the CLI (and the CI lane)
+exactly like a real violation would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+from typing import Optional
+
+import numpy as np
+
+from .report import Report
+
+
+def _expect(out: Report, inner: Report, rule: str, fixture: str) -> None:
+    """The seeded fixture must have produced >= 1 finding under `rule`."""
+    if any(f.rule == rule for f in inner.findings):
+        out.proved("selftest-seeded")
+    else:
+        out.flag("selftest", "selftest-missed", f"fixture:{fixture}",
+                 f"seeded violation was NOT flagged under rule '{rule}' "
+                 f"(findings: {[f.rule for f in inner.findings] or 'none'})")
+
+
+def _broken_plans():
+    """(fixture, rule, broken_plan) triples built by corrupting a real
+    plan field-by-field — one violated contract each."""
+    from repro.core.csnn import CSNNConfig
+    from repro.core.plan import plan_network
+
+    plan = plan_network(CSNNConfig(), capacity=256, channel_block=8,
+                        event_par=4)
+    lp = plan.layers[0]
+
+    def relayer(**kw):
+        new0 = dataclasses.replace(lp, **kw)
+        return dataclasses.replace(plan, layers=(new0,) + plan.layers[1:])
+
+    class _DesyncedDepth:
+        """Proxy of a LayerPlan whose allocated depth disagrees with the
+        interlaced-capacity formula (the property is derived, so this
+        corruption cannot be expressed with dataclasses.replace)."""
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        @property
+        def queue_depth(self):
+            return self._inner.queue_depth + 1
+
+    desynced = dataclasses.replace(
+        plan, layers=(_DesyncedDepth(lp),) + plan.layers[1:])
+
+    return [
+        ("block-e-misaligned", "plan-block-e-divides-depth",
+         relayer(block_e=lp.queue_depth - 1)),
+        ("par-misaligned", "plan-block-e-par-aligned",
+         relayer(block_e=lp.event_par + 1)),
+        ("capacity-oversized", "plan-capacity-within-fmap",
+         relayer(capacity=10 * lp.in_hw[0] * lp.in_hw[1])),
+        ("depth-not-interlaced", "plan-queue-depth-interlaced", desynced),
+        ("vm-tile-unpadded", "plan-vm-tile-geometry",
+         relayer(vm_tile=(lp.in_hw[0], lp.in_hw[1], lp.channel_block))),
+        ("vmem-blown", "plan-vmem-budget",
+         dataclasses.replace(plan, batch_tile=1 << 20)),
+        ("t-chunk-ragged", "plan-t-chunk-divides",
+         dataclasses.replace(plan, t_chunk=plan.t_steps + 1)),
+        ("ingest-halfset", "plan-ingest-sizing",
+         relayer(ingest_capacity=64)),
+    ]
+
+
+def selftest_contracts(out: Report) -> None:
+    from .contracts import audit_plan
+
+    for fixture, rule, plan in _broken_plans():
+        inner = Report()
+        audit_plan(plan, None, case=f"selftest-{fixture}", report=inner)
+        _expect(out, inner, rule, fixture)
+
+
+def selftest_hazards(out: Report) -> None:
+    from .hazards import (CapturedCall, check_banked_masks,
+                          check_blockspec_bounds, check_column_disjointness,
+                          check_padded_queue, check_patch_bounds)
+
+    # a hazard-colliding interlace scheme: period-2 columns put events 2
+    # apart in the same column, whose 3x3 footprints overlap
+    inner = Report()
+    check_column_disjointness(
+        column_of=lambda i, j: (i % 2) * 2 + (j % 2), report=inner)
+    _expect(out, inner, "hazard-column-disjoint", "collider-column-map")
+
+    # malformed bank-occupancy mask set (wrong bank count)
+    inner = Report()
+    check_banked_masks(np.ones((4, 3, 3), bool), where="selftest",
+                       report=inner)
+    _expect(out, inner, "hazard-banked-masks", "malformed-bank-masks")
+
+    # duplicate event inside one aligned group: same column, overlapping
+    # footprints — the parallel scatter would drop one tap
+    coords = np.array([[2, 2], [2, 2], [0, 0], [0, 1]], np.int32)
+    valid = np.array([1, 1, 0, 0], bool)
+    inner = Report()
+    check_padded_queue(coords, valid, 2, where="selftest-dup", report=inner)
+    _expect(out, inner, "hazard-segment-homogeneous", "duplicate-in-group")
+
+    # column-heterogeneous aligned group (segment_pad contract broken)
+    coords = np.array([[0, 0], [0, 1], [3, 3], [3, 3]], np.int32)
+    valid = np.array([1, 1, 1, 0], bool)
+    inner = Report()
+    check_padded_queue(coords, valid, 2, where="selftest-mixed", report=inner)
+    _expect(out, inner, "hazard-segment-homogeneous", "mixed-column-group")
+
+    # oversized BlockSpec: second block of 32 rows overruns a 48-row
+    # operand; and an alias pairing mismatched shapes
+    call = CapturedCall(
+        name="selftest", grid=(2,),
+        in_specs=[SimpleNamespace(block_shape=(32, 2),
+                                  index_map=lambda b: (b, 0))],
+        out_specs=[SimpleNamespace(block_shape=(16, 2),
+                                   index_map=lambda b: (b, 0))],
+        arg_shapes=[(48, 2)], arg_dtypes=["int32"],
+        out_shapes=[(64, 2)], out_dtypes=["int32"],
+        aliases={0: 0})
+    inner = Report()
+    check_blockspec_bounds([call], report=inner)
+    _expect(out, inner, "oob-blockspec-bounds", "oversized-blockspec")
+
+    # event patch overrunning the halo
+    inner = Report()
+    check_patch_bounds(10, 10, coord_hi=(10, 9), where="selftest",
+                       report=inner)
+    _expect(out, inner, "oob-event-patch", "oob-event-patch")
+
+
+def selftest_kernel_audit(out: Report) -> None:
+    from .kernel_audit import check_saturation
+
+    def wrapping_apply(vm_p, coords, valid, kernel):
+        """A deliberately broken datapath: accumulates in storage width,
+        so the max-fan-in drive wraps negative instead of saturating."""
+        vm = np.asarray(vm_p).copy()
+        k = np.asarray(kernel)
+        for (i, j), v in zip(np.asarray(coords), np.asarray(valid)):
+            if v:
+                with np.errstate(over="ignore"):
+                    vm[i:i + 3, j:j + 3, :] += k
+        return vm
+
+    inner = Report()
+    check_saturation(wrapping_apply, report=inner)
+    _expect(out, inner, "kernel-sat-overflow", "wrapping-adder")
+
+
+_LINT_FIXTURES = [
+    ("mutable-default-dataclass", "lint-mutable-default", "serve/cfgs.py",
+     "import dataclasses\n"
+     "@dataclasses.dataclass\n"
+     "class Cfg:\n"
+     "    buckets: list = []\n"),
+    ("mutable-default-arg", "lint-mutable-default", "core/util.py",
+     "class ServeConfig:\n"
+     "    pass\n"
+     "def make_engine(model, cfg=ServeConfig()):\n"
+     "    return (model, cfg)\n"),
+    ("tracer-cast", "lint-tracer-cast", "core/step.py",
+     "import jax\n"
+     "@jax.jit\n"
+     "def step(x):\n"
+     "    return int(x) + 1\n"),
+    ("host-call-in-jit", "lint-host-call-in-jit", "core/noise.py",
+     "import jax, numpy as np\n"
+     "@jax.jit\n"
+     "def noisy(x):\n"
+     "    return x + np.random.rand()\n"),
+    ("pallas-outside-kernels", "lint-pallas-call-outside-kernels",
+     "serve/fastpath.py",
+     "from jax.experimental import pallas as pl\n"
+     "def fast(x):\n"
+     "    return pl.pallas_call(lambda r, o: None, out_shape=x)(x)\n"),
+    ("missing-donate", "lint-missing-donate", "serve/csnn_engine.py",
+     "import jax\n"
+     "def step_bucket(state):\n"
+     "    return state\n"
+     "step_bucket_jit = jax.jit(step_bucket)\n"),
+]
+
+
+def selftest_lint(out: Report) -> None:
+    from .lint import lint_source
+
+    for fixture, rule, fname, src in _LINT_FIXTURES:
+        inner = Report()
+        lint_source(src, fname, report=inner)
+        _expect(out, inner, rule, fixture)
+    # the ignore mechanism must actually suppress
+    src = ("class C:\n"
+           "    pass\n"
+           "def f(c=C()):  # analysis: ignore[lint-mutable-default]\n"
+           "    return c\n")
+    inner = Report()
+    lint_source(src, "core/ok.py", report=inner)
+    if inner.ok:
+        out.proved("selftest-seeded")
+    else:
+        out.flag("selftest", "selftest-missed", "fixture:ignore-mechanism",
+                 "'# analysis: ignore[rule]' failed to suppress a finding")
+
+
+def run_selftest(report: Optional[Report] = None) -> Report:
+    rep = report if report is not None else Report()
+    selftest_contracts(rep)
+    selftest_hazards(rep)
+    selftest_kernel_audit(rep)
+    selftest_lint(rep)
+    return rep

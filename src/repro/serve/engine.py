@@ -25,11 +25,12 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, model, params, max_seq: int, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, model, params, max_seq: int,
+                 cfg: Optional[ServeConfig] = None):
         self.model = model
         self.params = params
         self.max_seq = max_seq
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else ServeConfig()
         self._decode = jax.jit(model.decode)
 
     def generate(self, prompts: jax.Array, rng: jax.Array, extra: Optional[dict] = None,

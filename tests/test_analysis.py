@@ -1,0 +1,216 @@
+"""Static-analysis subsystem (ISSUE 7): clean tree, seeded violations.
+
+Two-sided contract: ``python -m repro.analysis`` must (a) run clean on
+the shipped tree — every invariant proven over the geometry sweep — and
+(b) flag 100% of the seeded-violation fixtures, so the auditor itself
+cannot rot silently.
+"""
+import json
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis import Report
+from repro.analysis.contracts import audit_plan, run_contracts, sweep_cases
+from repro.analysis.hazards import (CapturedCall, capture_pallas_calls,
+                                    check_blockspec_bounds,
+                                    check_column_disjointness,
+                                    check_padded_queue, check_patch_bounds)
+from repro.analysis.lint import lint_source
+from repro.analysis.selftest import run_selftest
+
+
+# ------------------------------------------------------------------ report
+class TestReport:
+    def test_roundtrip_and_exitworthiness(self, tmp_path):
+        rep = Report()
+        rep.proved("some-rule", 3)
+        assert rep.ok
+        rep.flag("lint", "lint-mutable-default", "a.py:1", "boom")
+        assert not rep.ok
+        path = rep.write_json(tmp_path / "r.json")
+        data = json.loads(path.read_text())
+        assert data["ok"] is False and data["n_findings"] == 1
+        assert data["obligations"]["some-rule"] == 3
+        assert data["findings"][0]["rule"] == "lint-mutable-default"
+
+
+# --------------------------------------------------------------- contracts
+class TestContracts:
+    def test_sweep_is_clean_and_nontrivial(self):
+        rep = run_contracts()
+        assert rep.ok, rep.summary()
+        # every registered rule discharged at least one obligation
+        from repro.analysis.contracts import CONTRACTS
+        for rule in CONTRACTS:
+            assert rep.checked[rule] > 0, f"{rule} never ran"
+        assert len(sweep_cases()) >= 8
+
+    def test_corrupted_plan_is_flagged(self):
+        import dataclasses
+
+        from repro.core.csnn import CSNNConfig
+        from repro.core.plan import plan_network
+        plan = plan_network(CSNNConfig(), capacity=256)
+        lp0 = dataclasses.replace(plan.layers[0],
+                                  block_e=plan.layers[0].queue_depth - 1)
+        bad = dataclasses.replace(plan, layers=(lp0,) + plan.layers[1:])
+        rep = audit_plan(bad, None, case="corrupt")
+        assert any(f.rule == "plan-block-e-divides-depth"
+                   for f in rep.findings)
+
+
+# ----------------------------------------------------------------- hazards
+class TestHazards:
+    def test_interlace_theorem_holds(self):
+        rep = check_column_disjointness()
+        assert rep.ok and rep.checked["hazard-column-disjoint"] > 0
+
+    def test_colliding_column_scheme_is_flagged(self):
+        rep = check_column_disjointness(
+            column_of=lambda i, j: (i % 2) * 2 + (j % 2))
+        assert any(f.rule == "hazard-column-disjoint" for f in rep.findings)
+
+    def test_duplicate_event_in_group_is_flagged(self):
+        coords = np.array([[2, 2], [2, 2]], np.int32)
+        valid = np.ones(2, bool)
+        rep = check_padded_queue(coords, valid, 2)
+        assert any(f.rule == "hazard-segment-homogeneous"
+                   for f in rep.findings)
+
+    def test_capture_sees_every_kernel_entry_point(self):
+        calls = capture_pallas_calls()
+        names = {c.name for c in calls}
+        assert {"event_conv_pallas", "event_conv_pallas_batched",
+                "event_conv_pallas_interlaced",
+                "event_conv_pallas_interlaced_batched",
+                "threshold_pool_pallas"} <= names
+        rep = check_blockspec_bounds(calls)
+        assert rep.ok, rep.summary()
+
+    def test_oversized_blockspec_is_flagged(self):
+        call = CapturedCall(
+            name="seeded", grid=(2,),
+            in_specs=[SimpleNamespace(block_shape=(32, 2),
+                                      index_map=lambda b: (b, 0))],
+            out_specs=[None],
+            arg_shapes=[(48, 2)], arg_dtypes=["int32"],
+            out_shapes=[(48, 2)], out_dtypes=["int32"])
+        rep = check_blockspec_bounds([call])
+        assert any(f.rule == "oob-blockspec-bounds" for f in rep.findings)
+
+    def test_oob_event_patch_is_flagged(self):
+        assert check_patch_bounds(10, 10).ok
+        rep = check_patch_bounds(10, 10, coord_hi=(10, 9))
+        assert any(f.rule == "oob-event-patch" for f in rep.findings)
+
+
+# ------------------------------------------------------------ kernel audit
+class TestKernelAudit:
+    def test_saturating_datapath_proven_and_wrap_flagged(self):
+        from repro.analysis.kernel_audit import check_saturation
+        assert check_saturation().ok
+
+        def wrapping(vm_p, coords, valid, kernel):
+            vm = np.asarray(vm_p).copy()
+            k = np.asarray(kernel)
+            for (i, j), v in zip(np.asarray(coords), np.asarray(valid)):
+                if v:
+                    with np.errstate(over="ignore"):
+                        vm[i:i + 3, j:j + 3, :] += k
+            return vm
+
+        rep = check_saturation(wrapping)
+        assert any(f.rule == "kernel-sat-overflow" for f in rep.findings)
+
+    @pytest.mark.slow
+    def test_full_kernel_audit_clean(self):
+        from repro.analysis.kernel_audit import run_kernel_audit
+        rep = run_kernel_audit()
+        assert rep.ok, rep.summary()
+
+
+# -------------------------------------------------------------------- lint
+class TestLint:
+    def test_mutable_default_dataclass_flagged(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass\n"
+               "class C:\n"
+               "    xs: list = []\n")
+        rep = lint_source(src, "core/c.py")
+        assert any(f.rule == "lint-mutable-default" for f in rep.findings)
+
+    def test_field_factory_is_allowed(self):
+        src = ("import dataclasses\n"
+               "@dataclasses.dataclass\n"
+               "class C:\n"
+               "    xs: list = dataclasses.field(default_factory=list)\n")
+        assert lint_source(src, "core/c.py").ok
+
+    def test_tracer_cast_and_host_call_flagged(self):
+        src = ("import jax, numpy as np\n"
+               "@jax.jit\n"
+               "def f(x):\n"
+               "    y = int(x)\n"
+               "    return y + np.random.rand()\n")
+        rules = {f.rule for f in lint_source(src, "core/f.py").findings}
+        assert {"lint-tracer-cast", "lint-host-call-in-jit"} <= rules
+
+    def test_module_level_jit_marks_function(self):
+        src = ("import jax\n"
+               "def f(x):\n"
+               "    return int(x)\n"
+               "f = jax.jit(f)\n")
+        rep = lint_source(src, "core/f.py")
+        assert any(f.rule == "lint-tracer-cast" for f in rep.findings)
+
+    def test_pallas_call_location_rule(self):
+        src = ("from jax.experimental import pallas as pl\n"
+               "def f(x):\n"
+               "    return pl.pallas_call(lambda r, o: None, out_shape=x)(x)\n")
+        assert any(f.rule == "lint-pallas-call-outside-kernels"
+                   for f in lint_source(src, "serve/f.py").findings)
+        assert lint_source(src, "src/repro/kernels/ec/f.py").ok
+
+    def test_ignore_comment_suppresses(self):
+        src = ("class C:\n"
+               "    pass\n"
+               "# analysis: ignore[lint-mutable-default] — shared sentinel\n"
+               "def f(c=C()):\n"
+               "    return c\n")
+        assert lint_source(src, "core/f.py").ok
+
+    def test_shipped_tree_is_clean(self):
+        from repro.analysis.lint import run_lint
+        rep = run_lint()
+        assert rep.ok, rep.summary()
+        assert rep.checked["lint-missing-donate"] >= 2
+
+
+# ---------------------------------------------------------------- selftest
+class TestSelfTest:
+    def test_every_seeded_violation_is_caught(self):
+        rep = run_selftest()
+        assert rep.ok, rep.summary()
+        assert rep.checked["selftest-seeded"] >= 20
+
+
+# --------------------------------------------------------------------- CLI
+class TestCLI:
+    def test_lint_pass_exit_zero_and_json(self, tmp_path, monkeypatch):
+        from repro.analysis.__main__ import main
+        out = tmp_path / "ANALYSIS_report.json"
+        assert main(["--only", "lint", "--json", str(out)]) == 0
+        data = json.loads(out.read_text())
+        assert data["ok"] is True and data["findings"] == []
+
+    def test_exit_nonzero_on_finding(self, tmp_path):
+        from repro.analysis.__main__ import main
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(xs=[]):\n    return xs\n")
+        from repro.analysis.lint import run_lint
+        rep = run_lint([bad])
+        assert not rep.ok
+        # the CLI maps a non-ok report to a nonzero exit
+        assert main(["--only", "contracts"]) == 0  # clean pass baseline

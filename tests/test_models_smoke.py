@@ -1,6 +1,8 @@
 """Per-architecture smoke tests (reduced configs, CPU): forward/train step
 shape + NaN checks, plus decode-vs-full-forward consistency (cache
 correctness) and linear-attention chunked-vs-recurrent equivalence."""
+from typing import ClassVar
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -155,7 +157,7 @@ class TestLinearAttention:
 class TestParamCounts:
     """FULL configs must land near their nominal sizes (catches wiring bugs)."""
 
-    NOMINAL = {
+    NOMINAL: ClassVar[dict] = {
         "zamba2-1.2b": 1.2e9, "rwkv6-1.6b": 1.6e9, "stablelm-3b": 2.8e9,
         "granite-34b": 34e9, "phi3-medium-14b": 14e9, "gemma3-1b": 1.0e9,
         "qwen2-vl-7b": 7.6e9, "whisper-medium": 0.8e9,

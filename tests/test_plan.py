@@ -191,3 +191,84 @@ class TestShimMatchesPlannedPath:
         shim = snn_apply_batched(params, sp, PAPER, capacity=256,
                                  channel_block=8, collect_stats=False)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(shim))
+
+
+# ---------------------------------------------------- negative-path errors
+class TestPlanValidationErrors:
+    """Every ``raise ValueError`` branch in core/plan.py, asserted by
+    message — the analyzer's contracts assume these guards stay live."""
+
+    def test_snap_t_chunk_rejects_nonpositive(self):
+        from repro.core.plan import snap_t_chunk
+        with pytest.raises(ValueError, match="must be >= 1"):
+            snap_t_chunk(0, 1)
+        with pytest.raises(ValueError, match="must be >= 1"):
+            snap_t_chunk(5, 0)
+
+    def test_validate_rejects_conv_layer_count_mismatch(self):
+        plan = plan_network(SMOKE, capacity=16)
+        extra = CSNNConfig(input_hw=SMOKE.input_hw, t_steps=SMOKE.t_steps,
+                           layers=(ConvSpec(4), ConvSpec(4, pool=3),
+                                   ConvSpec(2), FCSpec(3)))
+        with pytest.raises(ValueError, match="conv layers"):
+            plan.validate(extra)
+
+    def test_validate_rejects_t_steps_mismatch(self):
+        plan = plan_network(SMOKE, capacity=16)
+        other = CSNNConfig(input_hw=SMOKE.input_hw, layers=SMOKE.layers,
+                           t_steps=SMOKE.t_steps + 1)
+        with pytest.raises(ValueError, match="t_steps"):
+            plan.validate(other)
+
+    def test_validate_rejects_ragged_t_chunk(self):
+        import dataclasses
+        plan = plan_network(SMOKE, capacity=16)
+        bad = dataclasses.replace(plan, t_chunk=SMOKE.t_steps + 1)
+        with pytest.raises(ValueError, match="must divide"):
+            bad.validate(SMOKE)
+
+    def test_validate_rejects_layer_geometry_mismatch(self):
+        plan = plan_network(SMOKE, capacity=16)
+        other = CSNNConfig(input_hw=(12, 12), layers=SMOKE.layers,
+                           t_steps=SMOKE.t_steps)
+        with pytest.raises(ValueError, match="does not match cfg layer"):
+            plan.validate(other)
+
+    def test_validate_rejects_out_of_range_ingest_depth(self):
+        import dataclasses
+        plan = plan_network(SMOKE, capacity=16, ingest=True,
+                            t_chunk=2)
+        lp0 = dataclasses.replace(plan.layers[0],
+                                  ingest_depth=SMOKE.t_steps + 1)
+        bad = dataclasses.replace(plan, layers=(lp0,) + plan.layers[1:])
+        with pytest.raises(ValueError, match="ingest_depth"):
+            bad.validate(SMOKE)
+
+    def test_plan_conv_layer_rejects_half_set_ingest(self):
+        with pytest.raises(ValueError, match="set .*together"):
+            plan_conv_layer(0, "conv0", (10, 10), 1, 4, capacity=16,
+                            ingest_capacity=64)
+        with pytest.raises(ValueError, match="set .*together"):
+            plan_conv_layer(0, "conv0", (10, 10), 1, 4, capacity=16,
+                            ingest_depth=2)
+
+    def test_plan_conv_layer_rejects_nonpositive_ingest(self):
+        with pytest.raises(ValueError, match="must be >= 1"):
+            plan_conv_layer(0, "conv0", (10, 10), 1, 4, capacity=16,
+                            ingest_capacity=0, ingest_depth=2)
+        with pytest.raises(ValueError, match="must be >= 1"):
+            plan_conv_layer(0, "conv0", (10, 10), 1, 4, capacity=16,
+                            ingest_capacity=64, ingest_depth=0)
+
+    def test_plan_network_rejects_wrong_per_layer_list_lengths(self):
+        with pytest.raises(ValueError, match="one capacity/channel_block"):
+            plan_network(SMOKE, capacity=[16])
+        with pytest.raises(ValueError, match="one capacity/channel_block"):
+            plan_network(SMOKE, capacity=16, channel_block=[1, 1, 1])
+        with pytest.raises(ValueError, match="one capacity/channel_block"):
+            plan_network(SMOKE, capacity=16, event_par=[1])
+
+    def test_plan_network_rejects_wrong_stats_length(self):
+        with pytest.raises(ValueError, match="one stats entry"):
+            plan_network(SMOKE, capacity=16,
+                         stats=[np.ones(4, np.int32)])

@@ -118,7 +118,7 @@ class TestRuntime:
 
     def test_straggler_detection(self):
         det = StragglerDetector(factor=1.5, patience=2)
-        for step in range(4):
+        for _step in range(4):
             for h in ["h0", "h1", "h2", "h3"]:
                 det.record(h, 1.0 if h != "h3" else 3.0)
             slow = det.stragglers()
