@@ -17,7 +17,10 @@ figure of merit is ``vs_binned`` — streaming admission must be cheaper
 than the sort at every rate (asserted).  A final pair of rows runs the
 whole chunk step (``snn_step_chunk``) from banks vs from dense frames:
 the downstream conv-unit work is identical, so the delta is the
-admission cost seen end to end.
+admission cost seen end to end.  A third ``chunk_step_tuned`` row lets
+the measured autotuner (``repro.tune``) pick the stream finalization —
+rank compaction vs a frame rebuild + sort — per geometry, so the small
+fields where the fused sort wins stop regressing the streamed row.
 
 ``--json`` (via benchmarks.run) writes the rows to BENCH_streaming.json
 — the machine-readable streaming-admission trajectory tracked across
@@ -157,6 +160,53 @@ def main(json_out: bool = False):
          f"batch={BATCH};T={cfg.t_steps}")
     emit("streaming/chunk_step_streamed", us_s,
          f"batch={BATCH};T={cfg.t_steps};vs_binned={us_b / us_s:.2f}x")
+
+    # ---- measured-tuned streamed step: the tuner times both stream
+    # finalizations head to head on this geometry (rank-compaction vs a
+    # scatter-to-frames + sort rebuild — at SMOKE field sizes the fused
+    # sort can win, which is exactly the chunk_step_streamed gap above)
+    # and pins the winner in the plan, alongside the per-layer kernel
+    # variants.  Bit-exact by construction: streamed and frame-binned
+    # admission under the tuned plan are asserted leaf-identical.
+    plan_tuned = plan_network(cfg, capacity=64, channel_block=8,
+                              batch_tile=BATCH, ingest=True,
+                              tune="measured",
+                              cache_path="results/plan_cache.json")
+    step_tuned = jax.jit(lambda st, sp: snn_step_chunk(
+        params, st, sp, cfg, plan_tuned))
+    state0_t = init_state(params, cfg, plan_tuned, BATCH)
+    out_ts = step_tuned(state0_t, stream)
+    out_tb = step_tuned(state0_t, frames)
+    for ls, lb in zip(jax.tree_util.tree_leaves(out_ts),
+                      jax.tree_util.tree_leaves(out_tb)):
+        assert np.array_equal(np.asarray(ls), np.asarray(lb)), \
+            "tuned streamed chunk step diverged from the frame-binned step"
+
+    def exec_sig(p):
+        return (p.chunk_steps, tuple(
+            (lp.capacity, lp.channel_block, lp.event_par, lp.block_e,
+             lp.resolve_variant("jax"), lp.stream_finalize)
+            for lp in p.layers))
+
+    if exec_sig(plan_tuned) == exec_sig(plan):
+        us_t, vs_streamed = us_s, 1.0
+    else:
+        us_t = timeit(step_tuned, state0_t, stream) / BATCH
+        us_s_ref = us_s
+        vs_streamed = us_s_ref / us_t
+        for _ in range(2):  # re-measure interleaved before calling a loss
+            if vs_streamed >= 1.0:
+                break
+            us_s_ref = min(us_s_ref, timeit(step_stream, state0, stream)
+                           / BATCH)
+            us_t = min(us_t, timeit(step_tuned, state0_t, stream) / BATCH)
+            vs_streamed = us_s_ref / us_t
+    assert vs_streamed >= 1.0, (
+        f"tuned streamed step must not lose to the default streamed step, "
+        f"got {vs_streamed:.2f}x")
+    emit("streaming/chunk_step_tuned", us_t,
+         f"finalize={plan_tuned.layers[0].stream_finalize or 'ranks'};"
+         f"vs_streamed={vs_streamed:.2f}x;vs_binned={us_b / us_t:.2f}x")
 
     if json_out:
         write_bench_json("streaming")

@@ -36,6 +36,13 @@ plan that skips it) is caught before any device work:
   kernel taps must fit the per-core budget.  This is the invariant that
   keeps ``autotune_block_e``/``autotune_event_par`` honest when the
   real-TPU lowering lands (ROADMAP).
+* ``plan-variant-valid`` — a pinned kernel variant names a real variant,
+  ``interlaced-pallas`` pins require the event-parallel width the kernel
+  walks in (> 1), and ``stream_finalize`` is a known finalization set
+  only where streamed queues exist (the ingesting input layer).  This is
+  the contract that makes *cache-loaded* plans trustworthy: the measured
+  autotuner's winners re-enter through ``plan_network`` and must land on
+  schedules the scheduler can actually dispatch.
 * ``plan-validate-agrees`` — ``NetworkPlan.validate(cfg)`` accepts the
   plan (cross-checks the sweep's own construction).
 
@@ -52,7 +59,8 @@ from typing import Callable, Optional
 
 from repro.core.aeq import interlaced_capacity
 from repro.core.csnn import CSNNConfig, ConvSpec, FCSpec
-from repro.core.plan import LayerPlan, NetworkPlan, pad_capacity, plan_network
+from repro.core.plan import (KERNEL_VARIANTS, STREAM_FINALIZE, LayerPlan,
+                             NetworkPlan, pad_capacity, plan_network)
 from repro.kernels.event_conv.ops import EVENT_BYTES, VMEM_BUDGET
 
 from .report import Report
@@ -283,6 +291,38 @@ def _check_validate(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
     return 1
 
 
+@contract("plan-variant-valid",
+          "pinned kernel variants and stream finalization are dispatchable")
+def _check_variant(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
+    n = 0
+    for i, lp in enumerate(plan.layers):
+        n += 1
+        if lp.variant is not None and lp.variant not in KERNEL_VARIANTS:
+            rep.flag("contracts", "plan-variant-valid",
+                     _layer_where(case, lp),
+                     f"variant={lp.variant!r} is not one of "
+                     f"{KERNEL_VARIANTS}")
+        if lp.variant == "interlaced-pallas" and lp.event_par <= 1:
+            rep.flag("contracts", "plan-variant-valid",
+                     _layer_where(case, lp),
+                     f"variant='interlaced-pallas' with event_par="
+                     f"{lp.event_par}: the interlaced kernel walks "
+                     f"event_par-aligned groups and needs a width > 1")
+        if lp.stream_finalize is not None:
+            if lp.stream_finalize not in STREAM_FINALIZE:
+                rep.flag("contracts", "plan-variant-valid",
+                         _layer_where(case, lp),
+                         f"stream_finalize={lp.stream_finalize!r} is not "
+                         f"one of {STREAM_FINALIZE}")
+            if i != 0:
+                rep.flag("contracts", "plan-variant-valid",
+                         _layer_where(case, lp),
+                         "stream_finalize set on a non-input layer: only "
+                         "the ingesting input layer finalizes streamed "
+                         "queues")
+    return n
+
+
 def audit_plan(plan: NetworkPlan, cfg: Optional[CSNNConfig] = None, *,
                case: str = "plan", report: Optional[Report] = None) -> Report:
     """Run every registered contract over one (plan, cfg) pair."""
@@ -330,6 +370,12 @@ def sweep_cases() -> list[tuple[str, CSNNConfig, dict]]:
         ("dvs-ingest-explicit", dvs,
          dict(capacity=64, t_chunk=2, ingest=True,
               ingest_capacity=pad_capacity(64 * 2 * 2))),
+        ("paper-pinned-variants", paper,
+         dict(capacity=256, channel_block=8, event_par=[1, 4, 4],
+              variant=["sequential", "banked-jax", "interlaced-pallas"])),
+        ("dvs-ingest-sort-finalize", dvs,
+         dict(capacity=128, event_par=None, t_chunk=4, ingest=True,
+              variant="banked-jax", stream_finalize="sort")),
     ]
 
 

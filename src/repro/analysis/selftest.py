@@ -78,6 +78,15 @@ def _broken_plans():
          dataclasses.replace(plan, t_chunk=plan.t_steps + 1)),
         ("ingest-halfset", "plan-ingest-sizing",
          relayer(ingest_capacity=64)),
+        ("variant-bogus", "plan-variant-valid",
+         relayer(variant="fused-marvel")),
+        ("variant-interlaced-seq-width", "plan-variant-valid",
+         relayer(variant="interlaced-pallas", event_par=1)),
+        ("finalize-on-inner-layer", "plan-variant-valid",
+         dataclasses.replace(
+             plan, layers=plan.layers[:1] + (dataclasses.replace(
+                 plan.layers[1], stream_finalize="sort"),)
+             + plan.layers[2:])),
     ]
 
 

@@ -58,6 +58,24 @@ from .aeq import calibrate_capacity, interlaced_capacity
 
 _VM_DTYPES = {None: "float32", 8: "int8", 16: "int16"}
 
+# Kernel variants a LayerPlan can pin (None = resolve from event_par +
+# backend, the legacy rule).  "sequential" walks the queue one event at a
+# time (jax loop, or the sequential Pallas kernel on the pallas backend);
+# "banked-jax" holds the MemPot stack in the 9 interlace banks and applies
+# whole hazard-free columns per vectorized select; "interlaced-pallas"
+# feeds segment-padded queues to event_conv_pallas_interlaced*.  All three
+# are bit-exact — the variant is a pure perf knob, which is what lets the
+# measured autotuner (repro.tune) pick per layer.
+KERNEL_VARIANTS = ("sequential", "banked-jax", "interlaced-pallas")
+
+# Streaming-ingestion finalization variants (input layer only): "ranks"
+# is the sort-free exclusive-cumulative-rank path (aeq.stream_queues);
+# "sort" scatters the banks to dense frames and re-compacts with the
+# fused sort (build_aeq_batched) — bit-exact by the streaming-equivalence
+# theorem, and measurably faster at small fmaps where the O(HW log HW)
+# sort beats the rank computation's constant factor (BENCH_streaming).
+STREAM_FINALIZE = ("ranks", "sort")
+
 
 def pad_capacity(capacity: int) -> int:
     """Queue depth padded to a multiple of 64 so the Pallas event-block
@@ -118,6 +136,27 @@ class LayerPlan:
                                   # input layer only, None = not ingesting)
     ingest_depth: Optional[int] = None     # time bins buffered per stream
                                   # admission window (None = not ingesting)
+    variant: Optional[str] = None  # pinned kernel variant (KERNEL_VARIANTS);
+                                  # None = resolve from event_par + backend
+    stream_finalize: Optional[str] = None  # streamed-queue finalization
+                                  # ("ranks"/"sort"; input layer only,
+                                  # None = "ranks")
+
+    def resolve_variant(self, backend: str = "jax") -> str:
+        """Effective kernel variant for this layer under ``backend``.
+
+        A pinned :attr:`variant` wins (the measured autotuner's choice);
+        otherwise the legacy rule applies: ``event_par > 1`` selects the
+        interlaced machinery (Pallas kernels on the pallas backend, the
+        banked-select jax path elsewhere), ``event_par == 1`` the
+        sequential conv unit.
+        """
+        if self.variant is not None:
+            return self.variant
+        if self.event_par > 1:
+            return ("interlaced-pallas" if backend == "pallas"
+                    else "banked-jax")
+        return "sequential"
 
     @property
     def vm_dtype(self):
@@ -143,10 +182,14 @@ class LayerPlan:
         par = f", par={self.event_par}" if self.event_par > 1 else ""
         ing = (f", ingest={self.ingest_capacity}x{self.ingest_depth}"
                if self.ingest_capacity is not None else "")
+        var = f", variant={self.variant}" if self.variant is not None else ""
+        fin = (f", finalize={self.stream_finalize}"
+               if self.stream_finalize is not None else "")
         return (f"LayerPlan({self.name}: {h}x{w}x{self.c_in} -> "
                 f"{oh}x{ow}x{self.c_out}{pool}, cap={self.capacity}, "
                 f"cb={self.channel_block}, block_e={self.block_e}, "
-                f"vm={self.vm_tile}, {_VM_DTYPES[self.sat_bits]}{par}{ing})")
+                f"vm={self.vm_tile}, "
+                f"{_VM_DTYPES[self.sat_bits]}{par}{var}{fin}{ing})")
 
 
 @dataclass(frozen=True)
@@ -236,6 +279,8 @@ def plan_conv_layer(
     event_par: Optional[int] = 1,
     ingest_capacity: Optional[int] = None,
     ingest_depth: Optional[int] = None,
+    variant: Optional[str] = None,
+    stream_finalize: Optional[str] = None,
 ) -> LayerPlan:
     """Derive one conv layer's plan from its geometry.
 
@@ -285,12 +330,25 @@ def plan_conv_layer(
                                         or ingest_depth < 1):
         raise ValueError(f"ingest_capacity={ingest_capacity} and "
                          f"ingest_depth={ingest_depth} must be >= 1")
+    if variant is not None and variant not in KERNEL_VARIANTS:
+        raise ValueError(f"variant={variant!r} must be one of "
+                         f"{KERNEL_VARIANTS} (or None to resolve from "
+                         f"event_par + backend)")
+    if variant == "interlaced-pallas" and ep <= 1:
+        raise ValueError(
+            f"variant='interlaced-pallas' requires event_par > 1 (got "
+            f"{ep}): the interlaced kernel walks event_par-aligned groups "
+            f"of the segment-padded queue")
+    if stream_finalize is not None and stream_finalize not in STREAM_FINALIZE:
+        raise ValueError(f"stream_finalize={stream_finalize!r} must be one "
+                         f"of {STREAM_FINALIZE} (or None = 'ranks')")
     return LayerPlan(index=index, name=name, in_hw=in_hw, out_hw=out_hw,
                      c_in=c_in, c_out=c_out, pool=pool, capacity=cap,
                      channel_block=cb, block_e=be, vm_tile=vm_tile,
                      sat_bits=sat_bits, event_par=ep,
                      ingest_capacity=ingest_capacity,
-                     ingest_depth=ingest_depth)
+                     ingest_depth=ingest_depth, variant=variant,
+                     stream_finalize=stream_finalize)
 
 
 def plan_network(
@@ -298,7 +356,7 @@ def plan_network(
     *,
     capacity: int | Sequence[int] = 256,
     channel_block: int | Sequence[int] = 1,
-    block_e: Optional[int] = None,
+    block_e: Optional[int] | Sequence[Optional[int]] = None,
     sat_bits: Optional[int] = None,
     stats: Optional[Sequence] = None,
     percentile: float = 99.9,
@@ -311,6 +369,11 @@ def plan_network(
     event_par: Optional[int] | Sequence[Optional[int]] = 1,
     ingest: bool = False,
     ingest_capacity: Optional[int] = None,
+    variant: Optional[str] | Sequence[Optional[str]] = None,
+    stream_finalize: Optional[str] = None,
+    tune: str = "analytic",
+    tune_config=None,
+    cache_path=None,
 ) -> NetworkPlan:
     """Derive a :class:`NetworkPlan` from a ``CSNNConfig``.
 
@@ -339,7 +402,42 @@ def plan_network(
     (the hardware analogue: the ingress FIFO in front of the AEQ
     builders).  Raw events beyond the buffer are refused at admission
     (host-side backpressure), never silently dropped mid-queue.
+
+    ``variant`` pins the kernel variant per layer (one of
+    :data:`KERNEL_VARIANTS`, single value or one per conv layer; ``None``
+    keeps the legacy event_par/backend resolution) and
+    ``stream_finalize`` the streamed-queue finalization of the ingesting
+    input layer (:data:`STREAM_FINALIZE`) — both are pure perf knobs,
+    bit-exact across every setting.
+
+    ``tune`` selects how the perf knobs are derived: ``"analytic"`` (the
+    default) keeps the closed-form VMEM model above; ``"measured"``
+    micro-benchmarks candidate (block_e, event_par, t_chunk, variant)
+    tuples per layer and picks measured winners (``repro.tune``),
+    persisting them in the on-disk plan cache; ``"cached"`` loads a
+    previously measured plan from the cache (keyed by layer geometry,
+    dtype, backend, device kind and jax version; ``REPRO_PLAN_CACHE``
+    overrides the location, ``cache_path`` wins over both) and only falls
+    back to measuring on a miss.  ``tune_config`` is a
+    :class:`repro.tune.TuneConfig`.  Tuning never changes results — every
+    candidate is bit-exact — it only changes which bit-exact schedule
+    runs.
     """
+    if tune not in ("analytic", "measured", "cached"):
+        raise ValueError(f"tune={tune!r} must be 'analytic', 'measured' or "
+                         f"'cached'")
+    if tune != "analytic":
+        from repro.tune import tune_network
+        base = dict(capacity=capacity, channel_block=channel_block,
+                    block_e=block_e, sat_bits=sat_bits, stats=stats,
+                    percentile=percentile, margin=margin,
+                    batch_tile=batch_tile, batch_axis=batch_axis,
+                    per_layer=per_layer, vmem_budget=vmem_budget,
+                    t_chunk=t_chunk, event_par=event_par, ingest=ingest,
+                    ingest_capacity=ingest_capacity, variant=variant,
+                    stream_finalize=stream_finalize)
+        return tune_network(cfg, mode=tune, base=base, config=tune_config,
+                            cache_path=cache_path)
     from .csnn import ConvSpec, conv_out_hw
     conv_specs = [(i, s) for i, s in enumerate(cfg.layers)
                   if isinstance(s, ConvSpec)]
@@ -349,10 +447,16 @@ def plan_network(
            else [channel_block] * n)
     eps = (list(event_par) if isinstance(event_par, (list, tuple))
            else [event_par] * n)
-    if len(caps) != n or len(cbs) != n or len(eps) != n:
-        raise ValueError(f"need one capacity/channel_block/event_par per "
-                         f"conv layer ({n}), got "
-                         f"{len(caps)}/{len(cbs)}/{len(eps)}")
+    bes = (list(block_e) if isinstance(block_e, (list, tuple))
+           else [block_e] * n)
+    variants = (list(variant) if isinstance(variant, (list, tuple))
+                else [variant] * n)
+    if (len(caps) != n or len(cbs) != n or len(eps) != n or len(bes) != n
+            or len(variants) != n):
+        raise ValueError(f"need one capacity/channel_block/event_par/"
+                         f"block_e/variant per conv layer ({n}), got "
+                         f"{len(caps)}/{len(cbs)}/{len(eps)}/{len(bes)}/"
+                         f"{len(variants)}")
     if stats is not None:
         if len(stats) != n:
             raise ValueError(f"need one stats entry per conv layer ({n}), "
@@ -374,10 +478,12 @@ def plan_network(
                        else pad_capacity(auto))
         plans.append(plan_conv_layer(
             idx, f"conv{idx}", hw, c_in, spec.channels, capacity=caps[ci],
-            pool=spec.pool, channel_block=cbs[ci], block_e=block_e,
+            pool=spec.pool, channel_block=cbs[ci], block_e=bes[ci],
             sat_bits=sat_bits, per_layer=per_layer, batch_tile=batch_tile,
             vmem_budget=vmem_budget, event_par=eps[ci],
-            ingest_capacity=ing_cap, ingest_depth=ing_depth))
+            ingest_capacity=ing_cap, ingest_depth=ing_depth,
+            variant=variants[ci],
+            stream_finalize=stream_finalize if ci == 0 else None))
         hw, c_in = conv_out_hw(hw, spec), spec.channels
     return NetworkPlan(layers=tuple(plans), t_steps=cfg.t_steps,
                        batch_tile=batch_tile, batch_axis=batch_axis,

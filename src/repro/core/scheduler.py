@@ -31,21 +31,26 @@ derived once per network by ``plan_network``.  The legacy kwargs
 signatures remain as deprecation shims that derive a single-layer plan on
 the fly, bit-exact vs the planned path (tests/test_plan.py).
 
-Kernel variants (selected per layer by ``LayerPlan.event_par``):
+Kernel variants (``LayerPlan.resolve_variant``: an explicitly pinned
+``LayerPlan.variant`` — e.g. the measured autotuner's winner — takes
+precedence; otherwise ``event_par`` + backend decide):
 
-* ``event_par == 1`` — the sequential conv unit: walk each (t, c_in)
+* ``"sequential"`` — the sequential conv unit: walk each (t, c_in)
   queue one event at a time (``apply_events*`` on the jax backend,
   ``event_conv_pallas*`` on the pallas backend).
-* ``event_par > 1`` — the memory-interlaced event-parallel unit.  On the
-  jax backend the MemPot stack is held **banked** (9 RAM banks, paper
+* ``"banked-jax"`` — the memory-interlaced event-parallel unit on the
+  jax backend: the MemPot stack is held **banked** (9 RAM banks, paper
   Fig. 6) for the whole time step and each interlace column's events are
   applied as one vectorized masked select (``aeq.build_bank_masks`` +
-  ``event_conv.apply_banked_columns``; no sort, no per-event loop).  On
-  the pallas backend the queues are segment-padded (``aeq.segment_pad``)
-  and fed to ``event_conv_pallas_interlaced*``, which applies
-  ``event_par`` hazard-free events per gather->add->scatter step.  Both
-  variants are bit-exact vs the sequential schedule
-  (tests/test_interlaced.py).
+  ``event_conv.apply_banked_columns``; no sort, no per-event loop).
+* ``"interlaced-pallas"`` — the queues are segment-padded
+  (``aeq.segment_pad``) and fed to ``event_conv_pallas_interlaced*``,
+  which applies ``event_par`` hazard-free events per
+  gather->add->scatter step.
+
+All variants are bit-exact vs the sequential schedule
+(tests/test_interlaced.py); the choice is a pure perf knob, which is
+what lets ``repro.tune`` pick the measured winner per layer.
 """
 from __future__ import annotations
 
@@ -151,7 +156,8 @@ def run_conv_layer_planned(
     c_out = kernels.shape[-1]
     channel_block = lp.channel_block
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
-    banked = lp.event_par > 1 and backend != "pallas"
+    variant = lp.resolve_variant(backend)
+    banked = variant == "banked-jax"
     fmaps = spikes_in.transpose(0, 3, 1, 2)  # (T, C_in, H, W)
     if banked:
         # interlaced event-parallel path: sort-free bank-mask compaction,
@@ -184,17 +190,20 @@ def run_conv_layer_planned(
                 return unbank_vm(vb, h + 2, w + 2)
 
             def per_cin(ci, vm):
+                if variant == "interlaced-pallas":
+                    from repro.kernels.event_conv.kernel import \
+                        event_conv_pallas_interlaced
+                    return event_conv_pallas_interlaced(
+                        vm, queues.coords[t, ci], queues.valid[t, ci],
+                        kernel_block[:, :, ci, :].astype(vm.dtype),
+                        block_e=lp.block_e, event_par=lp.event_par)
                 if backend == "pallas":
-                    from repro.kernels.event_conv.kernel import (
-                        event_conv_pallas, event_conv_pallas_interlaced)
-                    k_ci = kernel_block[:, :, ci, :].astype(vm.dtype)
-                    if lp.event_par > 1:
-                        return event_conv_pallas_interlaced(
-                            vm, queues.coords[t, ci], queues.valid[t, ci],
-                            k_ci, block_e=lp.block_e, event_par=lp.event_par)
+                    from repro.kernels.event_conv.kernel import \
+                        event_conv_pallas
                     return event_conv_pallas(
                         vm, queues.coords[t, ci], queues.valid[t, ci],
-                        k_ci, block_e=lp.block_e)
+                        kernel_block[:, :, ci, :].astype(vm.dtype),
+                        block_e=lp.block_e)
                 q = EventQueue(queues.coords[t, ci], queues.valid[t, ci],
                                queues.count[t, ci])
                 return apply_events(vm, q, kernel_block[:, :, ci, :])
@@ -384,7 +393,8 @@ def run_conv_layer_batched_chunk(
     and resets individual rows as slots retire and admit.
     """
     b_sz, t_steps, h, w, c_in = spikes_in.shape
-    banked = lp.event_par > 1 and backend != "pallas"
+    variant = lp.resolve_variant(backend)
+    banked = variant == "banked-jax"
     # (B, t, H, W, C_in) -> per-(t, b, c_in) event sets, built in one pass
     fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (t, B, C_in, H, W)
     if banked:
@@ -411,7 +421,7 @@ def run_conv_layer_batched_chunk(
                               axis=(1, 2, 3, 4))
     return _run_chunk_from_events(
         queues, smasks, counts, sparsity, (b_sz, t_steps, h, w, c_in),
-        kernels, bias, v_t, lp, carry, banked=banked, backend=backend,
+        kernels, bias, v_t, lp, carry, variant=variant, backend=backend,
         vm_dtype=vm_dtype)
 
 
@@ -437,14 +447,20 @@ def run_conv_layer_batched_chunk_streamed(
     sequential/pallas variants; ``segment_pad`` applies on top exactly as
     in the binned path), and the banked event-parallel variant compacts
     the streamed occupancy with the same ``build_bank_masks`` call the
-    binned path uses.  Bit-exact vs binning the same events into frames
-    and calling the dense-chunk runner (tests/test_streaming.py).
+    binned path uses.  ``lp.stream_finalize == "sort"`` swaps the
+    rank-based finalization for the binned compaction over the dense bank
+    view (``build_aeq_batched``) — bit-exact by the streaming-equivalence
+    theorem, and the variant the measured autotuner picks at small fmaps
+    where the fused sort beats the rank cumsums' constant factor.
+    Bit-exact vs binning the same events into frames and calling the
+    dense-chunk runner either way (tests/test_streaming.py).
     """
     h, w = lp.in_hw
     b_sz, t_steps, c_in = stream.banks.shape[:3]
-    banked = lp.event_par > 1 and backend != "pallas"
+    variant = lp.resolve_variant(backend)
+    banked = variant == "banked-jax"
     # dense view only where the binned path itself is dense (sparsity
-    # stat; bank-mask compaction input) — a reshape/transpose, no sort
+    # stat; bank-mask/sort compaction input) — a reshape/transpose, no sort
     frames = stream_frames(stream, (h, w))         # (B, t, C_in, H, W)
     if banked:
         events = build_bank_masks(frames.transpose(1, 0, 2, 3, 4),
@@ -453,19 +469,25 @@ def run_conv_layer_batched_chunk_streamed(
         smasks = jnp.swapaxes(shifted_bank_masks(events.masks), 1, 2)
         counts = events.count
     else:
-        queues = stream_queues(stream, lp.capacity, (h, w))  # lead (B, t, C)
-        # (B, t, C_in, ...) -> (t, B, C_in, ...): the layout the
-        # per-(t, c_in) kernel launches below index
-        queues = BatchedEventQueue(*(None if x is None
-                                     else jnp.swapaxes(x, 0, 1)
-                                     for x in queues))
+        if lp.stream_finalize == "sort":
+            # binned finalization: fused sort over the dense bank view,
+            # already in the (t, B, C_in) lead layout the launches index
+            queues = build_aeq_batched(frames.transpose(1, 0, 2, 3, 4),
+                                       lp.capacity)
+        else:
+            queues = stream_queues(stream, lp.capacity, (h, w))
+            # (B, t, C_in, ...) -> (t, B, C_in, ...): the layout the
+            # per-(t, c_in) kernel launches below index
+            queues = BatchedEventQueue(*(None if x is None
+                                         else jnp.swapaxes(x, 0, 1)
+                                         for x in queues))
         if lp.event_par > 1:
             queues = segment_pad(queues, lp.event_par)
         smasks, counts = None, queues.count
     sparsity = 1.0 - jnp.mean(frames.astype(jnp.float32), axis=(1, 2, 3, 4))
     return _run_chunk_from_events(
         queues, smasks, counts, sparsity, (b_sz, t_steps, h, w, c_in),
-        kernels, bias, v_t, lp, carry, banked=banked, backend=backend,
+        kernels, bias, v_t, lp, carry, variant=variant, backend=backend,
         vm_dtype=vm_dtype)
 
 
@@ -481,7 +503,7 @@ def _run_chunk_from_events(
     lp: LayerPlan,
     carry: ConvCarry,
     *,
-    banked: bool,
+    variant: str,
     backend: str,
     vm_dtype=None,
 ) -> tuple[jax.Array, ConvCarry, LayerStats]:
@@ -490,6 +512,7 @@ def _run_chunk_from_events(
     the banked variant) — the part of the chunk runner that is identical
     whether the events came from dense frames or from the streaming
     ingestion path."""
+    banked = variant == "banked-jax"
     b_sz, t_steps, h, w, c_in = shape
     c_out = kernels.shape[-1]
     channel_block = lp.channel_block
@@ -516,14 +539,15 @@ def _run_chunk_from_events(
                 coords = queues.coords[t, :, ci]   # (B, cap, 2)
                 valid = queues.valid[t, :, ci]     # (B, cap)
                 k_ci = kernel_block[:, :, ci, :]
+                if variant == "interlaced-pallas":
+                    from repro.kernels.event_conv.kernel import (
+                        event_conv_pallas_interlaced_batched)
+                    return event_conv_pallas_interlaced_batched(
+                        vm, coords, valid, k_ci.astype(vm.dtype),
+                        block_e=block_e, event_par=lp.event_par)
                 if backend == "pallas":
                     from repro.kernels.event_conv.kernel import (
-                        event_conv_pallas_batched,
-                        event_conv_pallas_interlaced_batched)
-                    if lp.event_par > 1:
-                        return event_conv_pallas_interlaced_batched(
-                            vm, coords, valid, k_ci.astype(vm.dtype),
-                            block_e=block_e, event_par=lp.event_par)
+                        event_conv_pallas_batched)
                     return event_conv_pallas_batched(
                         vm, coords, valid, k_ci.astype(vm.dtype),
                         block_e=block_e)

@@ -106,6 +106,33 @@ def autotune_event_par(capacity: int, vm_tile: tuple[int, ...] = (), *,
     return par
 
 
+def candidate_block_es(capacity: int, vm_tile: tuple[int, ...] = (), *,
+                       vm_bytes: int = 4,
+                       vmem_budget: int = VMEM_BUDGET) -> list[int]:
+    """Analytic-prior candidate set for the measured autotuner.
+
+    The analytic pick (``autotune_block_e``) plus its neighbours one
+    octave up and down, all snapped to divisors of ``capacity`` and kept
+    under the same VMEM ceiling — the measured tuner searches this small
+    set instead of every divisor, so tuning cost stays bounded while the
+    prior's mis-tunes (the granule heuristic is a TPU model; CPU interpret
+    backends often prefer bigger blocks) are still recoverable.  Sorted,
+    deduplicated, always non-empty (contains the analytic pick).
+    """
+    prior = autotune_block_e(capacity, vm_tile, vm_bytes=vm_bytes,
+                             vmem_budget=vmem_budget)
+    if capacity <= 0:
+        return [prior]
+    resident = 2 * math.prod(vm_tile) * vm_bytes if vm_tile else 0
+    spare = max(vmem_budget - resident, 2 * EVENT_BYTES)
+    vmem_cap = max(spare // (2 * EVENT_BYTES), 1)
+    cands = {prior}
+    for req in (prior // 2, prior * 2, prior * 4, capacity):
+        if req >= 1:
+            cands.add(snap_divisor(capacity, min(req, vmem_cap)))
+    return sorted(cands)
+
+
 def validate_event_shapes(coords: jax.Array, valid: jax.Array,
                           vm_padded: jax.Array | None = None, *,
                           block_e: int | None = None,

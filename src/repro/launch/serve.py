@@ -69,10 +69,17 @@ def serve_csnn(args) -> int:
     batch_tile = args.batch_tile
     event_par = (None if args.event_par < 0
                  else args.event_par if args.event_par else 1)
+    # tuning happens here, before any request is admitted — measured
+    # micro-benchmarks (--tune measured) or a plan-cache load (--tune
+    # cached) are warmup work, never hot-path work
+    t0 = time.perf_counter()
     plan = plan_network(cfg, capacity=args.capacity,
                         channel_block=args.channel_block,
                         batch_tile=batch_tile, event_par=event_par,
-                        ingest=args.stream)
+                        ingest=args.stream, tune=args.tune)
+    if args.tune != "analytic":
+        print(f"tune: mode={args.tune} plan derived in "
+              f"{time.perf_counter() - t0:.2f} s")
     if args.verbose:
         print(plan)
 
@@ -165,6 +172,13 @@ def main(argv=None):
                     help="interlaced event-parallel width for csnn plans: "
                          "-1 autotunes per layer (default), 0/1 keeps the "
                          "sequential conv unit, >1 pins the width")
+    ap.add_argument("--tune", default="analytic",
+                    choices=("analytic", "measured", "cached"),
+                    help="plan derivation: closed-form VMEM model "
+                         "(analytic), measured micro-benchmark winners "
+                         "persisted to the plan cache (measured), or a "
+                         "cache load falling back to measuring on a miss "
+                         "(cached; REPRO_PLAN_CACHE overrides the path)")
     ap.add_argument("--engine", action="store_true",
                     help="route requests through the async micro-batching "
                          "CSNNEngine (csnn-paper only)")

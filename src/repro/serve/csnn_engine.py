@@ -121,14 +121,17 @@ class CSNNEngine:
     def __init__(self, params: dict, cfg: CSNNConfig,
                  plan: Optional[NetworkPlan] = None,
                  serve_cfg: Optional[CSNNServeConfig] = None, *,
-                 backend: str = "jax"):
+                 backend: str = "jax", tune: str = "analytic"):
         # a fresh default per engine: a shared CSNNServeConfig() default
         # instance would alias mutable serving knobs across engines
         if serve_cfg is None:
             serve_cfg = CSNNServeConfig()
         self.cfg = cfg
+        # tuning (measured micro-benchmarks or a plan-cache load) happens
+        # HERE, at engine construction — i.e. at warmup, never on the
+        # request hot path; an explicit plan always wins over `tune`
         self.plan = plan if plan is not None else plan_network(
-            cfg, batch_tile=serve_cfg.max_batch)
+            cfg, batch_tile=serve_cfg.max_batch, tune=tune)
         self.serve_cfg = serve_cfg
         if serve_cfg.stream and not serve_cfg.continuous:
             raise ValueError(

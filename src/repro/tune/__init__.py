@@ -1,0 +1,37 @@
+"""Measured plan autotuner with a persistent on-disk plan cache.
+
+The software analogue of the paper's self-timed hardware sizing: instead
+of trusting the analytic VMEM model (which demonstrably mis-tunes
+off-TPU), candidate ``(block_e, event_par, t_chunk, kernel-variant)``
+tuples are micro-benchmarked on seeded synthetic queues at calibrated
+occupancy and the *measured* winners drive the plan.  Winners persist in
+a versioned JSON cache keyed by (layer geometry + planning knobs, vm
+dtype, backend, device kind, jax version) — ``REPRO_PLAN_CACHE``
+overrides the location — and cache-loaded plans are re-audited
+(fixed-point rebuild + ``NetworkPlan.validate`` + ``repro.analysis``
+contracts) before they are trusted.
+
+Use through ``plan_network(cfg, tune="measured")`` (always measure, warm
+the cache) or ``tune="cached"`` (load winners; measure only on a miss);
+``CSNNEngine(tune=...)`` and ``launch/serve.py --tune`` thread the same
+knob through serving, where tuning runs at warmup and never on the hot
+path.  Tuning is bit-exact by construction: every candidate is a valid
+schedule of the same computation, so only wall-clock changes.
+"""
+from .autotune import TuneConfig, plan_from_winners, tune_network
+from .cache import (CACHE_VERSION, PlanCache, cache_key, default_cache_path,
+                    env_descriptor, geometry_descriptor)
+from .measure import measurement_runs
+
+__all__ = [
+    "CACHE_VERSION",
+    "PlanCache",
+    "TuneConfig",
+    "cache_key",
+    "default_cache_path",
+    "env_descriptor",
+    "geometry_descriptor",
+    "measurement_runs",
+    "plan_from_winners",
+    "tune_network",
+]

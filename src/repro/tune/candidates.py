@@ -1,0 +1,80 @@
+"""Candidate generation for the measured autotuner.
+
+The search space is seeded from the analytic priors, not enumerated: per
+layer a handful of ``block_e`` values around the VMEM model's pick drive
+the sequential variant, the banked-jax variant contributes one candidate
+(it ignores ``block_e``/``event_par`` numerically — the bank masks are
+applied whole-column), and the interlaced-pallas variant one per
+autotuned parallel width — but only where the Pallas kernels actually
+compile to machine code (``include_pallas``); under interpret-mode
+emulation they lose by construction and measuring them is wasted time.
+Network-level knobs (shared vs per-layer capacity, t_chunk, and
+stream_finalize for ingesting plans) are generated separately because
+they change every layer at once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from repro.core.plan import LayerPlan, snap_t_chunk
+from repro.kernels.event_conv.ops import (autotune_event_par,
+                                          candidate_block_es)
+
+
+class Candidate(NamedTuple):
+    """One per-layer knob tuple the tuner measures."""
+    block_e: Optional[int]   # None = analytic autotune inside plan_conv_layer
+    event_par: int
+    variant: str             # one of plan.KERNEL_VARIANTS
+
+    def label(self) -> str:
+        be = "auto" if self.block_e is None else str(self.block_e)
+        return f"{self.variant}/be={be}/ep={self.event_par}"
+
+
+def default_include_pallas() -> bool:
+    """Pallas candidates are only worth measuring where the kernels run
+    compiled; under interpret-mode emulation (the CPU default) they are
+    a pure-python simulation and always lose."""
+    from repro.kernels.runtime import resolve_interpret
+    return not resolve_interpret(None)
+
+
+def layer_candidates(lp: LayerPlan, *, batch_tile: int,
+                     vmem_budget: Optional[int] = None,
+                     include_pallas: bool = False,
+                     max_block_candidates: int = 4) -> list[Candidate]:
+    """Candidate (block_e, event_par, variant) tuples for one layer."""
+    vm_bytes = {None: 4, 8: 1, 16: 2}[lp.sat_bits]
+    vm_tile = (max(batch_tile, 1),) + lp.vm_tile
+    kw = {"vmem_budget": vmem_budget} if vmem_budget else {}
+    bes = candidate_block_es(lp.capacity, vm_tile, vm_bytes=vm_bytes, **kw)
+    cands = [Candidate(be, 1, "sequential")
+             for be in bes[:max(max_block_candidates, 1)]]
+    cands.append(Candidate(None, max(lp.event_par, 1), "banked-jax"))
+    if include_pallas:
+        ep = (lp.event_par if lp.event_par > 1
+              else autotune_event_par(lp.capacity, vm_tile,
+                                      vm_bytes=vm_bytes, **kw))
+        if ep > 1:
+            cands.append(Candidate(None, ep, "interlaced-pallas"))
+    return cands
+
+
+def network_candidates(cfg, base: dict) -> list[dict]:
+    """Network-level override dicts measured with the per-layer winners
+    fixed: both capacity-sharing modes x a small t_chunk ladder (the
+    caller's choice, monolithic, and half-T).  The base configuration is
+    always candidate 0, so with flat timings the tuner is a no-op."""
+    t = cfg.t_steps
+    chunks = []
+    for tc in (base.get("t_chunk"), None,
+               snap_t_chunk(t, max(1, t // 2)) if t > 1 else None):
+        if tc not in chunks:
+            chunks.append(tc)
+    base_pl = bool(base.get("per_layer", True))
+    out = []
+    for per_layer in (base_pl, not base_pl):
+        for tc in chunks:
+            out.append({"per_layer": per_layer, "t_chunk": tc})
+    return out

@@ -1,0 +1,49 @@
+"""Roofline cross-check of measured winners against the analytic model.
+
+Every candidate's AOT-compiled HLO is costed through
+``launch.hlo_cost.HloCostModel`` (trip-count-exact FLOPs/bytes) and
+turned into a roofline time (``max(flops/PEAK_FLOPS, bytes/HBM_BW)``).
+When the measured winner is not the model's pick — or the measured and
+modelled times disagree by more than ``deviation_factor`` both ways —
+the tuner logs it on the ``repro.tune`` logger.  The log line is the
+design feedback loop: a systematic deviation on some backend means the
+analytic VMEM/roofline priors mis-model that backend (exactly the
+``planned_per_layer`` 0.89x story that motivated measuring at all), and
+the priors should be revisited rather than silently out-voted forever.
+"""
+from __future__ import annotations
+
+import logging
+
+log = logging.getLogger("repro.tune")
+
+
+def model_microseconds(hlo_text: str) -> float:
+    """Roofline time of one compiled candidate, in microseconds."""
+    from repro.launch.hlo_cost import HloCostModel
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+    cost = HloCostModel(hlo_text, 1).entry_cost()
+    return max(cost.flops / PEAK_FLOPS, cost.bytes / HBM_BW) * 1e6
+
+
+def log_deviation(where: str, ranked: list, *,
+                  deviation_factor: float = 4.0) -> None:
+    """``ranked``: [(label, measured_us, model_us), ...] sorted by
+    measured time; element 0 is the winner.  Logs when measurement and
+    model disagree on the ranking or on the winner's magnitude."""
+    if not ranked:
+        return
+    label, us, model_us = ranked[0]
+    by_model = min(ranked, key=lambda r: r[2])
+    if by_model[0] != label:
+        log.info(
+            "tune[%s]: measured winner %s (%.1f us) != model pick %s "
+            "(model %.1f us vs %.1f us) — analytic prior mis-ranks this "
+            "backend", where, label, us, by_model[0], model_us, by_model[2])
+    if model_us > 0 and not (1 / deviation_factor
+                             <= us / model_us <= deviation_factor):
+        log.info(
+            "tune[%s]: winner %s measured %.1f us vs %.1f us modelled "
+            "(x%.2f) — outside the %.0fx roofline envelope for this "
+            "device", where, label, us, model_us, us / model_us,
+            deviation_factor)

@@ -1,0 +1,145 @@
+"""Micro-benchmark primitives for the measured autotuner.
+
+Every timed call goes through :func:`time_compiled`, which AOT-compiles
+the candidate (``jit -> lower -> compile``) so timings see the steady
+state, never jit dispatch or tracing, and returns the optimized HLO text
+alongside the median so the roofline cross-check costs nothing extra.
+The module-level ``_MEASUREMENT_RUNS`` counter increments once per
+compiled-executable invocation (warmup included) — tests assert it stays
+unchanged across a cache hit, which is the proof that ``tune="cached"``
+never touches the timing path.
+
+Candidate inputs come from :func:`propagate_inputs`: a seeded Bernoulli
+spike train is pushed through the analytic plan layer by layer, so every
+layer is measured on *its own* real input distribution (the calibrated
+occupancy the AEQ capacities were sized for), not on a made-up density.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.aeq import StreamState, interlace
+from repro.core.csnn import ConvSpec, init_params
+from repro.core.scheduler import (init_conv_carry, run_conv_layer_batched_chunk,
+                                  run_conv_layer_batched_chunk_streamed)
+
+_MEASUREMENT_RUNS = 0
+
+
+def measurement_runs() -> int:
+    """Total compiled-candidate invocations this process has timed."""
+    return _MEASUREMENT_RUNS
+
+
+def time_compiled(fn, args: tuple, *, warmup: int = 1,
+                  iters: int = 3) -> tuple[float, str]:
+    """AOT-compile ``fn(*args)`` and return (median microseconds, HLO text).
+
+    Median of ``iters`` timed runs after ``warmup`` untimed-but-counted
+    ones; ties in downstream argmins break on candidate order, so given
+    identical timings selection is deterministic.
+    """
+    global _MEASUREMENT_RUNS
+    compiled = jax.jit(fn).lower(*args).compile()
+    hlo = compiled.as_text()
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(compiled(*args))
+        _MEASUREMENT_RUNS += 1
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*args))
+        times.append(time.perf_counter() - t0)
+        _MEASUREMENT_RUNS += 1
+    return float(np.median(times)) * 1e6, hlo
+
+
+def synth_params(cfg, seed: int = 0) -> dict:
+    """Seeded random float32 params for the candidate runs (the tuner has
+    no trained weights and does not need them — every candidate is
+    bit-exact, so only the schedule's cost is being measured)."""
+    return init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def synth_spikes(cfg, batch: int, seed: int = 0,
+                 density: float = 0.15) -> jax.Array:
+    """Seeded (B, T, H, W, C_in) Bernoulli input spike train."""
+    h, w = cfg.input_hw
+    return jax.random.bernoulli(
+        jax.random.fold_in(jax.random.PRNGKey(seed), 1), density,
+        (batch, cfg.t_steps, h, w, cfg.input_channels))
+
+
+def propagate_inputs(params: dict, cfg, plan, x0: jax.Array, *,
+                     backend: str = "jax") -> tuple[list, list]:
+    """Run the analytic plan once to collect each conv layer's input.
+
+    Returns (per-layer input spike chunks [(B, T, H, W, C), ...],
+    per-layer LayerStats).  The stats are the same occupancy evidence
+    ``aeq.calibrate_capacities`` consumes — deeper layers are measured at
+    the spike rates the network actually produces from the seeded input,
+    not at the input density.
+    """
+    inputs, stats, x, ci = [], [], x0, 0
+    for idx, spec in enumerate(cfg.layers):
+        if not isinstance(spec, ConvSpec):
+            continue
+        inputs.append(x)
+        p = params[f"conv{idx}"]
+        lp = plan.layers[ci]
+        carry = init_conv_carry(lp, x.shape[0])
+        x, _, st = run_conv_layer_batched_chunk(
+            x, p["w"], p["b"], cfg.v_t, lp, carry, backend=backend)
+        stats.append(jax.device_get(st.in_spike_counts))
+        ci += 1
+    return inputs, stats
+
+
+def measure_layer(lp, spikes_in: jax.Array, w: jax.Array, b: jax.Array,
+                  v_t, *, backend: str = "jax", warmup: int = 1,
+                  iters: int = 3) -> tuple[float, str]:
+    """Median microseconds + HLO for one candidate layer plan on one
+    chunk of real inputs (the unit the per-layer search ranks)."""
+    carry = init_conv_carry(lp, spikes_in.shape[0])
+
+    def run(x, c):
+        out, c2, _ = run_conv_layer_batched_chunk(
+            x, w, b, v_t, lp, c, backend=backend)
+        return out, c2.vm, c2.fired
+
+    return time_compiled(run, (spikes_in, carry), warmup=warmup, iters=iters)
+
+
+def measure_streamed(lp, frames: jax.Array, w: jax.Array, b: jax.Array,
+                     v_t, *, backend: str = "jax", warmup: int = 1,
+                     iters: int = 3) -> tuple[float, str]:
+    """Median microseconds for the *streamed* layer-0 chunk step on a
+    synthetic ingestion state holding ``frames`` (B, t, C, H, W) — the
+    unit that ranks ``stream_finalize`` candidates."""
+    stream = StreamState(banks=interlace(frames))
+    carry = init_conv_carry(lp, frames.shape[0])
+
+    def run(s, c):
+        out, c2, _ = run_conv_layer_batched_chunk_streamed(
+            s, w, b, v_t, lp, c, backend=backend)
+        return out, c2.vm, c2.fired
+
+    return time_compiled(run, (stream, carry), warmup=warmup, iters=iters)
+
+
+def measure_network(params: dict, x0: jax.Array, cfg, plan, *,
+                    backend: str = "jax", warmup: int = 1,
+                    iters: int = 3) -> tuple[float, str]:
+    """Median microseconds for the whole batched pipeline under ``plan``
+    (the unit that ranks the network-level knobs: capacity sharing and
+    t_chunk)."""
+    from repro.core.csnn import snn_apply_batched
+
+    def run(p, x):
+        return snn_apply_batched(p, x, cfg, plan, collect_stats=False,
+                                 backend=backend)
+
+    return time_compiled(run, (params, x0), warmup=warmup, iters=iters)
