@@ -18,10 +18,13 @@ applied per step; bit-exact vs the sequential batched row and asserted
 faster), the per-layer-planned pipeline (``plan_network`` capacities,
 the padded-slot reduction recorded in the derived column), the async
 micro-batching serving engine (``serve.csnn_engine``, requests submitted
-one at a time and flushed on batch/deadline thresholds), and — under a
+one at a time and flushed on batch/deadline thresholds), — under a
 bursty Poisson arrival trace — continuous batching (slot-level refill,
 ``t_chunk``-granular admission) vs the run-to-completion engine on the
-identical trace (bit-exact logits, higher observed throughput).
+identical trace (bit-exact logits, higher observed throughput), and the
+``wide_5x5`` parametric-geometry row: the ``csnn_wide`` config's 5x5
+first layer run through the identical event pipeline, bit-exact vs the
+dense frame-based oracle (asserted).
 
 ``--json`` (via benchmarks.run) writes the rows to BENCH_table5.json —
 the machine-readable throughput trajectory tracked across PRs.
@@ -35,9 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import csnn_wide
 from repro.core.aeq import calibrate_capacity
-from repro.core.csnn import (encode_input, snn_apply, snn_apply_batched,
-                             snn_apply_dense)
+from repro.core.csnn import (encode_input, init_params, snn_apply,
+                             snn_apply_batched, snn_apply_dense)
 from repro.core.plan import plan_network
 from repro.serve.csnn_engine import CSNNEngine, CSNNServeConfig
 from repro.tune import TuneConfig
@@ -174,6 +178,34 @@ def main(json_out: bool = False):
          f"t_chunk={plan_tuned.chunk_steps};"
          f"slots={plan_tuned.total_event_slots};"
          f"vs_interlaced={vs_il:.2f}x;vs_batched={us_batched / us_tuned:.2f}x")
+
+    # beyond-paper parametric-geometry demo: the csnn_wide config swaps
+    # the first conv layer to a 5x5 window (25 interlace banks) and runs
+    # the identical event pipeline — planning, AEQ interlacing, banked
+    # apply all derive their layout from the layer geometry.  The k=5
+    # correctness claim is CI-enforced here: the event-driven pipeline
+    # must stay bit-exact vs the dense frame-based oracle, so the queues
+    # are sized truncation-free (capacity = H*W; the dense oracle has no
+    # overflow-drop semantics to compare against).
+    wcfg = csnn_wide.FULL
+    wparams = init_params(jax.random.PRNGKey(2), wcfg)
+    wh, ww = wcfg.input_hw
+    wplan = plan_network(wcfg, capacity=wh * ww, channel_block=8,
+                         batch_tile=batch, event_par=None)
+    wsp = encode_input(imgs, wcfg)
+    wide_fn = jax.jit(lambda s: snn_apply_batched(
+        wparams, s, wcfg, wplan, collect_stats=False))
+    wide_dense = jax.jit(jax.vmap(
+        lambda s: snn_apply_dense(wparams, s, wcfg)))
+    assert np.array_equal(np.asarray(wide_fn(wsp)),
+                          np.asarray(wide_dense(wsp))), \
+        "5x5 event pipeline must be bit-exact vs the dense oracle"
+    us_wide = timeit(wide_fn, wsp) / batch
+    us_wide_dense = timeit(wide_dense, wsp) / batch
+    emit("table5/wide_5x5", us_wide,
+         f"geometry={wplan.layers[0].geometry.describe()};"
+         f"event_par={[lp.event_par for lp in wplan.layers]};"
+         f"vs_dense={us_wide_dense / us_wide:.2f}x")
 
     # async serving engine: requests submitted one at a time, flushed on
     # batch/deadline thresholds; compile excluded via warmup

@@ -17,11 +17,13 @@ plan that skips it) is caught before any device work:
   a queue deeper than the feature map wastes BRAM/VMEM and can never
   fill (the per-layer sizing theorem of the plan/execute split).
 * ``plan-queue-depth-interlaced`` — allocated depth equals
-  ``interlaced_capacity(capacity, event_par)`` (the segment-padding
-  worst case: 9 columns each padded to an event_par multiple).
+  ``interlaced_capacity(capacity, event_par, n_banks)`` (the
+  segment-padding worst case: kh*kw columns each padded to an
+  event_par multiple).
 * ``plan-channel-block-divides`` — channel blocks tile C_out exactly.
 * ``plan-vm-tile-geometry`` — the VMEM-resident MemPot tile is the
-  halo-padded (H+2, W+2, channel_block) shape the kernels index into.
+  halo-padded (H+2*(kh//2), W+2*(kw//2), channel_block) shape the
+  kernels index into.
 * ``plan-out-hw-pool`` — post-pool geometry is the ceil-divided fmap
   (the OR-max-pool window contract chained into the next layer's plan).
 * ``plan-t-chunk-divides`` — chunked execution needs equal-length chunks
@@ -59,6 +61,7 @@ from typing import Callable, Optional
 
 from repro.core.aeq import interlaced_capacity
 from repro.core.csnn import CSNNConfig, ConvSpec, FCSpec
+from repro.core.geometry import GEOM_3X3, ConvGeometry
 from repro.core.plan import (KERNEL_VARIANTS, STREAM_FINALIZE, LayerPlan,
                              NetworkPlan, pad_capacity, plan_network)
 from repro.kernels.event_conv.ops import EVENT_BYTES, VMEM_BUDGET
@@ -79,6 +82,12 @@ def contract(rule: str, doc: str):
 
 def _layer_where(case: str, lp: LayerPlan) -> str:
     return f"plan[{case}].{lp.name}"
+
+
+def _layer_geometry(lp) -> ConvGeometry:
+    # Hand-built fixture plans (selftest proxies) may predate the
+    # geometry field; they are audited as the 3x3 paper layout.
+    return getattr(lp, "geometry", GEOM_3X3)
 
 
 @contract("plan-block-e-divides-depth",
@@ -142,12 +151,13 @@ def _check_queue_depth(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
     n = 0
     for lp in plan.layers:
         n += 1
-        want = interlaced_capacity(lp.capacity, lp.event_par)
+        nb = _layer_geometry(lp).n_banks
+        want = interlaced_capacity(lp.capacity, lp.event_par, nb)
         if lp.queue_depth != want:
             rep.flag("contracts", "plan-queue-depth-interlaced",
                      _layer_where(case, lp),
                      f"queue_depth={lp.queue_depth} != interlaced_capacity("
-                     f"{lp.capacity}, {lp.event_par})={want}")
+                     f"{lp.capacity}, {lp.event_par}, n_banks={nb})={want}")
     return n
 
 
@@ -167,12 +177,14 @@ def _check_channel_block(plan: NetworkPlan, cfg, case: str,
 
 
 @contract("plan-vm-tile-geometry",
-          "VMEM MemPot tile is the halo-padded (H+2, W+2, channel_block)")
+          "VMEM MemPot tile is the halo-padded (H+2hh, W+2hw, channel_block)")
 def _check_vm_tile(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
     n = 0
     for lp in plan.layers:
         n += 1
-        want = (lp.in_hw[0] + 2, lp.in_hw[1] + 2, lp.channel_block)
+        hh, hw = _layer_geometry(lp).halo
+        want = (lp.in_hw[0] + 2 * hh, lp.in_hw[1] + 2 * hw,
+                lp.channel_block)
         if tuple(lp.vm_tile) != want:
             rep.flag("contracts", "plan-vm-tile-geometry",
                      _layer_where(case, lp),
@@ -257,7 +269,7 @@ def vmem_model_bytes(lp: LayerPlan, batch_tile: int) -> int:
         tile *= d
     resident = 2 * tile * vm_bytes
     stream = 2 * lp.block_e * EVENT_BYTES
-    taps = 9 * lp.channel_block * vm_bytes
+    taps = _layer_geometry(lp).n_banks * lp.channel_block * vm_bytes
     return resident + stream + taps
 
 
@@ -341,7 +353,8 @@ def sweep_cases() -> list[tuple[str, CSNNConfig, dict]]:
     the geometry corners the planner must stay sound on: small/rectangular
     fmaps, pool windows that do not divide H/W, multi-channel DVS inputs
     with streaming ingestion, saturating int datapaths, explicit and
-    autotuned event_par, tiny and oversized requested capacities."""
+    autotuned event_par, tiny and oversized requested capacities, and
+    non-3x3 convolution windows (1x1 pointwise, 5x5 wide first layer)."""
     paper = CSNNConfig()
     small = CSNNConfig(input_hw=(10, 10),
                        layers=(ConvSpec(4), ConvSpec(4, pool=3), FCSpec(3)),
@@ -352,6 +365,15 @@ def sweep_cases() -> list[tuple[str, CSNNConfig, dict]]:
     dvs = CSNNConfig(input_hw=(20, 24), input_channels=2,
                      layers=(ConvSpec(8, pool=2), ConvSpec(4), FCSpec(5)),
                      t_steps=8)
+    k1 = CSNNConfig(input_hw=(12, 12),
+                    layers=(ConvSpec(4, kernel=1), ConvSpec(4, kernel=1,
+                                                            pool=2),
+                            FCSpec(3)),
+                    t_steps=4)
+    wide = CSNNConfig(input_hw=(16, 14),
+                      layers=(ConvSpec(6, kernel=5), ConvSpec(4, pool=3),
+                              FCSpec(4)),
+                      t_steps=5)
     return [
         ("paper", paper, dict(capacity=256, channel_block=8)),
         ("paper-autotuned-par", paper,
@@ -376,6 +398,11 @@ def sweep_cases() -> list[tuple[str, CSNNConfig, dict]]:
         ("dvs-ingest-sort-finalize", dvs,
          dict(capacity=128, event_par=None, t_chunk=4, ingest=True,
               variant="banked-jax", stream_finalize="sort")),
+        ("k1-pointwise", k1, dict(capacity=64, event_par=2)),
+        ("wide-5x5-autotuned", wide,
+         dict(capacity=128, channel_block=2, event_par=None)),
+        ("wide-5x5-int8-par", wide,
+         dict(capacity=96, sat_bits=8, event_par=4, t_chunk=None)),
     ]
 
 

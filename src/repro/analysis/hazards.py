@@ -2,23 +2,26 @@
 
 The correctness of every event-parallel path in this repo rests on one
 structural theorem (paper Sec. "memory interlacing", Fig. 6): **two
-distinct events of the same interlace column s = 3(i%3)+(j%3) have
-disjoint 3x3 write footprints**, so applying a whole column (or any
-same-column group) in parallel can never double-write a membrane cell.
-PR 5 exploits it three ways — the banked-select jax path
-(``event_conv.apply_banked_columns``), the interlaced Pallas kernels, and
-the ``segment_pad`` queue layout that feeds them.  This module *proves*
-the theorem and audits each exploitation site statically:
+distinct events of the same interlace column s = kw*(i%kh)+(j%kw) have
+disjoint kh x kw write footprints** (s = 3(i%3)+(j%3) in the paper's
+3x3), so applying a whole column (or any same-column group) in parallel
+can never double-write a membrane cell.  PR 5 exploits it three ways —
+the banked-select jax path (``event_conv.apply_banked_columns``), the
+interlaced Pallas kernels, and the ``segment_pad`` queue layout that
+feeds them.  This module *proves* the theorem and audits each
+exploitation site statically, parameterized over the window geometry
+(``run_hazards`` sweeps k in {1, 3, 5}):
 
 * ``hazard-column-disjoint`` — exhaustive proof over one full congruence
-  period (a 12x12 window: every (i%3, j%3, di%3, dj%3) case appears, and
-  footprint geometry only depends on those residues, so the finite check
-  is a proof for all H, W).
-* ``hazard-mask-routing`` — the 81 static ``shifted_bank_masks``
-  (column, bank) slices are verified one-hot-by-one-hot against a brute
-  force enumeration of where each kernel tap of each pixel must land
-  (padded-space bank + macro cell), including the bank<->tap bijection
-  per column (each of the 9 banks receives exactly one tap).
+  period (a 4k x 4k window: every residue pair appears, and footprint
+  geometry only depends on those residues, so the finite check is a
+  proof for all H, W at that k).
+* ``hazard-mask-routing`` — the n_banks^2 static ``shifted_bank_masks``
+  (column, bank) slices (81 at 3x3) are verified one-hot-by-one-hot
+  against a brute force enumeration of where each kernel tap of each
+  pixel must land (padded-space bank + macro cell), including the
+  bank<->tap bijection per column (each of the n_banks banks receives
+  exactly one tap).
 * ``hazard-segment-homogeneous`` — ``segment_pad`` layouts are audited on
   adversarial feature maps: every aligned ``event_par`` group must be
   column-homogeneous with pairwise-disjoint footprints among its valid
@@ -28,9 +31,10 @@ the theorem and audits each exploitation site statically:
 * ``oob-event-patch`` — interval bounds of the ``pl.dslice`` gather/
   scatter in ``kernels/event_conv/kernel.py``: event coords are produced
   in unpadded space [0, H-1] (invalid slots are masked to 0), each event
-  reads/writes a 3x3 patch at that offset in the halo-padded
-  (H+2, W+2, C) tile, so the worst-case slice end (H-1)+3 = H+2 must
-  equal the padded extent — proven per sweep geometry, for both axes.
+  reads/writes a kh x kw patch at that offset in the halo-padded
+  (H+2hh, W+2hw, C) tile, so the worst-case slice end (H-1)+kh =
+  H+2(kh//2)+1 must stay within the padded extent — proven per sweep
+  geometry, for both axes.
 * ``oob-blockspec-bounds`` — every ``pl.BlockSpec`` index map of every
   ``pl.pallas_call`` in ``kernels/event_conv/kernel.py`` and
   ``kernels/threshold_pool/kernel.py`` is captured by tracing the real
@@ -52,47 +56,64 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.geometry import GEOM_3X3, ConvGeometry
+
 from .report import Report
 
 # Cap on exhaustively enumerated grid points per captured pallas_call.
 _MAX_GRID_POINTS = 65536
+
+#: Window geometries the proofs sweep — the paper's 3x3 plus the k=1 and
+#: k=5 ends of the parametric generalization.
+SWEEP_GEOMETRIES = (ConvGeometry(1, 1), GEOM_3X3, ConvGeometry(5, 5))
 
 
 # ---------------------------------------------------------------------------
 # Interlace-column disjointness: the hazard-freedom theorem.
 # ---------------------------------------------------------------------------
 
-def _footprint(i: int, j: int) -> set[tuple[int, int]]:
+def _footprint(i: int, j: int,
+               geometry: ConvGeometry = GEOM_3X3) -> set[tuple[int, int]]:
     """Padded-space cells written by an event centred at unpadded (i, j):
-    the 3x3 patch at padded offset (i, j) — rows i..i+2, cols j..j+2."""
-    return {(i + a, j + b) for a in range(3) for b in range(3)}
+    the kh x kw patch at padded offset (i, j) — rows i..i+kh-1, cols
+    j..j+kw-1 (3x3 in the paper)."""
+    kh, kw = geometry.window
+    return {(i + a, j + b) for a in range(kh) for b in range(kw)}
 
 
-def check_column_disjointness(window: int = 12, *,
+def check_column_disjointness(window: Optional[int] = None, *,
+                              geometry: ConvGeometry = GEOM_3X3,
                               column_of: Optional[Callable] = None,
                               report: Optional[Report] = None) -> Report:
     """Exhaustively prove same-column footprint disjointness on a window
-    covering every congruence case (window >= 6 sees all residue pairs;
-    the default 12 adds two full extra periods of margin).
+    covering every congruence case (window >= 2*max(kh, kw) sees all
+    residue pairs; the default 4*max(kh, kw) adds two full extra periods
+    of margin — 12 for the paper's 3x3).
 
-    ``column_of`` overrides the column assignment (i, j) -> s, which is
-    how the self-test seeds a hazard-colliding interlace scheme.
+    Footprint geometry only depends on the coordinate residues modulo the
+    kernel window, so the finite check is a proof for all H, W — at every
+    odd k, not just 3.  ``column_of`` overrides the column assignment
+    (i, j) -> s, which is how the self-test seeds a hazard-colliding
+    interlace scheme.
     """
     rep = report if report is not None else Report()
-    col = column_of if column_of is not None else (
-        lambda i, j: (i % 3) * 3 + (j % 3))
+    kh, kw = geometry.window
+    if window is None:
+        window = 4 * max(kh, kw)
+    col = column_of if column_of is not None else geometry.column_index_py
     pixels = list(itertools.product(range(window), range(window)))
     checked = 0
     for (i1, j1), (i2, j2) in itertools.combinations(pixels, 2):
         if col(i1, j1) != col(i2, j2):
             continue
         checked += 1
-        if _footprint(i1, j1) & _footprint(i2, j2):
+        if _footprint(i1, j1, geometry) & _footprint(i2, j2, geometry):
             rep.flag("hazards", "hazard-column-disjoint",
-                     f"window[{window}x{window}]",
+                     f"window[{window}x{window},k={kh}x{kw}]",
                      f"events ({i1},{j1}) and ({i2},{j2}) share interlace "
-                     f"column {col(i1, j1)} but their 3x3 write footprints "
-                     f"overlap — parallel application would double-write")
+                     f"column {col(i1, j1)} but their {kh}x{kw} write "
+                     f"footprints overlap — parallel application would "
+                     f"double-write")
     rep.proved("hazard-column-disjoint", checked)
     return rep
 
@@ -102,16 +123,18 @@ def check_column_disjointness(window: int = 12, *,
 # ---------------------------------------------------------------------------
 
 def check_mask_routing(hw: tuple[int, int] = (8, 9), *,
+                       geometry: ConvGeometry = GEOM_3X3,
                        report: Optional[Report] = None) -> Report:
-    """Verify the 81 ``shifted_bank_masks`` (column, bank) write masks
-    against a brute-force enumeration, one one-hot event at a time.
+    """Verify the n_banks^2 ``shifted_bank_masks`` (column, bank) write
+    masks against a brute-force enumeration, one one-hot event at a time
+    (81 slices for the paper's 3x3).
 
-    For an event at unpadded (i, j) (padded centre (i+1, j+1), interlace
-    column s), tap (a, b) writes padded cell (i+a, j+b), which lives in
-    bank t = 3*((i+a)%3) + (j+b)%3 at macro cell ((i+a)//3, (j+b)//3).
-    The shifted masks must light exactly those 9 cells in row s, one per
-    bank (the bank<->tap bijection behind the FPGA's 9 conflict-free
-    ports), and every other row must stay dark.
+    For an event at unpadded (i, j) (padded centre (i+hh, j+hw),
+    interlace column s), tap (a, b) writes padded cell (i+a, j+b), which
+    lives in bank t = kw*((i+a)%kh) + (j+b)%kw at macro cell
+    ((i+a)//kh, (j+b)//kw).  The shifted masks must light exactly those
+    n_banks cells in row s, one per bank (the bank<->tap bijection behind
+    the FPGA's conflict-free ports), and every other row must stay dark.
     """
     import jax.numpy as jnp
 
@@ -120,27 +143,31 @@ def check_mask_routing(hw: tuple[int, int] = (8, 9), *,
 
     rep = report if report is not None else Report()
     h, w = hw
-    hb, wb = -(-(h + 2) // 3), -(-(w + 2) // 3)
+    kh, kw = geometry.window
+    hh, hw_ = geometry.halo
+    nb = geometry.n_banks
+    hb, wb = -(-(h + 2 * hh) // kh), -(-(w + 2 * hw_) // kw)
     for i in range(h):
         for j in range(w):
-            s = (i % 3) * 3 + (j % 3)
+            s = geometry.column_index_py(i, j)
             # one-hot occupancy: pad the centre, bank it (the
             # build_bank_masks layout for this single kept event)
             fmap = np.zeros((h, w), bool)
             fmap[i, j] = True
-            padded = np.pad(fmap, ((1, 1), (1, 1)))
-            masks = np.asarray(interlace(jnp.asarray(padded)))
-            got = np.asarray(shifted_bank_masks(jnp.asarray(masks)))
-            want = np.zeros((9, 9, hb, wb), bool)
-            for a in range(3):
-                for b in range(3):
+            padded = np.pad(fmap, ((hh, hh), (hw_, hw_)))
+            masks = np.asarray(interlace(jnp.asarray(padded), geometry))
+            got = np.asarray(shifted_bank_masks(jnp.asarray(masks),
+                                                geometry))
+            want = np.zeros((nb, nb, hb, wb), bool)
+            for a in range(kh):
+                for b in range(kw):
                     r, c = i + a, j + b
-                    t = 3 * (r % 3) + (c % 3)
-                    want[s, t, r // 3, c // 3] = True
+                    t = kw * (r % kh) + (c % kw)
+                    want[s, t, r // kh, c // kw] = True
             if not np.array_equal(got, want):
                 bad = np.argwhere(got != want)
                 rep.flag("hazards", "hazard-mask-routing",
-                         f"event({i},{j})",
+                         f"event({i},{j})[k={kh}x{kw}]",
                          f"shifted_bank_masks routes column {s} wrongly at "
                          f"(col, bank, I, J)={tuple(bad[0])} — "
                          f"{len(bad)} cell(s) differ from the brute-force "
@@ -148,25 +175,26 @@ def check_mask_routing(hw: tuple[int, int] = (8, 9), *,
                 continue
             banks_hit = {int(t) for t in np.argwhere(want[s].any((-2, -1)))
                          .ravel()}
-            if banks_hit != set(range(9)):
+            if banks_hit != set(range(nb)):
                 rep.flag("hazards", "hazard-mask-routing",
-                         f"event({i},{j})",
+                         f"event({i},{j})[k={kh}x{kw}]",
                          f"column {s} writes banks {sorted(banks_hit)} — "
-                         f"the 9-tap footprint must hit each bank exactly "
-                         f"once")
+                         f"the {nb}-tap footprint must hit each bank "
+                         f"exactly once")
             rep.proved("hazard-mask-routing")
     return rep
 
 
 def check_banked_masks(masks: np.ndarray, *,
+                       geometry: ConvGeometry = GEOM_3X3,
                        where: str = "bank-masks",
                        report: Optional[Report] = None) -> Report:
-    """Audit a concrete (9, HB, WB) bank-occupancy mask set (the
+    """Audit a concrete (n_banks, HB, WB) bank-occupancy mask set (the
     ``aeq.build_bank_masks`` output consumed by the banked conv path):
     every pair of occupied cells within one bank must map to padded
-    positions >= 3 apart in some axis (same-bank cells share both
-    residues, so this is disjointness of their 3x3 footprints), i.e. the
-    mask set admits hazard-free whole-column application.
+    positions >= kh (resp. kw) apart in some axis (same-bank cells share
+    both residues, so this is disjointness of their kh x kw footprints),
+    i.e. the mask set admits hazard-free whole-column application.
 
     A mask set violating this cannot come from the banked layout (cells
     of one bank are distinct macro addresses by construction) — the check
@@ -174,20 +202,23 @@ def check_banked_masks(masks: np.ndarray, *,
     any future non-grid mask producer) are rejected before use.
     """
     rep = report if report is not None else Report()
+    kh, kw = geometry.window
+    nb = geometry.n_banks
     m = np.asarray(masks)
-    if m.ndim != 3 or m.shape[0] != 9:
+    if m.ndim != 3 or m.shape[0] != nb:
         rep.flag("hazards", "hazard-banked-masks", where,
-                 f"expected (9, HB, WB) bank masks, got shape {m.shape}")
+                 f"expected ({nb}, HB, WB) bank masks for the {kh}x{kw} "
+                 f"geometry, got shape {m.shape}")
         return rep
-    for t in range(9):
+    for t in range(nb):
         cells = np.argwhere(m[t])
         for (i1, j1), (i2, j2) in itertools.combinations(map(tuple, cells), 2):
-            p1 = (3 * i1 + t // 3, 3 * j1 + t % 3)
-            p2 = (3 * i2 + t // 3, 3 * j2 + t % 3)
-            if abs(p1[0] - p2[0]) < 3 and abs(p1[1] - p2[1]) < 3:
+            p1 = (kh * i1 + t // kw, kw * j1 + t % kw)
+            p2 = (kh * i2 + t // kw, kw * j2 + t % kw)
+            if abs(p1[0] - p2[0]) < kh and abs(p1[1] - p2[1]) < kw:
                 rep.flag("hazards", "hazard-banked-masks", where,
                          f"bank {t} holds events at padded {p1} and {p2} "
-                         f"with overlapping 3x3 footprints")
+                         f"with overlapping {kh}x{kw} footprints")
         rep.proved("hazard-banked-masks")
     return rep
 
@@ -196,9 +227,12 @@ def check_banked_masks(masks: np.ndarray, *,
 # segment_pad layout: the interlaced Pallas kernel's precondition.
 # ---------------------------------------------------------------------------
 
-def _adversarial_fmaps(h: int, w: int) -> list[tuple[str, np.ndarray]]:
+def _adversarial_fmaps(h: int, w: int,
+                       geometry: ConvGeometry = GEOM_3X3
+                       ) -> list[tuple[str, np.ndarray]]:
     """Feature maps that stress the queue layout: dense, empty, single
     pixel, checkerboard, one full interlace column, and a seeded random."""
+    kh, kw = geometry.window
     rng = np.random.default_rng(0)
     full = np.ones((h, w), bool)
     empty = np.zeros((h, w), bool)
@@ -206,7 +240,7 @@ def _adversarial_fmaps(h: int, w: int) -> list[tuple[str, np.ndarray]]:
     single[h // 2, w // 2] = True
     checker = np.indices((h, w)).sum(0) % 2 == 0
     one_col = np.zeros((h, w), bool)
-    one_col[0::3, 0::3] = True
+    one_col[0::kh, 0::kw] = True
     rand = rng.random((h, w)) < 0.3
     return [("full", full), ("empty", empty), ("single", single),
             ("checker", checker), ("one-column", one_col), ("random", rand)]
@@ -215,6 +249,7 @@ def _adversarial_fmaps(h: int, w: int) -> list[tuple[str, np.ndarray]]:
 def check_segment_layout(hw: tuple[int, int] = (11, 13),
                          capacities: Sequence[int] = (16, 64, 1024),
                          event_pars: Sequence[int] = (2, 4, 8), *,
+                         geometry: ConvGeometry = GEOM_3X3,
                          report: Optional[Report] = None) -> Report:
     """Audit ``aeq.segment_pad`` output layouts on adversarial fmaps.
 
@@ -237,13 +272,14 @@ def check_segment_layout(hw: tuple[int, int] = (11, 13),
 
     rep = report if report is not None else Report()
     h, w = hw
+    kh, kw = geometry.window
     for (name, fmap), cap, par in itertools.product(
-            _adversarial_fmaps(h, w), capacities, event_pars):
-        where = f"segment_pad[{name},cap={cap},par={par}]"
-        q = build_aeq(jnp.asarray(fmap), cap)
-        qp = segment_pad(q, par)
+            _adversarial_fmaps(h, w, geometry), capacities, event_pars):
+        where = f"segment_pad[{name},cap={cap},par={par},k={kh}x{kw}]"
+        q = build_aeq(jnp.asarray(fmap), cap, geometry=geometry)
+        qp = segment_pad(q, par, geometry)
         check_padded_queue(np.asarray(qp.coords), np.asarray(qp.valid), par,
-                           where=where, report=rep)
+                           geometry=geometry, where=where, report=rep)
         kept = [tuple(c) for c, v in zip(np.asarray(q.coords),
                                          np.asarray(q.valid)) if v]
         kept_p = [tuple(c) for c, v in zip(np.asarray(qp.coords),
@@ -257,11 +293,14 @@ def check_segment_layout(hw: tuple[int, int] = (11, 13),
 
 
 def check_padded_queue(coords: np.ndarray, valid: np.ndarray,
-                       event_par: int, *, where: str = "queue",
+                       event_par: int, *,
+                       geometry: ConvGeometry = GEOM_3X3,
+                       where: str = "queue",
                        report: Optional[Report] = None) -> Report:
     """Check one concrete (E, 2) queue layout for group homogeneity and
     in-group footprint disjointness (seedable with hand-built queues)."""
     rep = report if report is not None else Report()
+    kh, kw = geometry.window
     e = coords.shape[0]
     if e % event_par != 0:
         rep.flag("hazards", "hazard-segment-homogeneous", where,
@@ -271,17 +310,17 @@ def check_padded_queue(coords: np.ndarray, valid: np.ndarray,
     for g in range(e // event_par):
         sl = slice(g * event_par, (g + 1) * event_par)
         ev = [tuple(map(int, c)) for c, v in zip(coords[sl], valid[sl]) if v]
-        cols = {(i % 3) * 3 + (j % 3) for i, j in ev}
+        cols = {geometry.column_index_py(i, j) for i, j in ev}
         if len(cols) > 1:
             rep.flag("hazards", "hazard-segment-homogeneous", where,
                      f"aligned group {g} mixes interlace columns "
                      f"{sorted(cols)}: events {ev}")
         for (i1, j1), (i2, j2) in itertools.combinations(ev, 2):
-            if abs(i1 - i2) < 3 and abs(j1 - j2) < 3:
+            if abs(i1 - i2) < kh and abs(j1 - j2) < kw:
                 rep.flag("hazards", "hazard-segment-homogeneous", where,
                          f"group {g} events ({i1},{j1}) and ({i2},{j2}) "
-                         f"have overlapping 3x3 footprints — parallel "
-                         f"apply would double-write")
+                         f"have overlapping {kh}x{kw} footprints — "
+                         f"parallel apply would double-write")
         rep.proved("hazard-segment-homogeneous")
     return rep
 
@@ -316,13 +355,16 @@ def _spec_parts(spec) -> tuple[Optional[tuple], Optional[Callable]]:
     return bs, im
 
 
-def capture_pallas_calls() -> list[CapturedCall]:
+def capture_pallas_calls(
+        geometry: ConvGeometry = GEOM_3X3) -> list[CapturedCall]:
     """Trace every Pallas kernel wrapper abstractly with ``pallas_call``
     interposed, recording grids/BlockSpecs/shapes of the *shipped* code.
 
     ``jax.eval_shape`` runs the wrappers on abstract values only; the
     interposer returns zeros of the declared out_shape, so no kernel body
-    executes and no device memory is touched.
+    executes and no device memory is touched.  ``geometry`` sets the
+    kernel window the event-conv wrappers are traced with (the wrappers
+    derive their BlockSpecs from the kernel operand's shape).
     """
     import jax
     import jax.numpy as jnp
@@ -360,33 +402,35 @@ def capture_pallas_calls() -> list[CapturedCall]:
 
     # geometry representative enough to exercise every spec dimension
     h, w, c, e, q = 10, 12, 8, 64, 3
+    kh, kw = geometry.window
+    hh, hw_ = geometry.halo
     f32 = jnp.float32
     cases = [
         ("event_conv_pallas", ev_kernel.event_conv_pallas,
-         (jax.ShapeDtypeStruct((h + 2, w + 2, c), f32),
+         (jax.ShapeDtypeStruct((h + 2 * hh, w + 2 * hw_, c), f32),
           jax.ShapeDtypeStruct((e, 2), jnp.int32),
           jax.ShapeDtypeStruct((e,), jnp.int8),
-          jax.ShapeDtypeStruct((3, 3, c), f32)),
+          jax.ShapeDtypeStruct((kh, kw, c), f32)),
          dict(block_e=16, interpret=True)),
         ("event_conv_pallas_batched", ev_kernel.event_conv_pallas_batched,
-         (jax.ShapeDtypeStruct((q, h + 2, w + 2, c), f32),
+         (jax.ShapeDtypeStruct((q, h + 2 * hh, w + 2 * hw_, c), f32),
           jax.ShapeDtypeStruct((q, e, 2), jnp.int32),
           jax.ShapeDtypeStruct((q, e), jnp.int8),
-          jax.ShapeDtypeStruct((3, 3, c), f32)),
+          jax.ShapeDtypeStruct((kh, kw, c), f32)),
          dict(block_e=16, interpret=True)),
         ("event_conv_pallas_interlaced",
          ev_kernel.event_conv_pallas_interlaced,
-         (jax.ShapeDtypeStruct((h + 2, w + 2, c), f32),
+         (jax.ShapeDtypeStruct((h + 2 * hh, w + 2 * hw_, c), f32),
           jax.ShapeDtypeStruct((e, 2), jnp.int32),
           jax.ShapeDtypeStruct((e,), jnp.int8),
-          jax.ShapeDtypeStruct((3, 3, c), f32)),
+          jax.ShapeDtypeStruct((kh, kw, c), f32)),
          dict(block_e=16, event_par=4, interpret=True)),
         ("event_conv_pallas_interlaced_batched",
          ev_kernel.event_conv_pallas_interlaced_batched,
-         (jax.ShapeDtypeStruct((q, h + 2, w + 2, c), f32),
+         (jax.ShapeDtypeStruct((q, h + 2 * hh, w + 2 * hw_, c), f32),
           jax.ShapeDtypeStruct((q, e, 2), jnp.int32),
           jax.ShapeDtypeStruct((q, e), jnp.int8),
-          jax.ShapeDtypeStruct((3, 3, c), f32)),
+          jax.ShapeDtypeStruct((kh, kw, c), f32)),
          dict(block_e=16, event_par=4, interpret=True)),
         ("threshold_pool_pallas", tp_kernel.threshold_pool_pallas,
          (jax.ShapeDtypeStruct((9, 12, 8), f32),
@@ -414,6 +458,7 @@ def capture_pallas_calls() -> list[CapturedCall]:
 
 
 def check_blockspec_bounds(calls: Optional[list[CapturedCall]] = None, *,
+                           geometry: ConvGeometry = GEOM_3X3,
                            report: Optional[Report] = None) -> Report:
     """Statically evaluate every captured BlockSpec index map over its
     full grid and bounds-check the addressed blocks.
@@ -421,11 +466,13 @@ def check_blockspec_bounds(calls: Optional[list[CapturedCall]] = None, *,
     Obligations per (call, operand): every grid point's block offset
     (index * block_shape) stays inside the operand; the blocks reach the
     operand's end in every dimension (no untouched tail); aliased
-    input/output pairs agree in shape and dtype.
+    input/output pairs agree in shape and dtype.  ``geometry`` sets the
+    kernel window the shipped wrappers are captured with when ``calls``
+    is not supplied.
     """
     rep = report if report is not None else Report()
     if calls is None:
-        calls = capture_pallas_calls()
+        calls = capture_pallas_calls(geometry)
     for call in calls:
         points = 1
         for g in call.grid:
@@ -502,7 +549,8 @@ def check_blockspec_bounds(calls: Optional[list[CapturedCall]] = None, *,
     return rep
 
 
-def check_patch_bounds(h: int, w: int, *, window: int = 3,
+def check_patch_bounds(h: int, w: int, *,
+                       geometry: ConvGeometry = GEOM_3X3,
                        coord_hi: Optional[tuple[int, int]] = None,
                        where: Optional[str] = None,
                        report: Optional[Report] = None) -> Report:
@@ -510,21 +558,22 @@ def check_patch_bounds(h: int, w: int, *, window: int = 3,
 
     Event coords come from the AEQ in unpadded space — valid events lie
     in [0, H-1] x [0, W-1] and invalid slots are masked to (0, 0) inside
-    the kernel — and each event addresses a ``window``-wide square patch
-    at that offset in the halo-padded (H+2, W+2, C) tile.  The audit
-    checks max(coord) + window <= padded extent on both axes (and
-    min >= 0), i.e. the halo exactly absorbs the worst-case slice.
-    ``coord_hi`` overrides the coordinate upper bounds (self-test hook).
+    the kernel — and each event addresses a kh x kw patch at that offset
+    in the halo-padded (H+2hh, W+2hw, C) tile.  The audit checks
+    max(coord) + window <= padded extent on both axes (and min >= 0),
+    i.e. the halo exactly absorbs the worst-case slice.  ``coord_hi``
+    overrides the coordinate upper bounds (self-test hook).
     """
     rep = report if report is not None else Report()
-    hp, wp = h + 2, w + 2
+    kh, kw = geometry.window
+    hp, wp = geometry.padded_hw(h, w)
     hi_i, hi_j = coord_hi if coord_hi is not None else (h - 1, w - 1)
-    loc = where or f"event_conv[{h}x{w}]"
-    for axis, hi, pad in (("i", hi_i, hp), ("j", hi_j, wp)):
-        if hi + window > pad:
+    loc = where or f"event_conv[{h}x{w},k={kh}x{kw}]"
+    for axis, hi, pad, win in (("i", hi_i, hp, kh), ("j", hi_j, wp, kw)):
+        if hi + win > pad:
             rep.flag("hazards", "oob-event-patch", loc,
-                     f"{axis}-axis: dslice({axis}={hi}, {window}) reaches "
-                     f"{hi + window} > padded extent {pad} — the halo does "
+                     f"{axis}-axis: dslice({axis}={hi}, {win}) reaches "
+                     f"{hi + win} > padded extent {pad} — the halo does "
                      f"not absorb the worst-case event patch")
         elif hi < 0:
             rep.flag("hazards", "oob-event-patch", loc,
@@ -535,12 +584,19 @@ def check_patch_bounds(h: int, w: int, *, window: int = 3,
 
 
 def run_hazards(report: Optional[Report] = None) -> Report:
-    """Run every hazard/bounds pass over the built-in sweep."""
+    """Run every hazard/bounds pass over the built-in sweep.
+
+    Every pass runs once per :data:`SWEEP_GEOMETRIES` entry — the proofs
+    are parameterized over the kernel window, so the 3x3 theorem the
+    paper relies on is certified alongside its k=1 and k=5
+    generalizations on every analysis run.
+    """
     rep = report if report is not None else Report()
-    check_column_disjointness(report=rep)
-    check_mask_routing(report=rep)
-    check_segment_layout(report=rep)
-    for h, w in ((10, 10), (28, 28), (17, 13), (9, 16), (1, 1)):
-        check_patch_bounds(h, w, report=rep)
-    check_blockspec_bounds(report=rep)
+    for geom in SWEEP_GEOMETRIES:
+        check_column_disjointness(geometry=geom, report=rep)
+        check_mask_routing(geometry=geom, report=rep)
+        check_segment_layout(geometry=geom, report=rep)
+        for h, w in ((10, 10), (28, 28), (17, 13), (9, 16), (1, 1)):
+            check_patch_bounds(h, w, geometry=geom, report=rep)
+        check_blockspec_bounds(geometry=geom, report=rep)
     return rep

@@ -21,8 +21,9 @@ two statically and on adversarial inputs, per sweep geometry and dtype:
   halo contract) and the float datapath NaN-free.
 * ``kernel-sat-overflow`` — int8/int16 saturation-overflow
   reachability: drive a membrane cell to the saturation bound through
-  its maximum fan-in (9 events — one per interlace column — each adding
-  a maximal tap) and prove the datapath *clamps* instead of wrapping
+  its maximum fan-in (kh*kw events — one per interlace column — each
+  adding a maximal tap) and prove the datapath *clamps* instead of
+  wrapping
   (output stays within the storage range, equals the per-event oracle,
   and actually reaches the bound, demonstrating the clamp is live, not
   dead code).  A datapath that accumulated in storage width without
@@ -34,19 +35,26 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core.geometry import GEOM_3X3, ConvGeometry
+
 from .report import Report
 
 _SAT = {8: (-128, 127), 16: (-32768, 32767)}
 
 
 def _sweep():
-    """(name, h, w, c, block_e, event_par, dtype-name) geometry grid."""
+    """(name, h, w, c, block_e, event_par, dtype-name, k) geometry grid:
+    paper shapes plus rectangular/int corners at 3x3, and the parametric
+    windows (1x1 pointwise, 5x5 wide) the planner now admits."""
     return [
-        ("paper28", 28, 28, 8, 32, 4, "float32"),
-        ("rect", 10, 12, 8, 16, 4, "float32"),
-        ("rect-int16", 10, 12, 8, 16, 2, "int16"),
-        ("small-int8", 7, 9, 4, 6, 2, "int8"),
-        ("deep-queue", 6, 6, 4, 24, 8, "float32"),
+        ("paper28", 28, 28, 8, 32, 4, "float32", 3),
+        ("rect", 10, 12, 8, 16, 4, "float32", 3),
+        ("rect-int16", 10, 12, 8, 16, 2, "int16", 3),
+        ("small-int8", 7, 9, 4, 6, 2, "int8", 3),
+        ("deep-queue", 6, 6, 4, 24, 8, "float32", 3),
+        ("pointwise-k1", 10, 10, 4, 8, 2, "float32", 1),
+        ("wide-k5", 13, 12, 4, 16, 4, "float32", 5),
+        ("wide-k5-int8", 11, 11, 4, 8, 2, "int8", 5),
     ]
 
 
@@ -78,17 +86,18 @@ def check_shape_contracts(report: Optional[Report] = None) -> Report:
         else:
             rep.proved("kernel-shape-contract")
 
-    for case, h, w, c, block_e, par, dt in _sweep():
+    for case, h, w, c, block_e, par, dt, kk in _sweep():
         dtype = jnp.dtype(dt)
+        hh, hw = ConvGeometry(kk, kk).halo
         e = 4 * block_e
         q = 3
-        vm = jax.ShapeDtypeStruct((h + 2, w + 2, c), dtype)
-        vmb = jax.ShapeDtypeStruct((q, h + 2, w + 2, c), dtype)
+        vm = jax.ShapeDtypeStruct((h + 2 * hh, w + 2 * hw, c), dtype)
+        vmb = jax.ShapeDtypeStruct((q, h + 2 * hh, w + 2 * hw, c), dtype)
         co = jax.ShapeDtypeStruct((e, 2), jnp.int32)
         cob = jax.ShapeDtypeStruct((q, e, 2), jnp.int32)
         va = jax.ShapeDtypeStruct((e,), jnp.int8)
         vab = jax.ShapeDtypeStruct((q, e), jnp.int8)
-        k = jax.ShapeDtypeStruct((3, 3, c), dtype)
+        k = jax.ShapeDtypeStruct((kk, kk, c), dtype)
         entries = [
             (f"event_conv_pallas[{case}]",
              lambda a, b, v_, d, be=block_e: event_conv_pallas(
@@ -133,14 +142,17 @@ def check_shape_contracts(report: Optional[Report] = None) -> Report:
     return rep
 
 
-def _adversarial_queue(h: int, w: int, e: int, rng) -> tuple[np.ndarray,
-                                                             np.ndarray]:
+def _adversarial_queue(h: int, w: int, e: int, rng,
+                       geometry: ConvGeometry = GEOM_3X3
+                       ) -> tuple[np.ndarray, np.ndarray]:
     """Raw (coords, valid) stressing the halo/masking contract: the four
-    corner events, a 3x3 cluster (maximum per-cell fan-in), duplicates,
-    and invalid slots carrying the AEQ's -1 sentinel coordinates."""
+    corner events, a kh x kw cluster (maximum per-cell fan-in),
+    duplicates, and invalid slots carrying the AEQ's -1 sentinels."""
+    hh, hw = geometry.halo
     ci, cj = h // 2, w // 2
     events = [(0, 0), (0, w - 1), (h - 1, 0), (h - 1, w - 1), (0, 0)]
-    events += [(ci + di, cj + dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)
+    events += [(ci + di, cj + dj)
+               for di in range(-hh, hh + 1) for dj in range(-hw, hw + 1)
                if 0 <= ci + di < h and 0 <= cj + dj < w]
     coords = np.full((e, 2), -1, np.int32)
     valid = np.zeros((e,), bool)
@@ -168,21 +180,23 @@ def check_value_parity(report: Optional[Report] = None) -> Report:
 
     rep = report if report is not None else Report()
     rng = np.random.default_rng(7)
-    for case, h, w, c, block_e, par, dt in _sweep():
+    for case, h, w, c, block_e, par, dt, kk in _sweep():
         dtype = jnp.dtype(dt)
+        geom = ConvGeometry(kk, kk)
+        hh, hw = geom.halo
         e = 4 * block_e
         if dt == "float32":
             vm0 = rng.standard_normal((h, w, c)).astype(np.float32)
-            kern = rng.standard_normal((3, 3, c)).astype(np.float32)
+            kern = rng.standard_normal((kk, kk, c)).astype(np.float32)
         else:
             lo, hi = _SAT[int(dt[3:])]
             vm0 = rng.integers(lo // 2, hi // 2, (h, w, c)).astype(dt)
-            kern = rng.integers(-20, 20, (3, 3, c)).astype(dt)
+            kern = rng.integers(-20, 20, (kk, kk, c)).astype(dt)
         vm0, kern = jnp.asarray(vm0), jnp.asarray(kern)
         # raw adversarial queue (duplicates + -1 sentinels): sequential
         # kernel vs oracle at the kernel level
-        coords, valid = _adversarial_queue(h, w, e, rng)
-        vm_p = pad_vm(vm0)
+        coords, valid = _adversarial_queue(h, w, e, rng, geom)
+        vm_p = pad_vm(vm0, geom)
         got = event_conv_pallas(vm_p, jnp.asarray(coords),
                                 jnp.asarray(valid), kern,
                                 block_e=block_e, interpret=True)
@@ -198,7 +212,7 @@ def check_value_parity(report: Optional[Report] = None) -> Report:
         # interlaced + banked paths on a real (deduped, interlace-ordered)
         # queue of the same geometry
         fmap = jnp.asarray(rng.random((h, w)) < 0.4)
-        queue = build_aeq(fmap, e)
+        queue = build_aeq(fmap, e, geometry=geom)
         base = np.asarray(apply_events(vm_p, queue, kern))
         pallas_seq = np.asarray(event_conv(
             vm0, queue, kern, block_e=block_e, interpret=True))
@@ -206,11 +220,11 @@ def check_value_parity(report: Optional[Report] = None) -> Report:
             vm0, queue, kern, block_e=block_e, event_par=par,
             interpret=True))
         banked = np.asarray(apply_events_banked(
-            vm_p, build_bank_masks(fmap[None], e).masks[0], kern))
-        crop = base[1:-1, 1:-1, :]
+            vm_p, build_bank_masks(fmap[None], e, geom).masks[0], kern))
+        crop = base[hh:h + hh, hw:w + hw, :]
         for path, out in (("ops-sequential", pallas_seq),
                           ("ops-interlaced", pallas_par),
-                          ("banked", banked[1:-1, 1:-1, :])):
+                          ("banked", banked[hh:h + hh, hw:w + hw, :])):
             if not np.array_equal(out, crop):
                 rep.flag("kernel_audit", "kernel-value-parity",
                          f"kernel:event_conv[{case}]",
@@ -236,18 +250,19 @@ def check_checkify(report: Optional[Report] = None) -> Report:
     rep = report if report is not None else Report()
     rng = np.random.default_rng(11)
     errors = checkify.index_checks | checkify.float_checks
-    for case, h, w, c, block_e, _par, dt in _sweep():
+    for case, h, w, c, block_e, _par, dt, kk in _sweep():
         dtype = jnp.dtype(dt)
+        geom = ConvGeometry(kk, kk)
         e = 4 * block_e
-        coords, valid = _adversarial_queue(h, w, e, rng)
+        coords, valid = _adversarial_queue(h, w, e, rng, geom)
         if dt == "float32":
             vm0 = rng.standard_normal((h, w, c)).astype(np.float32)
-            kern = rng.standard_normal((3, 3, c)).astype(np.float32)
+            kern = rng.standard_normal((kk, kk, c)).astype(np.float32)
         else:
             lo, hi = _SAT[int(dt[3:])]
             vm0 = rng.integers(lo, hi, (h, w, c)).astype(dt)
-            kern = rng.integers(-20, 20, (3, 3, c)).astype(dt)
-        vm_p = pad_vm(jnp.asarray(vm0))
+            kern = rng.integers(-20, 20, (kk, kk, c)).astype(dt)
+        vm_p = pad_vm(jnp.asarray(vm0), geom)
         checked = checkify.checkify(
             jax.jit(event_conv_ref), errors=errors)
         err, _ = checked(vm_p, jnp.asarray(coords),
@@ -279,14 +294,15 @@ def check_checkify(report: Optional[Report] = None) -> Report:
 
 
 def check_saturation(apply_fn: Optional[Callable] = None, *,
+                     geometry: ConvGeometry = GEOM_3X3,
                      report: Optional[Report] = None) -> Report:
     """int8/int16 saturation-overflow reachability proof.
 
     Builds the maximum-fan-in configuration — one membrane cell inside
-    the footprint of 9 events (its full 3x3 neighbourhood of centres,
-    which is also one event per interlace column), every tap at the
-    maximal magnitude, the tile pre-charged near the bound — and checks
-    the datapath clamps at the storage bound instead of wrapping.
+    the footprint of kh*kw events (its full kh x kw neighbourhood of
+    centres, which is also one event per interlace column), every tap at
+    the maximal magnitude, the tile pre-charged near the bound — and
+    checks the datapath clamps at the storage bound instead of wrapping.
 
     ``apply_fn(vm_padded, coords, valid, kernel) -> vm_padded`` defaults
     to the interpret-mode sequential Pallas kernel; the self-test passes
@@ -303,22 +319,26 @@ def check_saturation(apply_fn: Optional[Callable] = None, *,
         def apply_fn(vm_p, co, va, k):
             return event_conv_pallas(vm_p, co, va, k, block_e=co.shape[0],
                                      interpret=True)
-    h = w = 7
+    kh, kw = geometry.window
+    hh, hw = geometry.halo
+    h = w = 2 * max(kh, kw) + 1
     c = 4
-    ci = cj = 3
-    events = [(ci + di, cj + dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)]
+    ci, cj = h // 2, w // 2
+    events = [(ci + di, cj + dj)
+              for di in range(-hh, hh + 1) for dj in range(-hw, hw + 1)]
     coords = jnp.asarray(events, jnp.int32)
     valid = jnp.ones((len(events),), jnp.int8)
+    ktag = "" if geometry == GEOM_3X3 else f",k={kh}x{kw}"
     for bits, (lo, hi) in _SAT.items():
         dtype = jnp.dtype(f"int{bits}")
-        tap = hi // 10 + 1
+        tap = hi // (geometry.n_banks + 1) + 1
         vm0 = jnp.full((h, w, c), hi - tap, dtype)   # one tap from the rail
-        kern = jnp.full((3, 3, c), tap, dtype)
-        vm_p = pad_vm(vm0)
+        kern = jnp.full((kh, kw, c), tap, dtype)
+        vm_p = pad_vm(vm0, geometry)
         got = np.asarray(apply_fn(vm_p, coords, valid, kern))
         want = np.asarray(event_conv_ref(vm_p, coords, valid, kern))
-        where = f"kernel:event_conv[int{bits}]"
-        hot = got[1 + ci, 1 + cj]                    # padded centre cell
+        where = f"kernel:event_conv[int{bits}{ktag}]"
+        hot = got[hh + ci, hw + cj]                  # padded centre cell
         if got.max() > hi or got.min() < lo:
             rep.flag("kernel_audit", "kernel-sat-overflow", where,
                      f"int{bits} accumulation escapes the storage range "
@@ -350,5 +370,6 @@ def run_kernel_audit(report: Optional[Report] = None) -> Report:
     check_shape_contracts(report=rep)
     check_value_parity(report=rep)
     check_checkify(report=rep)
-    check_saturation(report=rep)
+    for geom in (ConvGeometry(1, 1), GEOM_3X3, ConvGeometry(5, 5)):
+        check_saturation(geometry=geom, report=rep)
     return rep

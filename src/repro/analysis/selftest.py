@@ -34,6 +34,7 @@ def _broken_plans():
     """(fixture, rule, broken_plan) triples built by corrupting a real
     plan field-by-field — one violated contract each."""
     from repro.core.csnn import CSNNConfig
+    from repro.core.geometry import ConvGeometry
     from repro.core.plan import plan_network
 
     plan = plan_network(CSNNConfig(), capacity=256, channel_block=8,
@@ -78,6 +79,10 @@ def _broken_plans():
          dataclasses.replace(plan, t_chunk=plan.t_steps + 1)),
         ("ingest-halfset", "plan-ingest-sizing",
          relayer(ingest_capacity=64)),
+        ("geometry-wrong-bank-count", "plan-vm-tile-geometry",
+         # a 5x5 (25-bank) geometry stamped onto a layer whose VMEM tile
+         # and queue were sized for the 3x3 (9-bank) layout
+         relayer(geometry=ConvGeometry(5, 5))),
         ("variant-bogus", "plan-variant-valid",
          relayer(variant="fused-marvel")),
         ("variant-interlaced-seq-width", "plan-variant-valid",
@@ -100,6 +105,8 @@ def selftest_contracts(out: Report) -> None:
 
 
 def selftest_hazards(out: Report) -> None:
+    from repro.core.geometry import ConvGeometry
+
     from .hazards import (CapturedCall, check_banked_masks,
                           check_blockspec_bounds, check_column_disjointness,
                           check_padded_queue, check_patch_bounds)
@@ -111,11 +118,26 @@ def selftest_hazards(out: Report) -> None:
         column_of=lambda i, j: (i % 2) * 2 + (j % 2), report=inner)
     _expect(out, inner, "hazard-column-disjoint", "collider-column-map")
 
+    # same failure at k=5: period-3 rows put events 3 apart in one
+    # column, but a 5x5 footprint reaches 4 rows — they overlap
+    inner = Report()
+    check_column_disjointness(
+        geometry=ConvGeometry(5, 5),
+        column_of=lambda i, j: (i % 3) * 5 + (j % 5), report=inner)
+    _expect(out, inner, "hazard-column-disjoint", "collider-column-map-k5")
+
     # malformed bank-occupancy mask set (wrong bank count)
     inner = Report()
     check_banked_masks(np.ones((4, 3, 3), bool), where="selftest",
                        report=inner)
     _expect(out, inner, "hazard-banked-masks", "malformed-bank-masks")
+
+    # the 3x3 bank count shipped under a 5x5 geometry (25 banks needed)
+    inner = Report()
+    check_banked_masks(np.ones((9, 2, 2), bool),
+                       geometry=ConvGeometry(5, 5), where="selftest",
+                       report=inner)
+    _expect(out, inner, "hazard-banked-masks", "wrong-bank-count-k5")
 
     # duplicate event inside one aligned group: same column, overlapping
     # footprints — the parallel scatter would drop one tap

@@ -1,7 +1,7 @@
 """Architecture registry: ``--arch <id>`` ids -> (FULL, SMOKE) configs."""
-from . import (csnn_paper, deepseek_v2, gemma3_1b, granite_34b, llama4_maverick,
-               phi3_medium_14b, qwen2_vl_7b, rwkv6_1p6b, stablelm_3b,
-               whisper_medium, zamba2_1p2b)
+from . import (csnn_paper, csnn_wide, deepseek_v2, gemma3_1b, granite_34b,
+               llama4_maverick, phi3_medium_14b, qwen2_vl_7b, rwkv6_1p6b,
+               stablelm_3b, whisper_medium, zamba2_1p2b)
 from .base import SHAPES, SMOKE_SHAPE, ArchConfig, ShapeConfig
 
 ARCHS = {

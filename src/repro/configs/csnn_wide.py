@@ -1,0 +1,19 @@
+"""Wide-receptive-field CSNN demo: the paper net with a 5x5 first conv
+layer (25 interlace banks), exercising the parametric k x k event
+pipeline end to end — planning, AEQ interlacing, banked apply, and the
+Pallas kernels all derive their layout from the 5x5 geometry instead of
+the hardwired 3x3."""
+from repro.core.csnn import CSNNConfig, ConvSpec, FCSpec
+
+FULL = CSNNConfig(
+    input_hw=(28, 28),
+    layers=(ConvSpec(32, kernel=5), ConvSpec(32, pool=3), ConvSpec(10),
+            FCSpec(10)),
+    t_steps=5,
+)
+
+SMOKE = CSNNConfig(
+    input_hw=(12, 12),
+    layers=(ConvSpec(8, kernel=5), ConvSpec(8, pool=3), FCSpec(10)),
+    t_steps=4,
+)

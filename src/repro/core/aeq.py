@@ -60,6 +60,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.geometry import GEOM_3X3, ConvGeometry
+
 
 class EventQueue(NamedTuple):
     """Fixed-capacity queue of address events.
@@ -68,8 +70,9 @@ class EventQueue(NamedTuple):
     valid:  (capacity,) bool    — which slots hold real events.
     count:  () int32            — spike demand (may exceed kept events on
                                   overflow; occupancy is valid.sum()).
-    seg_offsets/seg_counts: (9,) int32 — interlace column segments: the
-        kept events of column s occupy queue slots
+    seg_offsets/seg_counts: (n_banks,) int32 — interlace column segments
+        (n_banks = kh*kw of the builder's geometry, 9 for the default
+        3x3): the kept events of column s occupy queue slots
         [seg_offsets[s], seg_offsets[s] + seg_counts[s]).  None for
         raster-ordered queues (``interlaced=False``), where no such
         contiguous hazard-free slices exist.
@@ -92,8 +95,9 @@ class BatchedEventQueue(NamedTuple):
     coords: (..., capacity, 2) int32 — (i, j) per event; -1 where ~valid.
     valid:  (..., capacity) bool     — which slots hold real events.
     count:  (...,) int32             — spike demand per queue.
-    seg_offsets/seg_counts: (..., 9) int32 — per-queue interlace column
-        segments (see :class:`EventQueue`); None when raster-ordered.
+    seg_offsets/seg_counts: (..., n_banks) int32 — per-queue interlace
+        column segments (see :class:`EventQueue`); None when
+        raster-ordered.
 
     The leading dims are whatever ``build_aeq_batched`` was given, e.g.
     (T, B, C_in) in the batched scheduler.  ``queue_at`` views one member
@@ -125,17 +129,18 @@ class BatchedEventQueue(NamedTuple):
 
 
 class BankedEvents(NamedTuple):
-    """Kept events of a queue, laid out as the 9 membrane RAM banks.
+    """Kept events of a queue, laid out as the n_banks membrane RAM banks.
 
-    masks: (..., 9, HB, WB) bool — bank_masks[..., b, I, J] is True iff a
-        kept event's *halo-padded centre* (i+1, j+1) falls in padded-space
-        bank b = 3*((i+1)%3) + (j+1)%3 at macro cell (I, J).  Events of
-        one interlace column all land in a single bank, so slicing one
-        bank == selecting one hazard-free column.  The banking geometry
-        matches ``event_conv.bank_vm`` exactly.
+    masks: (..., n_banks, HB, WB) bool — bank_masks[..., b, I, J] is True
+        iff a kept event's *halo-padded centre* (i+hh, j+hw) falls in
+        padded-space bank b = kw*((i+hh)%kh) + (j+hw)%kw at macro cell
+        (I, J), with (hh, hw) the geometry halo.  Events of one interlace
+        column all land in a single bank, so slicing one bank == selecting
+        one hazard-free column.  The banking geometry matches
+        ``event_conv.bank_vm`` exactly (9 banks for the default 3x3).
     count:      (...,) int32 — spike demand (same semantics as the queue).
-    seg_counts: (..., 9) int32 — kept events per interlace column s
-        (paper order s = 3(i%3)+(j%3), NOT bank order).
+    seg_counts: (..., n_banks) int32 — kept events per interlace column s
+        (paper order s = kw*(i%kh)+(j%kw), NOT bank order).
     """
 
     masks: jax.Array
@@ -143,44 +148,51 @@ class BankedEvents(NamedTuple):
     seg_counts: jax.Array
 
 
-def column_index(i: jax.Array, j: jax.Array) -> jax.Array:
-    """Interlacing column s in 0..8 of a coordinate (paper Figs. 6/7)."""
-    return (i % 3) * 3 + (j % 3)
+def column_index(i: jax.Array, j: jax.Array,
+                 geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """Interlacing column s in 0..n_banks-1 of a coordinate (paper
+    Figs. 6/7 for 3x3; s = kw*(i%kh) + (j%kw) in general)."""
+    return geometry.column_of(i, j)
 
 
-def interlaced_capacity(capacity: int, event_par: int) -> int:
-    """Queue depth of the ``segment_pad`` layout: each of the 9 column
-    segments is padded to a multiple of ``event_par``, so the worst case
-    adds 9*(event_par-1) slots; rounded up to an ``event_par`` multiple so
-    aligned groups tile the queue evenly."""
+def interlaced_capacity(capacity: int, event_par: int,
+                        n_banks: int = 9) -> int:
+    """Queue depth of the ``segment_pad`` layout: each of the ``n_banks``
+    column segments is padded to a multiple of ``event_par``, so the worst
+    case adds n_banks*(event_par-1) slots; rounded up to an ``event_par``
+    multiple so aligned groups tile the queue evenly."""
     if event_par <= 1:
         return capacity
-    base = capacity + 9 * (event_par - 1)
+    base = capacity + n_banks * (event_par - 1)
     return -(-base // event_par) * event_par
 
 
-def _order_keys(h: int, w: int, interlaced: bool) -> jax.Array:
+def _order_keys(h: int, w: int, interlaced: bool,
+                geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
     """(H*W,) int32 read-order key per pixel: (column s, i, j) or raster."""
     ii, jj = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
     ii, jj = ii.ravel(), jj.ravel()
     if interlaced:
-        order_key = column_index(ii, jj) * (h * w) + ii * w + jj
+        order_key = column_index(ii, jj, geometry) * (h * w) + ii * w + jj
     else:
         order_key = ii * w + jj
     return order_key.astype(jnp.int32)
 
 
-def _kept_segments(flat: jax.Array, h: int, w: int,
-                   kept: jax.Array) -> tuple[jax.Array, jax.Array]:
+def _kept_segments(flat: jax.Array, h: int, w: int, kept: jax.Array,
+                   geometry: ConvGeometry = GEOM_3X3
+                   ) -> tuple[jax.Array, jax.Array]:
     """Column segments of the first ``kept`` events in interlaced order.
 
     flat: (N, H*W) bool active pixels; kept: (N,) int32 events retained
     after capacity truncation.  Returns (seg_offsets, seg_counts), both
-    (N, 9): truncation drops from the tail of the (s, i, j) order, so the
-    kept count of column s is clip(kept - cum_s, 0, count_s).
+    (N, n_banks): truncation drops from the tail of the (s, i, j) order,
+    so the kept count of column s is clip(kept - cum_s, 0, count_s).
     """
-    cols = column_index(jnp.arange(h * w) // w, jnp.arange(h * w) % w)
-    onehot = (cols[None, :, None] == jnp.arange(9)[None, None, :])
+    nb = geometry.n_banks
+    cols = column_index(jnp.arange(h * w) // w, jnp.arange(h * w) % w,
+                        geometry)
+    onehot = (cols[None, :, None] == jnp.arange(nb)[None, None, :])
     full = jnp.sum(flat[:, :, None] & onehot, axis=1).astype(jnp.int32)
     cum = jnp.cumsum(full, axis=-1) - full  # exclusive
     seg_counts = jnp.clip(kept[:, None] - cum, 0, full)
@@ -189,7 +201,9 @@ def _kept_segments(flat: jax.Array, h: int, w: int,
 
 
 def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
-                      interlaced: bool = True) -> BatchedEventQueue:
+                      interlaced: bool = True,
+                      geometry: ConvGeometry = GEOM_3X3
+                      ) -> BatchedEventQueue:
     """Compact a stack of binary fmaps (..., H, W) in one fused sort pass.
 
     Semantically identical to ``jax.vmap(build_aeq)`` over the flattened
@@ -202,10 +216,12 @@ def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
     additionally carry their column segment offsets/counts.
     """
     *lead, h, w = fmaps.shape
+    nb = geometry.n_banks
     n = int(np.prod(lead, dtype=np.int64)) if lead else 1
     flat = fmaps.reshape(n, h * w).astype(bool)
-    big = jnp.asarray(9 * h * w + 1, jnp.int32)
-    keys = jnp.where(flat, _order_keys(h, w, interlaced)[None, :], big)
+    big = jnp.asarray(nb * h * w + 1, jnp.int32)
+    keys = jnp.where(flat, _order_keys(h, w, interlaced, geometry)[None, :],
+                     big)
     idx = jnp.broadcast_to(jnp.arange(h * w, dtype=jnp.int32)[None, :], keys.shape)
     sorted_keys, perm = jax.lax.sort_key_val(keys, idx, dimension=-1)
     take_n = min(capacity, h * w)
@@ -222,9 +238,9 @@ def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
     seg_off = seg_cnt = None
     if interlaced:
         kept = jnp.minimum(count, take_n)
-        seg_off, seg_cnt = _kept_segments(flat, h, w, kept)
-        seg_off = seg_off.reshape(*lead, 9)
-        seg_cnt = seg_cnt.reshape(*lead, 9)
+        seg_off, seg_cnt = _kept_segments(flat, h, w, kept, geometry)
+        seg_off = seg_off.reshape(*lead, nb)
+        seg_cnt = seg_cnt.reshape(*lead, nb)
     return BatchedEventQueue(
         coords=coords.reshape(*lead, capacity, 2),
         valid=valid.reshape(*lead, capacity),
@@ -232,7 +248,8 @@ def build_aeq_batched(fmaps: jax.Array, capacity: int, *,
         seg_offsets=seg_off, seg_counts=seg_cnt)
 
 
-def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> EventQueue:
+def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True,
+              geometry: ConvGeometry = GEOM_3X3) -> EventQueue:
     """Compact a binary fmap (H, W) into an EventQueue.
 
     Events are ordered by (column s, i, j) when ``interlaced`` (the paper's
@@ -243,12 +260,14 @@ def build_aeq(fmap: jax.Array, capacity: int, *, interlaced: bool = True) -> Eve
     compaction logic is shared, so the two are bit-identical by
     construction).
     """
-    bq = build_aeq_batched(fmap[None], capacity, interlaced=interlaced)
+    bq = build_aeq_batched(fmap[None], capacity, interlaced=interlaced,
+                           geometry=geometry)
     return bq.queue_at((0,))
 
 
-def segment_pad(queue: BatchedEventQueue | EventQueue,
-                event_par: int) -> BatchedEventQueue | EventQueue:
+def segment_pad(queue: BatchedEventQueue | EventQueue, event_par: int,
+                geometry: ConvGeometry = GEOM_3X3
+                ) -> BatchedEventQueue | EventQueue:
     """Re-lay an interlaced queue so column segments are event_par-aligned.
 
     Each column segment keeps its events in order but starts at a multiple
@@ -272,18 +291,19 @@ def segment_pad(queue: BatchedEventQueue | EventQueue,
         queue = BatchedEventQueue(*(x[None] for x in queue))
     coords, valid = queue.coords, queue.valid
     seg_cnt, seg_off = queue.seg_counts, queue.seg_offsets
+    nb = geometry.n_banks
     lead = coords.shape[:-2]
     n = int(np.prod(lead, dtype=np.int64)) if lead else 1
     cap = coords.shape[-2]
-    cap_pad = interlaced_capacity(cap, event_par)
+    cap_pad = interlaced_capacity(cap, event_par, nb)
     coords = coords.reshape(n, cap, 2)
     valid = valid.reshape(n, cap)
-    seg_cnt = seg_cnt.reshape(n, 9)
-    seg_off = seg_off.reshape(n, 9)
+    seg_cnt = seg_cnt.reshape(n, nb)
+    seg_off = seg_off.reshape(n, nb)
 
     pad_cnt = -(-seg_cnt // event_par) * event_par
     pad_off = jnp.cumsum(pad_cnt, axis=-1) - pad_cnt
-    col = column_index(coords[..., 0], coords[..., 1])
+    col = column_index(coords[..., 0], coords[..., 1], geometry)
     col = jnp.where(valid, col, 0)
     rank = jnp.arange(cap)[None, :] - jnp.take_along_axis(seg_off, col, -1)
     newpos = jnp.take_along_axis(pad_off, col, -1) + rank
@@ -299,13 +319,15 @@ def segment_pad(queue: BatchedEventQueue | EventQueue,
         coords=oc.reshape(*lead, cap_pad, 2),
         valid=ov.reshape(*lead, cap_pad),
         count=queue.count,
-        seg_offsets=pad_off.reshape(*lead, 9),
+        seg_offsets=pad_off.reshape(*lead, nb),
         seg_counts=queue.seg_counts)
     return out.queue_at((0,)) if single else out
 
 
-def build_bank_masks(fmaps: jax.Array, capacity: int) -> BankedEvents:
-    """Compact binary fmaps (..., H, W) straight into the 9 RAM banks.
+def build_bank_masks(fmaps: jax.Array, capacity: int,
+                     geometry: ConvGeometry = GEOM_3X3) -> BankedEvents:
+    """Compact binary fmaps (..., H, W) straight into the n_banks RAM
+    banks (9 for the default 3x3 geometry).
 
     Sort-free equivalent of ``build_aeq_batched`` for mask consumers: the
     kept-event set (the first ``min(capacity, H*W)`` events in the
@@ -315,28 +337,30 @@ def build_bank_masks(fmaps: jax.Array, capacity: int) -> BankedEvents:
     result plugs directly into ``event_conv.apply_events_interlaced*``.
     """
     *lead, h, w = fmaps.shape
+    nb = geometry.n_banks
+    hh, hw = geometry.halo
     n = int(np.prod(lead, dtype=np.int64)) if lead else 1
     flat = fmaps.reshape(n, h, w).astype(bool)
-    il = interlace(flat)                       # (n, 9, hb, wb) unpadded banks
+    il = interlace(flat, geometry)           # (n, nb, hb, wb) unpadded banks
     hb, wb = il.shape[-2:]
-    il_flat = il.reshape(n, 9, hb * wb)
-    # within a column, (I, J) raster order == (i, j) order (i = 3I + si)
-    seg_full = jnp.sum(il_flat, axis=-1).astype(jnp.int32)       # (n, 9)
+    il_flat = il.reshape(n, nb, hb * wb)
+    # within a column, (I, J) raster order == (i, j) order (i = kh*I + si)
+    seg_full = jnp.sum(il_flat, axis=-1).astype(jnp.int32)       # (n, nb)
     count = jnp.sum(seg_full, axis=-1)
     kept = jnp.minimum(count, min(capacity, h * w))
     seg_off = jnp.cumsum(seg_full, axis=-1) - seg_full           # exclusive
     rank_in_col = jnp.cumsum(il_flat, axis=-1) - il_flat         # exclusive
     rank = seg_off[:, :, None] + rank_in_col
     kept_il = il_flat & (rank < kept[:, None, None])
-    kept_map = deinterlace(kept_il.reshape(n, 9, hb, wb), (h, w))
+    kept_map = deinterlace(kept_il.reshape(n, nb, hb, wb), (h, w), geometry)
     seg_counts = jnp.clip(kept[:, None] - seg_off, 0, seg_full)
-    # bank the halo-padded centres: event (i, j) sits at padded (i+1, j+1)
-    padded = jnp.pad(kept_map, [(0, 0), (1, 1), (1, 1)])
-    masks = interlace(padded)
+    # bank the halo-padded centres: event (i, j) sits at padded (i+hh, j+hw)
+    padded = jnp.pad(kept_map, [(0, 0), (hh, hh), (hw, hw)])
+    masks = interlace(padded, geometry)
     return BankedEvents(
         masks=masks.reshape(*lead, *masks.shape[-3:]),
         count=count.reshape(tuple(lead)).astype(jnp.int32),
-        seg_counts=seg_counts.reshape(*lead, 9))
+        seg_counts=seg_counts.reshape(*lead, nb))
 
 
 def scatter_aeq(queue: EventQueue, shape: tuple[int, int]) -> jax.Array:
@@ -384,34 +408,41 @@ def calibrate_capacities(per_layer_counts, *, percentile: float = 99.9,
 # Memory interlacing (paper Fig. 6) — functional model.
 # ---------------------------------------------------------------------------
 
-def interlace(vm: jax.Array) -> jax.Array:
-    """(..., H, W) values -> (..., 9, ceil(H/3), ceil(W/3)) memory columns.
+def interlace(vm: jax.Array, geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """(..., H, W) values -> (..., n_banks, ceil(H/kh), ceil(W/kw))
+    memory columns.
 
-    Column s = 3*(i%3) + (j%3); within a column, the element of the 3x3
-    macro-block (I, J) = (i//3, j//3) lives at address (I, J).  Any 3x3
-    window of the original map touches each column exactly once — this is
-    the invariant the FPGA exploits for 9 conflict-free ports, and the
-    property test in tests/test_aeq.py asserts it.  Leading dims (batch,
-    time, ...) pass through unchanged.
+    Column s = kw*(i%kh) + (j%kw); within a column, the element of the
+    kh x kw macro-block (I, J) = (i//kh, j//kw) lives at address (I, J).
+    Any kh x kw window of the original map touches each column exactly
+    once — this is the invariant the FPGA exploits for n_banks
+    conflict-free ports (9 for the paper's 3x3), and the property test in
+    tests/test_aeq.py asserts it.  Leading dims (batch, time, ...) pass
+    through unchanged.
     """
+    kh, kw = geometry.kh, geometry.kw
     *lead, h, w = vm.shape
-    ph, pw = -h % 3, -w % 3
+    ph, pw = -h % kh, -w % kw
     vm = jnp.pad(vm, [(0, 0)] * len(lead) + [(0, ph), (0, pw)])
     hh, ww = vm.shape[-2:]
     nl = len(lead)
-    # (..., H, W) -> (..., H/3, 3, W/3, 3) -> (..., 3, 3, H/3, W/3) -> (..., 9, ...)
-    blocks = vm.reshape(*lead, hh // 3, 3, ww // 3, 3)
+    # (..., H, W) -> (..., H/kh, kh, W/kw, kw) -> (..., kh, kw, H/kh, W/kw)
+    # -> (..., kh*kw, ...)
+    blocks = vm.reshape(*lead, hh // kh, kh, ww // kw, kw)
     blocks = blocks.transpose(*range(nl), nl + 1, nl + 3, nl, nl + 2)
-    return blocks.reshape(*lead, 9, hh // 3, ww // 3)
+    return blocks.reshape(*lead, kh * kw, hh // kh, ww // kw)
 
 
-def deinterlace(cols: jax.Array, shape: tuple[int, int]) -> jax.Array:
+def deinterlace(cols: jax.Array, shape: tuple[int, int],
+                geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
     """Inverse of ``interlace``; crops back to the original (..., H, W)."""
+    kh, kw = geometry.kh, geometry.kw
     *lead, _, bh, bw = cols.shape
     nl = len(lead)
-    blocks = cols.reshape(*lead, 3, 3, bh, bw)
+    blocks = cols.reshape(*lead, kh, kw, bh, bw)
     blocks = blocks.transpose(*range(nl), nl + 2, nl, nl + 3, nl + 1)
-    return blocks.reshape(*lead, bh * 3, bw * 3)[..., : shape[0], : shape[1]]
+    return blocks.reshape(*lead, bh * kh, bw * kw)[..., : shape[0],
+                                                   : shape[1]]
 
 
 # ---------------------------------------------------------------------------
@@ -445,12 +476,13 @@ class StreamChunk(NamedTuple):
 class StreamState(NamedTuple):
     """Incremental AEQ ingestion state for one T-bin input window.
 
-    banks: (..., T, C, 9, HB, WB) bool — per-(bin, channel) pixel
-        occupancy held directly in the 9 interlace-column banks of the
-        PR-5 layout (bank s = 3*(y%3) + x%3, macro cell (y//3, x//3)):
-        appending an event is a single scatter into its hazard-free
-        column, and no dense (H, W) frame is ever materialized.  Leading
-        dims (e.g. batch) pass through ``append_events_batched``.
+    banks: (..., T, C, n_banks, HB, WB) bool — per-(bin, channel) pixel
+        occupancy held directly in the interlace-column banks of the
+        PR-5 layout (bank s = kw*(y%kh) + x%kw, macro cell (y//kh,
+        x//kw); 9 banks for the default 3x3): appending an event is a
+        single scatter into its hazard-free column, and no dense (H, W)
+        frame is ever materialized.  Leading dims (e.g. batch) pass
+        through ``append_events_batched``.
 
     A pytree of one bool array: jit/donate/vmap all apply, and the
     serving engine slices per-slot windows out of it directly.
@@ -468,12 +500,15 @@ class StreamState(NamedTuple):
 
 
 def init_stream_state(hw: tuple[int, int], t_bins: int, channels: int,
-                      lead: tuple = ()) -> StreamState:
+                      lead: tuple = (),
+                      geometry: ConvGeometry = GEOM_3X3) -> StreamState:
     """Empty ingestion state for a (T, C, H, W) input window."""
     h, w = hw
-    hb, wb = -(-h // 3), -(-w // 3)
+    kh, kw = geometry.kh, geometry.kw
+    hb, wb = -(-h // kh), -(-w // kw)
     return StreamState(
-        banks=jnp.zeros((*lead, t_bins, channels, 9, hb, wb), jnp.bool_))
+        banks=jnp.zeros((*lead, t_bins, channels, geometry.n_banks, hb, wb),
+                        jnp.bool_))
 
 
 def make_stream_chunk(events, buffer: Optional[int] = None) -> StreamChunk:
@@ -494,7 +529,8 @@ def make_stream_chunk(events, buffer: Optional[int] = None) -> StreamChunk:
 
 
 def append_events(state: StreamState, chunk: StreamChunk,
-                  hw: tuple[int, int]) -> StreamState:
+                  hw: tuple[int, int],
+                  geometry: ConvGeometry = GEOM_3X3) -> StreamState:
     """Merge one chunk of raw events into the ingestion state.
 
     Idempotent scatter into the column banks: duplicate events (same bin,
@@ -513,50 +549,57 @@ def append_events(state: StreamState, chunk: StreamChunk,
     # invalid rows are pushed out of bounds so mode="drop" discards them
     # even when their other coordinates happen to be in range
     t = jnp.where(ok, t, t_bins)
-    banks = state.banks.at[t, p, column_index(y, x), y // 3, x // 3].max(
-        ok, mode="drop")
+    kh, kw = geometry.kh, geometry.kw
+    banks = state.banks.at[t, p, column_index(y, x, geometry),
+                           y // kh, x // kw].max(ok, mode="drop")
     return StreamState(banks=banks)
 
 
 def append_events_batched(state: StreamState, chunk: StreamChunk,
-                          hw: tuple[int, int]) -> StreamState:
+                          hw: tuple[int, int],
+                          geometry: ConvGeometry = GEOM_3X3) -> StreamState:
     """``append_events`` over matching leading dims (e.g. a slot batch):
-    state banks (..., T, C, 9, HB, WB) + chunk events (..., N, 4)."""
+    state banks (..., T, C, n_banks, HB, WB) + chunk events (..., N, 4)."""
     lead = state.banks.shape[:-5]
     if chunk.events.shape[:-2] != lead or chunk.num.shape != lead:
         raise ValueError(
             f"chunk leading dims {chunk.events.shape[:-2]} do not match "
             f"state leading dims {lead}")
     fn = lambda b, e, n: append_events(
-        StreamState(b), StreamChunk(e, n), hw).banks
+        StreamState(b), StreamChunk(e, n), hw, geometry).banks
     for _ in lead:
         fn = jax.vmap(fn)
     return StreamState(banks=fn(state.banks, chunk.events, chunk.num))
 
 
-def stream_frames(state: StreamState, hw: tuple[int, int]) -> jax.Array:
+def stream_frames(state: StreamState, hw: tuple[int, int],
+                  geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
     """Dense (..., T, C, H, W) bool view of the ingestion state — the
     exact frames the binned path would have built from the same events
     (the differential-test pivot; also feeds the banked conv path)."""
-    return deinterlace(state.banks, hw)
+    return deinterlace(state.banks, hw, geometry)
 
 
 def _queues_from_cols(il_flat: jax.Array, h: int, w: int, capacity: int,
-                      interlaced: bool) -> BatchedEventQueue:
+                      interlaced: bool,
+                      geometry: ConvGeometry = GEOM_3X3
+                      ) -> BatchedEventQueue:
     """Sort-free queue compaction from column-bank occupancy.
 
-    il_flat: (N, 9, HB*WB) bool — per-queue occupancy in interlaced
+    il_flat: (N, n_banks, HB*WB) bool — per-queue occupancy in interlaced
     banks, cells in raster (I, J) order.  Each kept event's queue slot is
     its *rank* in the read order, computed with exclusive cumsums instead
     of a sort: within one column, (I, J) raster order equals (i, j) order
-    (i = 3I + s//3), so rank = columns-before + actives-before-in-column.
-    Truncation keeps ranks < min(capacity, H*W) — identical to the
-    ``build_aeq_batched`` tail drop.
+    (i = kh*I + s//kw), so rank = columns-before + actives-before-in-
+    column.  Truncation keeps ranks < min(capacity, H*W) — identical to
+    the ``build_aeq_batched`` tail drop.
     """
+    kh, kw = geometry.kh, geometry.kw
+    nb = geometry.n_banks
     n, _, cells = il_flat.shape
-    hb, wb = -(-h // 3), -(-w // 3)
+    hb, wb = -(-h // kh), -(-w // kw)
     take_n = min(capacity, h * w)
-    seg_full = jnp.sum(il_flat, axis=-1).astype(jnp.int32)         # (N, 9)
+    seg_full = jnp.sum(il_flat, axis=-1).astype(jnp.int32)         # (N, nb)
     count = jnp.sum(seg_full, axis=-1)                             # (N,)
     kept = jnp.minimum(count, take_n)
     rank_in_col = (jnp.cumsum(il_flat, axis=-1) - il_flat).astype(jnp.int32)
@@ -565,21 +608,23 @@ def _queues_from_cols(il_flat: jax.Array, h: int, w: int, capacity: int,
         rank = seg_off_full[:, :, None] + rank_in_col
     else:
         # raster read order: rank events by (i, j) irrespective of column
-        dense = deinterlace(il_flat.reshape(n, 9, hb, wb), (h, w))
+        dense = deinterlace(il_flat.reshape(n, nb, hb, wb), (h, w), geometry)
         flat = dense.reshape(n, h * w)
         rank_flat = (jnp.cumsum(flat, axis=-1) - flat).astype(jnp.int32)
-        rank = interlace(rank_flat.reshape(n, h, w)).reshape(n, 9, cells)
+        rank = interlace(rank_flat.reshape(n, h, w),
+                         geometry).reshape(n, nb, cells)
     # cell (s, I, J) -> pixel (i, j); pad cells (i >= h or j >= w) are
     # never occupied, so their garbage coords are masked by ``keep``
-    s = jnp.arange(9, dtype=jnp.int32)[:, None]
+    s = jnp.arange(nb, dtype=jnp.int32)[:, None]
     cell = jnp.arange(cells, dtype=jnp.int32)[None, :]
-    ii = 3 * (cell // wb) + s // 3                                 # (9, cells)
-    jj = 3 * (cell % wb) + s % 3
+    ii = kh * (cell // wb) + s // kw                              # (nb, cells)
+    jj = kw * (cell % wb) + s % kw
     cell_coords = jnp.stack(
-        [jnp.broadcast_to(ii, (9, cells)), jnp.broadcast_to(jj, (9, cells))],
-        axis=-1).reshape(9 * cells, 2)
+        [jnp.broadcast_to(ii, (nb, cells)),
+         jnp.broadcast_to(jj, (nb, cells))],
+        axis=-1).reshape(nb * cells, 2)
     keep = il_flat & (rank < kept[:, None, None])
-    pos = jnp.where(keep, rank, capacity).reshape(n, 9 * cells)    # drop pads
+    pos = jnp.where(keep, rank, capacity).reshape(n, nb * cells)   # drop pads
 
     def scatter_one(p):
         return (jnp.full((capacity, 2), -1, jnp.int32)
@@ -596,7 +641,8 @@ def _queues_from_cols(il_flat: jax.Array, h: int, w: int, capacity: int,
 
 
 def stream_queues(state: StreamState, capacity: int, hw: tuple[int, int], *,
-                  interlaced: bool = True) -> BatchedEventQueue:
+                  interlaced: bool = True,
+                  geometry: ConvGeometry = GEOM_3X3) -> BatchedEventQueue:
     """Finalize ingested events into AEQs — sort-free, bit-exact vs the
     binned path.
 
@@ -609,21 +655,23 @@ def stream_queues(state: StreamState, capacity: int, hw: tuple[int, int], *,
     whole point of ingesting into the interlaced layout.
     """
     h, w = hw
-    *lead_tc, nine, hb, wb = state.banks.shape
-    if nine != 9:
-        raise ValueError(f"StreamState banks must carry 9 columns, "
-                         f"got {nine}")
-    if (hb, wb) != (-(-h // 3), -(-w // 3)):
+    kh, kw = geometry.kh, geometry.kw
+    nb = geometry.n_banks
+    *lead_tc, got_nb, hb, wb = state.banks.shape
+    if got_nb != nb:
+        raise ValueError(f"StreamState banks must carry {nb} columns for "
+                         f"the {kh}x{kw} geometry, got {got_nb}")
+    if (hb, wb) != (-(-h // kh), -(-w // kw)):
         raise ValueError(f"StreamState banks {(hb, wb)} do not match "
-                         f"hw={hw}")
+                         f"hw={hw} under the {kh}x{kw} geometry")
     n = int(np.prod(lead_tc, dtype=np.int64)) if lead_tc else 1
-    il_flat = state.banks.reshape(n, 9, hb * wb)
-    q = _queues_from_cols(il_flat, h, w, capacity, interlaced)
+    il_flat = state.banks.reshape(n, nb, hb * wb)
+    q = _queues_from_cols(il_flat, h, w, capacity, interlaced, geometry)
     return BatchedEventQueue(
         coords=q.coords.reshape(*lead_tc, capacity, 2),
         valid=q.valid.reshape(*lead_tc, capacity),
         count=q.count.reshape(tuple(lead_tc)),
         seg_offsets=None if q.seg_offsets is None
-        else q.seg_offsets.reshape(*lead_tc, 9),
+        else q.seg_offsets.reshape(*lead_tc, nb),
         seg_counts=None if q.seg_counts is None
-        else q.seg_counts.reshape(*lead_tc, 9))
+        else q.seg_counts.reshape(*lead_tc, nb))

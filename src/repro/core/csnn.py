@@ -182,7 +182,8 @@ def snn_apply(
             ci += 1
         else:
             p = params[f"fc{idx}"]
-            logits = run_fc_head(x, p["w"], p["b"])
+            logits = run_fc_head(x, p["w"], p["b"],
+                                 capacity=plan.fc_capacity)
     return (logits, stats) if collect_stats else logits
 
 
@@ -238,7 +239,7 @@ def snn_step_chunk(
     input time steps for every batch row (``plan.chunk_steps`` per call;
     any chunk length works, but the serving engine keeps one shape so
     nothing retraces) — OR a :class:`~repro.core.aeq.StreamState` with
-    banks (B, t_chunk, C_in, 9, HB, WB): pre-ingested raw DVS events
+    banks (B, t_chunk, C_in, n_banks, HB, WB): pre-ingested raw DVS events
     (``aeq.append_events*``), in which case the first conv layer consumes
     the input queues finalized sort-free from the banks instead of
     re-compacting dense frames (bit-exact either way;
@@ -276,7 +277,8 @@ def snn_step_chunk(
     return (state, stats) if collect_stats else state
 
 
-def snn_readout(params: dict, state: CSNNState, cfg: CSNNConfig) -> jax.Array:
+def snn_readout(params: dict, state: CSNNState, cfg: CSNNConfig,
+                plan: Optional[NetworkPlan] = None) -> jax.Array:
     """Classification-unit readout of a (fully or partially stepped) state.
 
     Matches ``run_fc_head_batched`` on the accumulated drive: the output
@@ -284,12 +286,24 @@ def snn_readout(params: dict, state: CSNNState, cfg: CSNNConfig) -> jax.Array:
     thresholded.  After all T steps the result is bit-exact vs the
     monolithic ``snn_apply_batched`` logits — ``fc_drive`` holds exact
     spike counts, so the (B, D) contraction sees identical values.
+    When ``plan.fc_capacity`` is set, the drive routes through the
+    event-driven sparse head (``sparse_ffn.event_readout``) instead:
+    top-``fc_capacity`` AEQ compaction scattered back into the same
+    dense contraction — bit-exact while the queue covers every nonzero
+    drive entry (tests/test_sparse_ffn.py).
     """
+    fc_capacity = plan.fc_capacity if plan is not None else None
     logits = None
     for idx, spec in enumerate(cfg.layers):
         if not isinstance(spec, ConvSpec):
             p = params[f"fc{idx}"]
-            logits = state.fc_drive @ p["w"] + cfg.t_steps * p["b"]
+            drive = state.fc_drive
+            if fc_capacity is not None:
+                from .sparse_ffn import event_readout
+                logits = (event_readout(drive, p["w"], capacity=fc_capacity)
+                          + cfg.t_steps * p["b"])
+            else:
+                logits = drive @ p["w"] + cfg.t_steps * p["b"]
     if logits is None:
         raise ValueError("cfg has no FC head layer")
     return logits
@@ -353,7 +367,7 @@ def snn_apply_batched(
             params, state, in_spikes[:, k:k + chunk], cfg, plan,
             backend=backend, collect_stats=True)
         chunk_stats.append(stats)
-    logits = snn_readout(params, state, cfg)
+    logits = snn_readout(params, state, cfg, plan)
     if not collect_stats:
         return logits
     return logits, _merge_chunk_stats(chunk_stats)
@@ -378,13 +392,15 @@ def _conv_stack_batched(params: dict, x: jax.Array, cfg: CSNNConfig,
     return x, stats
 
 
-def _fc_head_batched(params: dict, x: jax.Array, cfg: CSNNConfig) -> jax.Array:
+def _fc_head_batched(params: dict, x: jax.Array, cfg: CSNNConfig,
+                     fc_capacity: Optional[int] = None) -> jax.Array:
     logits = None
     for idx, spec in enumerate(cfg.layers):
         if not isinstance(spec, ConvSpec):
             p = params[f"fc{idx}"]
             # last head wins, matching snn_apply's per-layer loop exactly
-            logits = run_fc_head_batched(x, p["w"], p["b"])
+            logits = run_fc_head_batched(x, p["w"], p["b"],
+                                         capacity=fc_capacity)
     if logits is None:
         raise ValueError("cfg has no FC head layer")
     return logits
@@ -453,7 +469,7 @@ def snn_apply_sharded(
     # device matmuls, whose reduction order differs from the unsharded
     # (B, D) contraction in the last bit.
     x = jax.device_put(x, mesh.devices.flatten()[0])
-    logits = _fc_head_batched(params, x, cfg)
+    logits = _fc_head_batched(params, x, cfg, plan.fc_capacity)
     return (logits, stats) if collect_stats else logits
 
 

@@ -49,13 +49,14 @@ tests/test_interlaced.py.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .aeq import EventQueue
+from .geometry import GEOM_3X3, ConvGeometry
 
 _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
 
@@ -70,15 +71,20 @@ def _acc(patch: jax.Array, contrib: jax.Array) -> jax.Array:
     return jnp.clip(wide, sat[0], sat[1]).astype(patch.dtype)
 
 
-def pad_vm(vm: jax.Array) -> jax.Array:
-    """Add the 1-element halo: (H, W, ...) -> (H+2, W+2, ...)."""
-    pad = [(1, 1), (1, 1)] + [(0, 0)] * (vm.ndim - 2)
+def pad_vm(vm: jax.Array, geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """Add the SAME-conv halo: (H, W, ...) -> (H+2*hh, W+2*hw, ...) with
+    (hh, hw) = (kh//2, kw//2) of the geometry (1 each side for 3x3)."""
+    hh, hw = geometry.halo
+    pad = [(hh, hh), (hw, hw)] + [(0, 0)] * (vm.ndim - 2)
     return jnp.pad(vm, pad)
 
 
-def crop_vm(vm_padded: jax.Array) -> jax.Array:
-    """Remove the halo."""
-    return vm_padded[1:-1, 1:-1, ...]
+def crop_vm(vm_padded: jax.Array,
+            geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """Remove the halo (identity for the k=1 zero halo)."""
+    hh, hw = geometry.halo
+    hp, wp = vm_padded.shape[:2]
+    return vm_padded[hh:hp - hh, hw:wp - hw, ...]
 
 
 def rotate_kernel(kernel: jax.Array) -> jax.Array:
@@ -101,18 +107,30 @@ def _event_step(vm: jax.Array, i, j, v, k_rot: jax.Array, zero: jax.Array,
     return jax.lax.dynamic_update_slice(vm, _acc(patch, contrib), start)
 
 
+def _kernel_geometry(kernel: jax.Array, where: str) -> ConvGeometry:
+    """Geometry implied by the kernel's (kh, kw, ...) shape; rejects even
+    windows with an actionable message naming the planned geometry."""
+    try:
+        return ConvGeometry.from_kernel_shape(kernel.shape)
+    except ValueError as e:
+        raise ValueError(
+            f"{where}: kernel shape {tuple(kernel.shape)} does not define "
+            f"a valid interlaced geometry ({e})") from None
+
+
 def apply_events(vm_padded: jax.Array, queue: EventQueue, kernel: jax.Array) -> jax.Array:
     """Accumulate one event queue into padded membrane potentials.
 
-    vm_padded: (H+2, W+2) or (H+2, W+2, C_out)  — float or int dtype.
-    kernel:    (3, 3) or (3, 3, C_out)          — matching trailing dims;
-               *unrotated* (the rotation is applied here, as in Fig. 4).
+    vm_padded: (H+2hh, W+2hw) or (..., C_out)   — float or int dtype,
+               halo-padded for the kernel's geometry (1 per side for 3x3).
+    kernel:    (kh, kw) or (kh, kw, C_out)      — matching trailing dims;
+               odd window; *unrotated* (the rotation is applied here, as
+               in Fig. 4).
     """
-    if kernel.shape[:2] != (3, 3):
-        raise ValueError(f"event conv is specialized for 3x3 kernels, got {kernel.shape}")
+    geom = _kernel_geometry(kernel, "apply_events")
     k_rot = rotate_kernel(kernel).astype(vm_padded.dtype)
     zero = jnp.zeros_like(k_rot)
-    update_sizes = (3, 3) + k_rot.shape[2:]
+    update_sizes = geom.window + k_rot.shape[2:]
 
     def body(step, vm):
         return _event_step(vm, queue.coords[step, 0], queue.coords[step, 1],
@@ -131,9 +149,10 @@ def apply_events_blocked(vm_padded: jax.Array, queue: EventQueue, kernel: jax.Ar
     """
     cap = queue.capacity
     n_blocks = -(-cap // block)
+    geom = _kernel_geometry(kernel, "apply_events_blocked")
     k_rot = rotate_kernel(kernel).astype(vm_padded.dtype)
     zero = jnp.zeros_like(k_rot)
-    update_sizes = (3, 3) + k_rot.shape[2:]
+    update_sizes = geom.window + k_rot.shape[2:]
 
     def event_body(step, vm):
         return _event_step(vm, queue.coords[step, 0], queue.coords[step, 1],
@@ -157,9 +176,9 @@ def apply_events_batched(vm_padded: jax.Array, coords: jax.Array,
                          kernel: jax.Array, *, block: int = 64) -> jax.Array:
     """Apply one event queue per batch member, early-exiting together.
 
-    vm_padded: (Q, H+2, W+2, ...) — one halo-padded tile per queue.
+    vm_padded: (Q, H+2hh, W+2hw, ...) — one halo-padded tile per queue.
     coords:    (Q, E, 2) int32;  valid: (Q, E) bool;  counts: (Q,) int32.
-    kernel:    (3, 3) or (3, 3, C_out) shared by every queue.
+    kernel:    (kh, kw) or (kh, kw, C_out) shared by every queue.
 
     Event step e updates all Q tiles at once (vectorized over the batch);
     blocks of ``block`` steps run under a while_loop bounded by
@@ -168,9 +187,10 @@ def apply_events_batched(vm_padded: jax.Array, coords: jax.Array,
     the skipped tail slots are all invalid and would contribute exact
     zeros.
     """
+    geom = _kernel_geometry(kernel, "apply_events_batched")
     k_rot = rotate_kernel(kernel).astype(vm_padded.dtype)
     zero = jnp.zeros_like(k_rot)
-    update_sizes = (3, 3) + k_rot.shape[2:]
+    update_sizes = geom.window + k_rot.shape[2:]
 
     apply_step = jax.vmap(
         lambda vm, i, j, v: _event_step(vm, i, j, v, k_rot, zero, update_sizes))
@@ -200,103 +220,124 @@ def apply_events_batched(vm_padded: jax.Array, coords: jax.Array,
 # Memory-interlaced event-parallel application (banked MemPot tiles).
 # ---------------------------------------------------------------------------
 
-def _interlace_tables():
+@lru_cache(maxsize=None)
+def _interlace_tables(kh: int = 3, kw: int = 3):
     """Static (column, bank) routing of the interlaced conv update.
 
-    For an event of interlace column s = 3(i%3)+(j%3), kernel tap
-    (a, b) in {0,1,2}^2 writes padded cell (i+a, j+b), which always lands
-    in padded-space bank t = 3*((i%3+a)%3) + (j%3+b)%3 at a fixed macro
-    shift relative to the event's centre bank.  Tables (all 9x9, indexed
-    [s, t]): PERM = flat tap index a*3+b feeding bank t from column s;
-    DI/DJ = macro-cell shift of the write vs the centre mask;
-    COL_BANK[s] = padded-space bank holding column-s centres (i+1, j+1).
+    For an event of interlace column s = kw*(i%kh)+(j%kw), kernel tap
+    (a, b) in [0,kh)x[0,kw) writes padded cell (i+a, j+b), which always
+    lands in padded-space bank t = kw*((i%kh+a)%kh) + (j%kw+b)%kw at a
+    fixed macro shift relative to the event's centre bank.  Tables (all
+    n_banks x n_banks, indexed [s, t]): PERM = flat tap index a*kw+b
+    feeding bank t from column s; DI/DJ = macro-cell shift of the write
+    vs the centre mask — provably in {-1, 0, +1} for every odd window,
+    which is what lets ``shifted_bank_masks`` get by with a single
+    macro-cell pad at any k; COL_BANK[s] = padded-space bank holding
+    column-s centres (i+hh, j+hw).
     """
-    perm = np.zeros((9, 9), np.int64)
-    di = np.zeros((9, 9), np.int64)
-    dj = np.zeros((9, 9), np.int64)
-    col_bank = np.zeros(9, np.int64)
-    for s in range(9):
-        si, sj = divmod(s, 3)
-        col_bank[s] = ((si + 1) % 3) * 3 + (sj + 1) % 3
-        for t in range(9):
-            ti, tj = divmod(t, 3)
-            a = (ti - si) % 3
-            b = (tj - sj) % 3
-            perm[s, t] = a * 3 + b
-            di[s, t] = (si + a) // 3 - (si + 1) // 3
-            dj[s, t] = (sj + b) // 3 - (sj + 1) // 3
+    hh, hw = kh // 2, kw // 2
+    nb = kh * kw
+    perm = np.zeros((nb, nb), np.int64)
+    di = np.zeros((nb, nb), np.int64)
+    dj = np.zeros((nb, nb), np.int64)
+    col_bank = np.zeros(nb, np.int64)
+    for s in range(nb):
+        si, sj = divmod(s, kw)
+        col_bank[s] = ((si + hh) % kh) * kw + (sj + hw) % kw
+        for t in range(nb):
+            ti, tj = divmod(t, kw)
+            a = (ti - si) % kh
+            b = (tj - sj) % kw
+            perm[s, t] = a * kw + b
+            di[s, t] = (si + a) // kh - (si + hh) // kh
+            dj[s, t] = (sj + b) // kw - (sj + hw) // kw
     return perm, di, dj, col_bank
 
 
 _PERM, _DI, _DJ, _COL_BANK = _interlace_tables()
 
 
-def bank_vm(vm_padded: jax.Array) -> jax.Array:
-    """(..., Hp, Wp, C) halo-padded tile -> (..., 9, HB, WB, C) RAM banks.
+def bank_vm(vm_padded: jax.Array,
+            geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """(..., Hp, Wp, C) halo-padded tile -> (..., n_banks, HB, WB, C)
+    RAM banks.
 
-    Bank t = 3*(r%3) + (c%3) of padded position (r, c); macro address
-    (r//3, c//3).  Hp/Wp are zero-padded up to multiples of 3 (the extra
-    rows are never written — events write rows <= Hp-1 — and are dropped
-    again by ``unbank_vm``).  Same banking as ``aeq.interlace``, with the
-    trailing channel axis riding along.
+    Bank t = kw*(r%kh) + (c%kw) of padded position (r, c); macro address
+    (r//kh, c//kw).  Hp/Wp are zero-padded up to window multiples (the
+    extra rows are never written — events write rows <= Hp-1 — and are
+    dropped again by ``unbank_vm``).  Same banking as ``aeq.interlace``,
+    with the trailing channel axis riding along.
     """
+    kh, kw = geometry.kh, geometry.kw
     *lead, hp, wp, c = vm_padded.shape
-    hb, wb = -(-hp // 3), -(-wp // 3)
+    hb, wb = -(-hp // kh), -(-wp // kw)
     nl = len(lead)
     v = jnp.pad(vm_padded,
-                [(0, 0)] * nl + [(0, 3 * hb - hp), (0, 3 * wb - wp), (0, 0)])
-    v = v.reshape(*lead, hb, 3, wb, 3, c)
+                [(0, 0)] * nl + [(0, kh * hb - hp), (0, kw * wb - wp),
+                                 (0, 0)])
+    v = v.reshape(*lead, hb, kh, wb, kw, c)
     v = v.transpose(*range(nl), nl + 1, nl + 3, nl, nl + 2, nl + 4)
-    return v.reshape(*lead, 9, hb, wb, c)
+    return v.reshape(*lead, kh * kw, hb, wb, c)
 
 
-def unbank_vm(vm_banked: jax.Array, hp: int, wp: int) -> jax.Array:
-    """Inverse of ``bank_vm``: (..., 9, HB, WB, C) -> (..., Hp, Wp, C)."""
+def unbank_vm(vm_banked: jax.Array, hp: int, wp: int,
+              geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """Inverse of ``bank_vm``: (..., n_banks, HB, WB, C) ->
+    (..., Hp, Wp, C)."""
+    kh, kw = geometry.kh, geometry.kw
     *lead, _, hb, wb, c = vm_banked.shape
     nl = len(lead)
-    v = vm_banked.reshape(*lead, 3, 3, hb, wb, c)
+    v = vm_banked.reshape(*lead, kh, kw, hb, wb, c)
     v = v.transpose(*range(nl), nl + 2, nl, nl + 3, nl + 1, nl + 4)
-    v = v.reshape(*lead, 3 * hb, 3 * wb, c)
+    v = v.reshape(*lead, kh * hb, kw * wb, c)
     return v[..., :hp, :wp, :]
 
 
-def shifted_bank_masks(masks: jax.Array) -> jax.Array:
+def shifted_bank_masks(masks: jax.Array,
+                       geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
     """Pre-shift bank occupancy masks into per-(column, bank) write masks.
 
-    masks: (..., 9, HB, WB) bool from ``aeq.build_bank_masks`` (bank
-    occupancy of the kept events' padded centres).  Returns
-    (..., 9 cols, 9 banks, HB, WB): entry [s, t, I, J] is True iff bank
-    t's cell (I, J) receives column s's tap — i.e. the centre mask of
-    column s shifted by the static (DI, DJ)[s, t] macro offset.  Built as
-    81 static slices of one zero-padded array and a single stack, so the
-    cost is one pass over the mask data; precompute it once per queue and
-    reuse across channel blocks.
+    masks: (..., n_banks, HB, WB) bool from ``aeq.build_bank_masks``
+    (bank occupancy of the kept events' padded centres).  Returns
+    (..., n_banks cols, n_banks banks, HB, WB): entry [s, t, I, J] is
+    True iff bank t's cell (I, J) receives column s's tap — i.e. the
+    centre mask of column s shifted by the static (DI, DJ)[s, t] macro
+    offset.  Built as n_banks^2 static slices of one zero-padded array
+    and a single stack (81 for 3x3), so the cost is one pass over the
+    mask data; precompute it once per queue and reuse across channel
+    blocks.  The single macro-cell pad suffices for every odd window
+    because DI/DJ stay in {-1, 0, +1} (see ``_interlace_tables``).
     """
+    perm, di_t, dj_t, col_bank = _interlace_tables(geometry.kh, geometry.kw)
+    nb = geometry.n_banks
     hb, wb = masks.shape[-2:]
     nl = masks.ndim - 3
     mp = jnp.pad(masks, [(0, 0)] * (nl + 1) + [(1, 1), (1, 1)])
     per_col = []
-    for s in range(9):
-        m = mp[..., _COL_BANK[s], :, :]
+    for s in range(nb):
+        m = mp[..., col_bank[s], :, :]
         per_bank = []
-        for t in range(9):
-            r0 = 1 - int(_DI[s, t])
-            c0 = 1 - int(_DJ[s, t])
+        for t in range(nb):
+            r0 = 1 - int(di_t[s, t])
+            c0 = 1 - int(dj_t[s, t])
             per_bank.append(m[..., r0:r0 + hb, c0:c0 + wb])
         per_col.append(jnp.stack(per_bank, axis=nl))
     return jnp.stack(per_col, axis=nl)
 
 
 def tap_matrix(kernel: jax.Array) -> jax.Array:
-    """(3, 3, ...) unrotated kernel -> (9 cols, 9 banks, ...) tap values.
+    """(kh, kw, ...) unrotated kernel -> (n_banks cols, n_banks banks,
+    ...) tap values.
 
     Entry [s, t] is the (already 180deg-rotated) tap that column-s events
     contribute to bank t.  One static gather; hoist it out of scan/loop
     bodies so the per-column select chain stays fusable.
     """
+    geom = _kernel_geometry(kernel, "tap_matrix")
+    perm, _, _, _ = _interlace_tables(geom.kh, geom.kw)
     k_rot = rotate_kernel(kernel)
-    flat = k_rot.reshape((9,) + k_rot.shape[2:])
-    return flat[_PERM]
+    flat = k_rot.reshape((geom.n_banks,) + k_rot.shape[2:])
+    return flat[perm]
 
 
 def _acc_masked(bank: jax.Array, tap: jax.Array, mask: jax.Array) -> jax.Array:
@@ -322,25 +363,28 @@ def apply_banked_columns(vm_banked: jax.Array, smasks: jax.Array,
                          taps: jax.Array) -> jax.Array:
     """Apply one queue's events to a banked tile, one column at a time.
 
-    vm_banked: (..., 9, HB, WB, C) from ``bank_vm``.
-    smasks:    (..., 9 cols, 9 banks, HB, WB) from ``shifted_bank_masks``.
-    taps:      (9 cols, 9 banks, C) from ``tap_matrix`` (vm dtype).
+    vm_banked: (..., n_banks, HB, WB, C) from ``bank_vm``.
+    smasks:    (..., n_banks cols, n_banks banks, HB, WB) from
+               ``shifted_bank_masks``.
+    taps:      (n_banks cols, n_banks banks, C) from ``tap_matrix``
+               (vm dtype).
 
     Each column step applies ALL of that column's events at once
     (disjointness makes this exact: a cell receives at most one event per
-    column), and the s = 0..8 order reproduces the sequential queue order
-    per membrane cell, so the result equals ``apply_events`` bit for bit —
-    per-event int saturation included.  The loop nest runs BANK-major:
-    each of the 9 banks is pulled out once and receives its 9 column
-    contributions as a cache-resident multiply-add chain (a bank is 1/9th
-    of the tile), which is what makes the banked unit faster than the
-    per-event walk — RAM traffic is one read+write of the tile per queue
-    instead of one 3x3 patch round-trip per event.
+    column), and the s = 0..n_banks-1 order reproduces the sequential
+    queue order per membrane cell, so the result equals ``apply_events``
+    bit for bit — per-event int saturation included.  The loop nest runs
+    BANK-major: each bank is pulled out once and receives its n_banks
+    column contributions as a cache-resident multiply-add chain (a bank
+    is 1/n_banks of the tile), which is what makes the banked unit faster
+    than the per-event walk — RAM traffic is one read+write of the tile
+    per queue instead of one window-patch round-trip per event.
     """
+    nb = taps.shape[0]
     banks = []
-    for t in range(9):
+    for t in range(nb):
         bank = vm_banked[..., t, :, :, :]
-        for s in range(9):
+        for s in range(nb):
             bank = _acc_masked(bank, taps[s, t], smasks[..., s, t, :, :])
         banks.append(bank)
     return jnp.stack(banks, axis=-4)
@@ -350,19 +394,21 @@ def apply_events_banked(vm_padded: jax.Array, masks: jax.Array,
                         kernel: jax.Array) -> jax.Array:
     """Banked-path equivalent of ``apply_events`` for one tile.
 
-    vm_padded: (Hp, Wp) or (Hp, Wp, C); masks: (9, HB, WB) bank occupancy
-    of the kept events (``aeq.build_bank_masks``); kernel: (3, 3) or
-    (3, 3, C) unrotated.  Bit-exact vs ``apply_events`` on the queue of
-    the same events (tests/test_interlaced.py).
+    vm_padded: (Hp, Wp) or (Hp, Wp, C); masks: (n_banks, HB, WB) bank
+    occupancy of the kept events (``aeq.build_bank_masks``); kernel:
+    (kh, kw) or (kh, kw, C) unrotated.  Bit-exact vs ``apply_events`` on
+    the queue of the same events (tests/test_interlaced.py).
     """
+    geom = _kernel_geometry(kernel, "apply_events_banked")
     squeeze = vm_padded.ndim == 2
     vm = vm_padded[..., None] if squeeze else vm_padded
     k = kernel[..., None] if squeeze else kernel
     hp, wp = vm.shape[-3:-1]
     out = unbank_vm(
-        apply_banked_columns(bank_vm(vm), shifted_bank_masks(masks),
+        apply_banked_columns(bank_vm(vm, geom),
+                             shifted_bank_masks(masks, geom),
                              tap_matrix(k).astype(vm.dtype)),
-        hp, wp)
+        hp, wp, geom)
     return out[..., 0] if squeeze else out
 
 
@@ -370,23 +416,26 @@ def apply_events_banked_batched(vm_padded: jax.Array, masks: jax.Array,
                                 kernel: jax.Array) -> jax.Array:
     """Banked path over a stack of tiles: one queue per batch member.
 
-    vm_padded: (Q, Hp, Wp, C); masks: (Q, 9, HB, WB); kernel: (3, 3, C)
-    shared by every queue.  Pure elementwise selects, so the batch
-    dimension vectorizes for free — bit-exact vs per-queue
+    vm_padded: (Q, Hp, Wp, C); masks: (Q, n_banks, HB, WB); kernel:
+    (kh, kw, C) shared by every queue.  Pure elementwise selects, so the
+    batch dimension vectorizes for free — bit-exact vs per-queue
     ``apply_events`` (no shared early-exit bound is needed: empty columns
     contribute all-False masks).
     """
+    geom = _kernel_geometry(kernel, "apply_events_banked_batched")
     hp, wp = vm_padded.shape[-3:-1]
     return unbank_vm(
-        apply_banked_columns(bank_vm(vm_padded), shifted_bank_masks(masks),
+        apply_banked_columns(bank_vm(vm_padded, geom),
+                             shifted_bank_masks(masks, geom),
                              tap_matrix(kernel).astype(vm_padded.dtype)),
-        hp, wp)
+        hp, wp, geom)
 
 
 def dense_conv(fmap: jax.Array, kernel: jax.Array) -> jax.Array:
-    """Sliding-window oracle: SAME conv of a binary fmap with a 3x3 kernel.
+    """Sliding-window oracle: SAME conv of a binary fmap with a k x k
+    kernel.
 
-    fmap: (H, W) bool/float; kernel: (3, 3) or (3, 3, C_out).
+    fmap: (H, W) bool/float; kernel: (kh, kw) or (kh, kw, C_out).
     Returns (H, W) or (H, W, C_out) in kernel dtype.  This is the
     frame-based baseline the paper compares against (SIES-style).
     """

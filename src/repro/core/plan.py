@@ -22,8 +22,9 @@ Sizing rules (all static, all pure functions of geometry + calibration):
 * **channel_block** — snapped to a divisor of C_out (``snap_divisor``).
 * **block_e** — autotuned from the capacity and the VMEM budget
   (``kernels.event_conv.ops.autotune_block_e``) unless pinned.
-* **vm_tile** — the (H+2, W+2, channel_block) halo-padded MemPot tile
-  held VMEM-resident per conv-unit launch.
+* **vm_tile** — the (H+2·(kh//2), W+2·(kw//2), channel_block)
+  halo-padded MemPot tile held VMEM-resident per conv-unit launch
+  (H+2, W+2 for the paper's 3x3 window).
 * **event_par** — the memory-interlaced event-parallel width (paper
   Fig. 6 cashed in): 1 keeps the sequential one-event-at-a-time conv
   unit; > 1 selects the interlace-aware kernel variants, which apply
@@ -55,6 +56,7 @@ from repro.kernels.event_conv.ops import (autotune_block_e,
                                           snap_divisor)
 
 from .aeq import calibrate_capacity, interlaced_capacity
+from .geometry import GEOM_3X3, ConvGeometry
 
 _VM_DTYPES = {None: "float32", 8: "int8", 16: "int16"}
 
@@ -127,7 +129,8 @@ class LayerPlan:
     capacity: int                 # effective AEQ depth per (t, c_in) queue
     channel_block: int            # output channels per MemPot tile
     block_e: int                  # event-block size (divides queue_depth)
-    vm_tile: tuple[int, int, int]  # halo-padded MemPot tile (H+2, W+2, cb)
+    vm_tile: tuple[int, int, int]  # halo-padded MemPot tile
+                                  # (H+2*(kh//2), W+2*(kw//2), cb)
     sat_bits: Optional[int] = None  # 8/16-bit saturating datapath, None=f32
     event_par: int = 1            # same-column events applied in parallel
                                   # (1 = sequential legacy conv unit)
@@ -141,6 +144,9 @@ class LayerPlan:
     stream_finalize: Optional[str] = None  # streamed-queue finalization
                                   # ("ranks"/"sort"; input layer only,
                                   # None = "ranks")
+    geometry: ConvGeometry = GEOM_3X3  # conv window + interlace layout
+                                  # (kh x kw, n_banks = kh*kw membrane
+                                  # banks; the paper's 3x3 by default)
 
     def resolve_variant(self, backend: str = "jax") -> str:
         """Effective kernel variant for this layer under ``backend``.
@@ -168,7 +174,8 @@ class LayerPlan:
         """Allocated queue slots: ``capacity``, or the segment-padded
         depth (``aeq.interlaced_capacity``) when the interlaced Pallas
         layout is in play (``event_par`` > 1)."""
-        return interlaced_capacity(self.capacity, self.event_par)
+        return interlaced_capacity(self.capacity, self.event_par,
+                                   self.geometry.n_banks)
 
     @property
     def event_slots(self) -> int:
@@ -185,7 +192,9 @@ class LayerPlan:
         var = f", variant={self.variant}" if self.variant is not None else ""
         fin = (f", finalize={self.stream_finalize}"
                if self.stream_finalize is not None else "")
-        return (f"LayerPlan({self.name}: {h}x{w}x{self.c_in} -> "
+        geo = ("" if self.geometry == GEOM_3X3
+               else f", k={self.geometry.describe()}")
+        return (f"LayerPlan({self.name}: {h}x{w}x{self.c_in}{geo} -> "
                 f"{oh}x{ow}x{self.c_out}{pool}, cap={self.capacity}, "
                 f"cb={self.channel_block}, block_e={self.block_e}, "
                 f"vm={self.vm_tile}, "
@@ -202,6 +211,9 @@ class NetworkPlan:
     batch_axis: str = "batch"       # mesh axis snn_apply_sharded shards over
     t_chunk: Optional[int] = None   # time steps per snn_step_chunk call
                                     # (None = t_steps: one monolithic chunk)
+    fc_capacity: Optional[int] = None  # event-driven FC readout queue depth
+                                    # (sparse_ffn.event_readout opt-in;
+                                    # None = dense classification head)
 
     @property
     def chunk_steps(self) -> int:
@@ -238,12 +250,24 @@ class NetworkPlan:
                 or self.t_steps % self.t_chunk != 0):
             raise ValueError(
                 f"t_chunk={self.t_chunk} must divide t_steps={self.t_steps}")
+        if self.fc_capacity is not None:
+            last = self.layers[-1]
+            d = last.out_hw[0] * last.out_hw[1] * last.c_out
+            if not 1 <= self.fc_capacity <= d:
+                raise ValueError(
+                    f"fc_capacity={self.fc_capacity} must be in [1, D={d}] "
+                    f"(the flattened final conv output feeding the head)")
         hw, c_in = tuple(cfg.input_hw), cfg.input_channels
         for lp, (idx, spec) in zip(self.layers, conv_specs):
             if lp.in_hw != hw or lp.c_in != c_in or lp.c_out != spec.channels:
                 raise ValueError(f"{lp!r} does not match cfg layer {idx} "
                                  f"(in_hw={hw}, c_in={c_in}, "
                                  f"c_out={spec.channels})")
+            if lp.geometry.window != (spec.kernel, spec.kernel):
+                raise ValueError(
+                    f"{lp!r} geometry {lp.geometry.describe()} does not "
+                    f"match cfg layer {idx} kernel {spec.kernel}x"
+                    f"{spec.kernel}")
             if lp.ingest_depth is not None and not (
                     1 <= lp.ingest_depth <= self.t_steps):
                 raise ValueError(
@@ -281,6 +305,7 @@ def plan_conv_layer(
     ingest_depth: Optional[int] = None,
     variant: Optional[str] = None,
     stream_finalize: Optional[str] = None,
+    geometry: ConvGeometry = GEOM_3X3,
 ) -> LayerPlan:
     """Derive one conv layer's plan from its geometry.
 
@@ -294,19 +319,22 @@ def plan_conv_layer(
     sequential conv-unit schedule (and with it the legacy shims'
     bit-exactness-by-identity).
     """
+    geometry.require_event_compatible(f"plan_conv_layer({name})")
     h, w = in_hw
+    hh, hw_ = geometry.halo
     cap = (effective_capacity(capacity, h * w) if per_layer
            else pad_capacity(capacity))
     cb = snap_divisor(c_out, channel_block)
-    vm_tile = (h + 2, w + 2, cb)
+    vm_tile = (h + 2 * hh, w + 2 * hw_, cb)
     vm_bytes = {None: 4, 8: 1, 16: 2}[sat_bits]
     kwargs = {"vmem_budget": vmem_budget} if vmem_budget else {}
     if event_par is None:
         ep = autotune_event_par(cap, (max(batch_tile, 1),) + vm_tile,
-                                vm_bytes=vm_bytes, **kwargs)
+                                vm_bytes=vm_bytes, geometry=geometry,
+                                **kwargs)
     else:
         ep = max(1, int(event_par))
-    depth = interlaced_capacity(cap, ep)
+    depth = interlaced_capacity(cap, ep, geometry.n_banks)
     if block_e is None:
         be = autotune_block_e(depth, (max(batch_tile, 1),) + vm_tile,
                               vm_bytes=vm_bytes, **kwargs)
@@ -348,7 +376,7 @@ def plan_conv_layer(
                      sat_bits=sat_bits, event_par=ep,
                      ingest_capacity=ingest_capacity,
                      ingest_depth=ingest_depth, variant=variant,
-                     stream_finalize=stream_finalize)
+                     stream_finalize=stream_finalize, geometry=geometry)
 
 
 def plan_network(
@@ -371,6 +399,7 @@ def plan_network(
     ingest_capacity: Optional[int] = None,
     variant: Optional[str] | Sequence[Optional[str]] = None,
     stream_finalize: Optional[str] = None,
+    fc_capacity: Optional[int] = None,
     tune: str = "analytic",
     tune_config=None,
     cache_path=None,
@@ -410,6 +439,13 @@ def plan_network(
     input layer (:data:`STREAM_FINALIZE`) — both are pure perf knobs,
     bit-exact across every setting.
 
+    ``fc_capacity`` opts the classification head into the event-driven
+    sparse readout (``sparse_ffn.event_readout``): the accumulated FC
+    drive is top-k-compacted to that queue depth and scattered back into
+    the dense contraction's operand — bit-exact vs the dense head
+    whenever the queue covers every nonzero drive entry (size it with
+    ``aeq.calibrate_capacity`` over ``sparse_ffn.drive_active_counts``).
+
     ``tune`` selects how the perf knobs are derived: ``"analytic"`` (the
     default) keeps the closed-form VMEM model above; ``"measured"``
     micro-benchmarks candidate (block_e, event_par, t_chunk, variant)
@@ -435,7 +471,8 @@ def plan_network(
                     per_layer=per_layer, vmem_budget=vmem_budget,
                     t_chunk=t_chunk, event_par=event_par, ingest=ingest,
                     ingest_capacity=ingest_capacity, variant=variant,
-                    stream_finalize=stream_finalize)
+                    stream_finalize=stream_finalize,
+                    fc_capacity=fc_capacity)
         return tune_network(cfg, mode=tune, base=base, config=tune_config,
                             cache_path=cache_path)
     from .csnn import ConvSpec, conv_out_hw
@@ -483,8 +520,9 @@ def plan_network(
             vmem_budget=vmem_budget, event_par=eps[ci],
             ingest_capacity=ing_cap, ingest_depth=ing_depth,
             variant=variants[ci],
-            stream_finalize=stream_finalize if ci == 0 else None))
+            stream_finalize=stream_finalize if ci == 0 else None,
+            geometry=ConvGeometry(spec.kernel, spec.kernel)))
         hw, c_in = conv_out_hw(hw, spec), spec.channels
     return NetworkPlan(layers=tuple(plans), t_steps=cfg.t_steps,
                        batch_tile=batch_tile, batch_axis=batch_axis,
-                       t_chunk=t_chunk)
+                       t_chunk=t_chunk, fc_capacity=fc_capacity)

@@ -90,16 +90,19 @@ class ConvCarry(NamedTuple):
     split/merge happens inside the chunk runner.
     """
 
-    vm: jax.Array     # (B, H+2, W+2, C_out) membrane potentials, halo-padded
+    vm: jax.Array     # (B, H+2hh, W+2hw, C_out) membrane potentials,
+                      # halo-padded by the plan geometry (hh=kh//2, hw=kw//2)
     fired: jax.Array  # (B, H, W, C_out) spike-indicator bits
 
 
 def init_conv_carry(lp: LayerPlan, batch: int, vm_dtype=None) -> ConvCarry:
     """Fresh (all-zero) carry for one conv layer and ``batch`` samples."""
     h, w = lp.in_hw
+    hh, hw = lp.geometry.halo
     dt = lp.vm_dtype if vm_dtype is None else vm_dtype
-    return ConvCarry(vm=jnp.zeros((batch, h + 2, w + 2, lp.c_out), dt),
-                     fired=jnp.zeros((batch, h, w, lp.c_out), jnp.bool_))
+    return ConvCarry(
+        vm=jnp.zeros((batch, h + 2 * hh, w + 2 * hw, lp.c_out), dt),
+        fired=jnp.zeros((batch, h, w, lp.c_out), jnp.bool_))
 
 
 def run_conv_layer(
@@ -143,7 +146,8 @@ def run_conv_layer_planned(
     """Run one spiking conv layer for all T steps, Algorithm-1 style.
 
     spikes_in: (T, H, W, C_in) bool — the previous layer's output spikes.
-    kernels:   (3, 3, C_in, C_out) — *unrotated* trained weights.
+    kernels:   (kh, kw, C_in, C_out) — *unrotated* trained weights; the
+               window must match ``lp.geometry`` (3x3 in the paper).
     bias:      (C_out,) — integrated once per time step by the threshold unit.
     lp:        the layer's static resource plan (queue depth, channel
                block, event block, membrane tile — see core/plan.py).
@@ -158,36 +162,39 @@ def run_conv_layer_planned(
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
     variant = lp.resolve_variant(backend)
     banked = variant == "banked-jax"
+    geom = lp.geometry
+    hh, hw_ = geom.halo
     fmaps = spikes_in.transpose(0, 3, 1, 2)  # (T, C_in, H, W)
     if banked:
         # interlaced event-parallel path: sort-free bank-mask compaction,
         # write masks pre-shifted once and reused by every channel block
-        events = build_bank_masks(fmaps, lp.capacity)
-        smasks = shifted_bank_masks(events.masks)  # (T, C_in, 9, 9, hb, wb)
+        events = build_bank_masks(fmaps, lp.capacity, geom)
+        # (T, C_in, n_banks cols, n_banks banks, hb, wb)
+        smasks = shifted_bank_masks(events.masks, geom)
         counts = events.count
     else:
-        queues = build_aeq_batched(fmaps, lp.capacity)
+        queues = build_aeq_batched(fmaps, lp.capacity, geometry=geom)
         if lp.event_par > 1:
-            queues = segment_pad(queues, lp.event_par)
+            queues = segment_pad(queues, lp.event_par, geom)
         counts = queues.count
 
     def run_block(kernel_block: jax.Array, bias_block: jax.Array) -> jax.Array:
-        # kernel_block: (3, 3, C_in, B); bias_block: (B,)
+        # kernel_block: (kh, kw, C_in, B); bias_block: (B,)
         block = kernel_block.shape[-1]
-        vm0 = pad_vm(jnp.zeros((h, w, block), vm_dtype))  # MemPot, reused (Alg. 1 l.2)
+        vm0 = pad_vm(jnp.zeros((h, w, block), vm_dtype), geom)  # MemPot, reused (Alg. 1 l.2)
         fired0 = jnp.zeros((h, w, block), jnp.bool_)
-        if banked:  # (C_in, 9 cols, 9 banks, block) tap routing, hoisted
+        if banked:  # (C_in, cols, banks, block) tap routing, hoisted
             taps = jnp.moveaxis(tap_matrix(kernel_block), 2, 0).astype(vm_dtype)
 
         def apply_all_cins(vm, t):
             if banked:
-                vb = bank_vm(vm)
+                vb = bank_vm(vm, geom)
                 vb = jax.lax.fori_loop(
                     0, c_in,
                     lambda ci, vb: apply_banked_columns(vb, smasks[t, ci],
                                                         taps[ci]),
                     vb)
-                return unbank_vm(vb, h + 2, w + 2)
+                return unbank_vm(vb, h + 2 * hh, w + 2 * hw_, geom)
 
             def per_cin(ci, vm):
                 if variant == "interlaced-pallas":
@@ -213,7 +220,7 @@ def run_conv_layer_planned(
         def time_step(carry, t):
             vm, fired = carry
             vm = apply_all_cins(vm, t)
-            inner = crop_vm(vm)
+            inner = crop_vm(vm, geom)
 
             def thresh_one(v, f, b):
                 r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=lp.sat_bits)
@@ -221,14 +228,15 @@ def run_conv_layer_planned(
 
             v_new, fired, spk = jax.vmap(thresh_one, in_axes=(2, 2, 0), out_axes=2)(
                 inner, fired, bias_block)
-            vm = vm.at[1:-1, 1:-1, :].set(v_new)
+            vm = vm.at[hh:h + hh, hw_:w + hw_, :].set(v_new)
             return (vm, fired), spk
 
         (_, _), spikes = jax.lax.scan(time_step, (vm0, fired0), jnp.arange(t_steps))
         return spikes  # (T, H, W, B)
 
-    kb = kernels.reshape(3, 3, c_in, c_out // channel_block, channel_block)
-    kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, 3, 3, C_in, B)
+    kh, kw = kernels.shape[:2]
+    kb = kernels.reshape(kh, kw, c_in, c_out // channel_block, channel_block)
+    kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, kh, kw, C_in, B)
     bb = bias.reshape(c_out // channel_block, channel_block)
     spikes_blocks = jax.lax.map(lambda kb_bb: run_block(*kb_bb), (kb, bb))
     spikes_out = jnp.moveaxis(spikes_blocks, 0, 3)  # (T, H, W, n_blocks, B)
@@ -407,15 +415,17 @@ def run_conv_layer_batched_chunk(
         # amortization across channel blocks AND time steps is what pays
         # for the banked path (recomputing per step would cost more than
         # the conv work it saves on wide-C_in layers).
-        events = build_bank_masks(fmaps, lp.capacity)
-        # (t, B, C_in, 9, 9, hb, wb) -> (t, C_in, B, ...) for scan + fori
+        events = build_bank_masks(fmaps, lp.capacity, lp.geometry)
+        # (t, B, C_in, cols, banks, hb, wb) -> (t, C_in, B, ...) for
+        # scan + fori
         queues = None
-        smasks = jnp.swapaxes(shifted_bank_masks(events.masks), 1, 2)
+        smasks = jnp.swapaxes(shifted_bank_masks(events.masks, lp.geometry),
+                              1, 2)
         counts = events.count
     else:
-        queues = build_aeq_batched(fmaps, lp.capacity)
+        queues = build_aeq_batched(fmaps, lp.capacity, geometry=lp.geometry)
         if lp.event_par > 1:
-            queues = segment_pad(queues, lp.event_par)
+            queues = segment_pad(queues, lp.event_par, lp.geometry)
         smasks, counts = None, queues.count
     sparsity = 1.0 - jnp.mean(spikes_in.astype(jnp.float32),
                               axis=(1, 2, 3, 4))
@@ -439,7 +449,7 @@ def run_conv_layer_batched_chunk_streamed(
     """Chunk runner over PRE-INGESTED input events instead of dense frames.
 
     stream: :class:`~repro.core.aeq.StreamState` with banks
-    (B, t_chunk, C_in, 9, HB, WB) — raw DVS events appended incrementally
+    (B, t_chunk, C_in, n_banks, HB, WB) — raw DVS events appended incrementally
     by ``aeq.append_events*``.  The conv-unit schedule, thresholding and
     carry handling are byte-for-byte the ones of
     :func:`run_conv_layer_batched_chunk`; only the queue construction
@@ -461,28 +471,30 @@ def run_conv_layer_batched_chunk_streamed(
     banked = variant == "banked-jax"
     # dense view only where the binned path itself is dense (sparsity
     # stat; bank-mask/sort compaction input) — a reshape/transpose, no sort
-    frames = stream_frames(stream, (h, w))         # (B, t, C_in, H, W)
+    frames = stream_frames(stream, (h, w), lp.geometry)  # (B, t, C_in, H, W)
     if banked:
         events = build_bank_masks(frames.transpose(1, 0, 2, 3, 4),
-                                  lp.capacity)
+                                  lp.capacity, lp.geometry)
         queues = None
-        smasks = jnp.swapaxes(shifted_bank_masks(events.masks), 1, 2)
+        smasks = jnp.swapaxes(shifted_bank_masks(events.masks, lp.geometry),
+                              1, 2)
         counts = events.count
     else:
         if lp.stream_finalize == "sort":
             # binned finalization: fused sort over the dense bank view,
             # already in the (t, B, C_in) lead layout the launches index
             queues = build_aeq_batched(frames.transpose(1, 0, 2, 3, 4),
-                                       lp.capacity)
+                                       lp.capacity, geometry=lp.geometry)
         else:
-            queues = stream_queues(stream, lp.capacity, (h, w))
+            queues = stream_queues(stream, lp.capacity, (h, w),
+                                   geometry=lp.geometry)
             # (B, t, C_in, ...) -> (t, B, C_in, ...): the layout the
             # per-(t, c_in) kernel launches below index
             queues = BatchedEventQueue(*(None if x is None
                                          else jnp.swapaxes(x, 0, 1)
                                          for x in queues))
         if lp.event_par > 1:
-            queues = segment_pad(queues, lp.event_par)
+            queues = segment_pad(queues, lp.event_par, lp.geometry)
         smasks, counts = None, queues.count
     sparsity = 1.0 - jnp.mean(frames.astype(jnp.float32), axis=(1, 2, 3, 4))
     return _run_chunk_from_events(
@@ -518,22 +530,24 @@ def _run_chunk_from_events(
     channel_block = lp.channel_block
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
     block_e = lp.block_e
+    geom = lp.geometry
+    hh, hw_ = geom.halo
 
     def run_block(kernel_block, bias_block, vm0, fired0):
-        # kernel_block: (3, 3, C_in, Cb); bias_block: (Cb,)
-        # vm0: (B, H+2, W+2, Cb); fired0: (B, H, W, Cb)
-        if banked:  # (C_in, 9 cols, 9 banks, Cb) tap routing, hoisted
+        # kernel_block: (kh, kw, C_in, Cb); bias_block: (Cb,)
+        # vm0: (B, H+2hh, W+2hw, Cb); fired0: (B, H, W, Cb)
+        if banked:  # (C_in, cols, banks, Cb) tap routing, hoisted
             taps = jnp.moveaxis(tap_matrix(kernel_block), 2, 0).astype(vm_dtype)
 
         def apply_all_cins(vm, smasks_t, t):
             if banked:
-                vb = bank_vm(vm)  # (B, 9, hb, wb, Cb)
+                vb = bank_vm(vm, geom)  # (B, n_banks, hb, wb, Cb)
                 vb = jax.lax.fori_loop(
                     0, c_in,
                     lambda ci, vb: apply_banked_columns(vb, smasks_t[ci],
                                                         taps[ci]),
                     vb)
-                return unbank_vm(vb, h + 2, w + 2)
+                return unbank_vm(vb, h + 2 * hh, w + 2 * hw_, geom)
 
             def per_cin(ci, vm):
                 coords = queues.coords[t, :, ci]   # (B, cap, 2)
@@ -561,7 +575,7 @@ def _run_chunk_from_events(
             smasks_t, t = xs
             vm, fired = carry
             vm = apply_all_cins(vm, smasks_t, t)
-            inner = vm[:, 1:-1, 1:-1, :]
+            inner = vm[:, hh:h + hh, hw_:w + hw_, :]
 
             def thresh_one(v, f, b):
                 r = threshold_unit(v, b, v_t, f, pool=None, sat_bits=lp.sat_bits)
@@ -570,7 +584,7 @@ def _run_chunk_from_events(
             per_channel = jax.vmap(thresh_one, in_axes=(2, 2, 0), out_axes=2)
             v_new, fired, spk = jax.vmap(per_channel, in_axes=(0, 0, None))(
                 inner, fired, bias_block)
-            vm = vm.at[:, 1:-1, 1:-1, :].set(v_new)
+            vm = vm.at[:, hh:h + hh, hw_:w + hw_, :].set(v_new)
             return (vm, fired), spk
 
         xs = (smasks if banked else jnp.zeros((t_steps, 0), jnp.bool_),
@@ -579,8 +593,9 @@ def _run_chunk_from_events(
         return spikes, vm, fired  # spikes: (t, B, H, W, Cb)
 
     n_blocks = c_out // channel_block
-    kb = kernels.reshape(3, 3, c_in, n_blocks, channel_block)
-    kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, 3, 3, C_in, Cb)
+    kh, kw = kernels.shape[:2]
+    kb = kernels.reshape(kh, kw, c_in, n_blocks, channel_block)
+    kb = jnp.moveaxis(kb, 3, 0)              # (n_blocks, kh, kw, C_in, Cb)
     bb = bias.reshape(n_blocks, channel_block)
     vm_b = _split_blocks(carry.vm.astype(vm_dtype), n_blocks, channel_block)
     fired_b = _split_blocks(carry.fired, n_blocks, channel_block)
@@ -604,25 +619,43 @@ def _run_chunk_from_events(
     return spikes_out, new_carry, stats
 
 
-def run_fc_head(spikes_in: jax.Array, weights: jax.Array, bias: jax.Array) -> jax.Array:
+def run_fc_head(spikes_in: jax.Array, weights: jax.Array, bias: jax.Array,
+                capacity: Optional[int] = None) -> jax.Array:
     """Classification unit (paper Sec. V-A): integrate-only FC readout.
 
     spikes_in: (T, ...) binary; weights: (D, n_classes).  The output
     neurons integrate weighted spikes plus bias every step and are never
     thresholded; the class is the argmax of the final membrane potential.
+    ``capacity`` opts the accumulated drive into the event-driven sparse
+    head (``sparse_ffn.event_readout``: top-``capacity`` AEQ compaction +
+    scatter-back) — bit-exact vs the dense contraction whenever the queue
+    covers every nonzero drive entry.
     """
     t_steps = spikes_in.shape[0]
     flat = spikes_in.reshape(t_steps, -1).astype(weights.dtype)
-    return flat.sum(0) @ weights + t_steps * bias
+    drive = flat.sum(0)
+    if capacity is not None:
+        from .sparse_ffn import event_readout
+        return event_readout(drive, weights,
+                             capacity=capacity) + t_steps * bias
+    return drive @ weights + t_steps * bias
 
 
 def run_fc_head_batched(spikes_in: jax.Array, weights: jax.Array,
-                        bias: jax.Array) -> jax.Array:
+                        bias: jax.Array,
+                        capacity: Optional[int] = None) -> jax.Array:
     """Classification unit over a batch: (B, T, ...) -> (B, n_classes).
 
     One batched matmul replaces B vector-matrix products; numerically it
-    is the same dot_general ``vmap(run_fc_head)`` lowers to.
+    is the same dot_general ``vmap(run_fc_head)`` lowers to.  ``capacity``
+    opts into the event-driven sparse head exactly as in
+    :func:`run_fc_head`.
     """
     b_sz, t_steps = spikes_in.shape[:2]
     flat = spikes_in.reshape(b_sz, t_steps, -1).astype(weights.dtype)
-    return flat.sum(1) @ weights + t_steps * bias
+    drive = flat.sum(1)
+    if capacity is not None:
+        from .sparse_ffn import event_readout
+        return event_readout(drive, weights,
+                             capacity=capacity) + t_steps * bias
+    return drive @ weights + t_steps * bias

@@ -64,6 +64,40 @@ def active_counts(p: dict, x: jax.Array) -> jax.Array:
     return jnp.sum(jax.nn.relu(x @ p["w_up"]) > 0, axis=-1)
 
 
+@partial(jax.jit, static_argnames=("capacity",))
+def event_readout(drive: jax.Array, weights: jax.Array, *,
+                  capacity: int) -> jax.Array:
+    """AEQ-compacted classification-unit drive (the CSNN head connection).
+
+    drive: (..., D) accumulated spike counts into the FC readout — mostly
+    zeros, because only units under firing output spikes contribute.  The
+    top-``capacity`` entries per sample are the head's event queue (the
+    same top-k compaction as :func:`event_ffn`); they are scattered back
+    into a zero (..., D) operand and the SAME dense contraction as the
+    dense head runs on it.  Whenever ``capacity`` covers every nonzero
+    entry the operand is value-identical to ``drive``, so the matmul is
+    the identical dot_general and the logits are bit-exact vs the dense
+    head — the paper's queue-deep-enough exactness property, transferred.
+    (A gathered k-row einsum would change the reduction order and lose
+    the last float bit; the scatter-back form trades nothing but the
+    O(D - k) zero rows the hardware would skip.)
+    """
+    d = drive.shape[-1]
+    if not 1 <= capacity <= d:
+        raise ValueError(f"capacity={capacity} must be in [1, D={d}]")
+    flat = drive.reshape(-1, d)
+    vals, idx = jax.lax.top_k(flat, capacity)        # the head's AEQ
+    rows = jnp.arange(flat.shape[0])[:, None]
+    compact = jnp.zeros_like(flat).at[rows, idx].set(vals)
+    return (compact.reshape(drive.shape) @ weights)
+
+
+def drive_active_counts(drive: jax.Array) -> jax.Array:
+    """Per-sample nonzero drive entries — feed to aeq.calibrate_capacity
+    to size :func:`event_readout`'s queue."""
+    return jnp.sum(drive != 0, axis=-1)
+
+
 def event_ffn_flops(d_model: int, d_ff: int, capacity: int) -> tuple[float, float]:
     """(dense flops, event flops) per token — the napkin the paper makes."""
     dense = 2.0 * d_model * d_ff * 2

@@ -1,12 +1,15 @@
-"""Pallas TPU kernels: event-driven 3x3 convolution (paper conv unit, C2+C3).
+"""Pallas TPU kernels: event-driven k x k convolution (paper conv unit,
+C2+C3; 3x3 in the paper, parametric odd windows here).
 
 Maps the FPGA convolution unit onto the TPU memory hierarchy:
 
-* The membrane-potential tile ``vm`` (H+2, W+2, C) lives **resident in
-  VMEM** for the whole call — the analogue of the 9 interlaced BRAM
-  columns hard-wired to the PEs.  The +1 halo replaces the FPGA's
-  out-of-bounds detection (edge events write into the halo, which is
-  cropped by the wrapper and never thresholded).
+* The membrane-potential tile ``vm`` (H+2hh, W+2hw, C) lives **resident
+  in VMEM** for the whole call — the analogue of the kh*kw interlaced
+  BRAM columns hard-wired to the PEs (9 for 3x3).  The halo (kh//2,
+  kw//2 per side) replaces the FPGA's out-of-bounds detection (edge
+  events write into the halo, which is cropped by the wrapper and never
+  thresholded).  The kernel window is derived from the weight shape, so
+  every entry point serves any odd k x k geometry with one code path.
 * The grid runs over **event blocks**; each step streams one block of
   queue entries (coords, valid) from HBM while vm stays put
   (``input_output_aliases`` accumulates in place across grid steps) —
@@ -24,8 +27,9 @@ Two schedules per entry point:
 * **interlaced event-parallel** (``event_conv_pallas_interlaced``/
   ``_batched``): each grid step walks groups of ``event_par`` consecutive
   queue slots.  The AEQ emits events in interlace-column order
-  (s = 3(i%3)+(j%3)), and same-column events are >= 3 apart in i or j, so
-  their 3x3 patches are DISJOINT: a column-homogeneous group is applied
+  (s = kw*(i%kh)+(j%kw)), and same-column events are >= kh apart in i or
+  >= kw apart in j, so their window patches are DISJOINT: a
+  column-homogeneous group is applied
   as one vectorized gather -> add -> scatter (all patch reads complete
   before any write; disjoint writes never reorder a single cell's
   accumulation, so the result is bit-exact vs the sequential kernel —
@@ -83,6 +87,7 @@ def _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref, *,
     step accumulates into the same tile.
     """
     k_rot = kernel_ref[...][::-1, ::-1, :]  # 180deg rotation (paper Fig. 4)
+    kh, kw = k_rot.shape[:2]                # window from the weight shape
     zero = jnp.zeros_like(k_rot)
 
     def body(e, _):
@@ -94,7 +99,7 @@ def _apply_event_block(coords_ref, valid_ref, kernel_ref, out_ref, *,
         i = jnp.where(v, i, 0)
         j = jnp.where(v, j, 0)
         contrib = jnp.where(v, k_rot, zero)
-        idx = prefix + (pl.dslice(i, 3), pl.dslice(j, 3), slice(None))
+        idx = prefix + (pl.dslice(i, kh), pl.dslice(j, kw), slice(None))
         out_ref[idx] = _acc_patch(out_ref[idx], contrib, out_ref.dtype)
         return ()
 
@@ -116,6 +121,7 @@ def _apply_event_block_interlaced(coords_ref, valid_ref, kernel_ref, out_ref,
     this group only (the column-boundary case on unpadded queues).
     """
     k_rot = kernel_ref[...][::-1, ::-1, :]
+    kh, kw = k_rot.shape[:2]                # window from the weight shape
     zero = jnp.zeros_like(k_rot)
     n_groups = block_e // event_par
 
@@ -126,7 +132,7 @@ def _apply_event_block_interlaced(coords_ref, valid_ref, kernel_ref, out_ref,
             ii.append(coords_ref[prefix + (base + p, 0)])
             jj.append(coords_ref[prefix + (base + p, 1)])
             vv.append(valid_ref[prefix + (base + p,)] != 0)
-        cols = [(i % 3) * 3 + (j % 3) for i, j in zip(ii, jj)]
+        cols = [(i % kh) * kw + (j % kw) for i, j in zip(ii, jj)]
         # first-valid anchor (coords + column); zeros when the group is empty
         zero_i = jnp.zeros_like(ii[0])
         ai, aj, acol, found = zero_i, zero_i, zero_i, jnp.asarray(False)
@@ -140,7 +146,7 @@ def _apply_event_block_interlaced(coords_ref, valid_ref, kernel_ref, out_ref,
                        [~vv[p] | (cols[p] == acol) for p in range(event_par)])
 
         def patch_idx(i, j):
-            return prefix + (pl.dslice(i, 3), pl.dslice(j, 3), slice(None))
+            return prefix + (pl.dslice(i, kh), pl.dslice(j, kw), slice(None))
 
         @pl.when(homog)
         def _parallel():
@@ -188,13 +194,15 @@ def event_conv_pallas(
 ) -> jax.Array:
     """Apply an event queue to halo-padded membrane potentials.
 
-    vm_padded: (H+2, W+2, C) float32 / int16 / int8.
+    vm_padded: (H+2hh, W+2hw, C) float32 / int16 / int8, halo-padded for
+               the kernel's geometry.
     coords:    (E, 2) int32 event addresses (i, j) in *unpadded* space.
     valid:     (E,) bool/int8 — AEQ valid bits.
-    kernel:    (3, 3, C) unrotated weights, same dtype as vm.
+    kernel:    (kh, kw, C) unrotated weights, same dtype as vm; the
+               window (and hence the geometry) is taken from this shape.
 
-    Returns the updated (H+2, W+2, C) tile.  E is padded up to a multiple
-    of ``block_e`` by the wrapper in ops.py.
+    Returns the updated (H+2hh, W+2hw, C) tile.  E is padded up to a
+    multiple of ``block_e`` by the wrapper in ops.py.
     """
     e = coords.shape[0]
     if e % block_e != 0:
@@ -203,6 +211,7 @@ def event_conv_pallas(
             f"block_e={block_e}: the grid tiles the queue evenly — go "
             f"through the ops.py wrappers, which pad the queue for you")
     hp, wp, c = vm_padded.shape
+    kh, kw = kernel.shape[:2]
     grid = (e // block_e,)
     return pl.pallas_call(
         partial(_event_conv_kernel, block_e=block_e),
@@ -210,7 +219,7 @@ def event_conv_pallas(
         in_specs=[
             pl.BlockSpec((block_e, 2), lambda b: (b, 0)),      # event coords stream
             pl.BlockSpec((block_e,), lambda b: (b,)),           # valid bits stream
-            pl.BlockSpec((3, 3, c), lambda b: (0, 0, 0)),       # kernel, resident
+            pl.BlockSpec((kh, kw, c), lambda b: (0, 0, 0)),     # kernel, resident
             pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),     # vm, resident
         ],
         out_specs=pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
@@ -240,11 +249,11 @@ def event_conv_pallas_batched(
 ) -> jax.Array:
     """Apply Q event queues to Q halo-padded membrane-potential tiles.
 
-    vm_padded: (Q, H+2, W+2, C) float32 / int16 / int8 — one tile per queue
-               (in the batched scheduler Q is the sample batch B).
+    vm_padded: (Q, H+2hh, W+2hw, C) float32 / int16 / int8 — one tile per
+               queue (in the batched scheduler Q is the sample batch B).
     coords:    (Q, E, 2) int32 event addresses in *unpadded* space.
     valid:     (Q, E) bool/int8 — AEQ valid bits.
-    kernel:    (3, 3, C) unrotated weights shared by every queue (all
+    kernel:    (kh, kw, C) unrotated weights shared by every queue (all
                queues hold the same (c_in -> channel block) slice).
 
     One pallas_call, 2-D grid (queue, event block); E must be a multiple
@@ -263,6 +272,7 @@ def event_conv_pallas_batched(
             f"queue count mismatch: vm has {vm_padded.shape[0]} tiles, "
             f"coords describe {q} queues")
     _, hp, wp, c = vm_padded.shape
+    kh, kw = kernel.shape[:2]
     grid = (q, e // block_e)
     return pl.pallas_call(
         partial(_event_conv_batched_kernel, block_e=block_e),
@@ -270,7 +280,7 @@ def event_conv_pallas_batched(
         in_specs=[
             pl.BlockSpec((1, block_e, 2), lambda qi, b: (qi, b, 0)),  # event stream
             pl.BlockSpec((1, block_e), lambda qi, b: (qi, b)),         # valid bits
-            pl.BlockSpec((3, 3, c), lambda qi, b: (0, 0, 0)),          # kernel, resident
+            pl.BlockSpec((kh, kw, c), lambda qi, b: (0, 0, 0)),        # kernel, resident
             pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),  # vm tile
         ],
         out_specs=pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),
@@ -326,6 +336,7 @@ def event_conv_pallas_interlaced(
     e = coords.shape[0]
     _check_interlaced_blocks(e, block_e, event_par)
     hp, wp, c = vm_padded.shape
+    kh, kw = kernel.shape[:2]
     grid = (e // block_e,)
     return pl.pallas_call(
         partial(_event_conv_interlaced_kernel, block_e=block_e,
@@ -334,7 +345,7 @@ def event_conv_pallas_interlaced(
         in_specs=[
             pl.BlockSpec((block_e, 2), lambda b: (b, 0)),
             pl.BlockSpec((block_e,), lambda b: (b,)),
-            pl.BlockSpec((3, 3, c), lambda b: (0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda b: (0, 0, 0)),
             pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((hp, wp, c), lambda b: (0, 0, 0)),
@@ -377,6 +388,7 @@ def event_conv_pallas_interlaced_batched(
             f"queue count mismatch: vm has {vm_padded.shape[0]} tiles, "
             f"coords describe {q} queues")
     _, hp, wp, c = vm_padded.shape
+    kh, kw = kernel.shape[:2]
     grid = (q, e // block_e)
     return pl.pallas_call(
         partial(_event_conv_interlaced_batched_kernel, block_e=block_e,
@@ -385,7 +397,7 @@ def event_conv_pallas_interlaced_batched(
         in_specs=[
             pl.BlockSpec((1, block_e, 2), lambda qi, b: (qi, b, 0)),
             pl.BlockSpec((1, block_e), lambda qi, b: (qi, b)),
-            pl.BlockSpec((3, 3, c), lambda qi, b: (0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda qi, b: (0, 0, 0)),
             pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, hp, wp, c), lambda qi, b: (qi, 0, 0, 0)),

@@ -1,11 +1,12 @@
 """Pure-jnp oracle for the event_conv Pallas kernel.
 
-Semantics: for every valid event (i, j), add the 180deg-rotated kernel
-into vm_padded[i:i+3, j:j+3, :] (the +1 halo makes the event coordinate
-(i, j) land at padded centre (i+1, j+1)).  Integer dtypes saturate at the
-storage width after every event, matching the FPGA PE adders — note that
-saturating per-event is NOT the same as clipping once at the end, so the
-oracle replays events one by one too.
+Semantics: for every valid event (i, j), add the 180deg-rotated (kh, kw)
+kernel into vm_padded[i:i+kh, j:j+kw, :] (the (kh//2, kw//2) halo makes
+the event coordinate (i, j) land at padded centre (i+kh//2, j+kw//2);
+the window is taken from the kernel shape, 3x3 in the paper).  Integer
+dtypes saturate at the storage width after every event, matching the
+FPGA PE adders — note that saturating per-event is NOT the same as
+clipping once at the end, so the oracle replays events one by one too.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
 def event_conv_ref(vm_padded: jax.Array, coords: jax.Array, valid: jax.Array,
                    kernel: jax.Array) -> jax.Array:
     k_rot = kernel[::-1, ::-1, :].astype(vm_padded.dtype)
+    kh, kw = kernel.shape[:2]
     zero = jnp.zeros_like(k_rot)
     sat = _SAT_RANGE.get(vm_padded.dtype)
 
@@ -26,7 +28,7 @@ def event_conv_ref(vm_padded: jax.Array, coords: jax.Array, valid: jax.Array,
         i = jnp.where(v, coords[e, 0], 0)
         j = jnp.where(v, coords[e, 1], 0)
         contrib = jnp.where(v, k_rot, zero)
-        patch = jax.lax.dynamic_slice(vm, (i, j, 0), (3, 3, vm.shape[2]))
+        patch = jax.lax.dynamic_slice(vm, (i, j, 0), (kh, kw, vm.shape[2]))
         if sat is not None:
             wide = patch.astype(jnp.int32) + contrib.astype(jnp.int32)
             patch = jnp.clip(wide, sat[0], sat[1]).astype(vm.dtype)
@@ -41,8 +43,8 @@ def event_conv_ref_batched(vm_padded: jax.Array, coords: jax.Array,
                            valid: jax.Array, kernel: jax.Array) -> jax.Array:
     """Oracle for the 2-D grid kernel: Q independent queue replays.
 
-    vm_padded: (Q, H+2, W+2, C); coords: (Q, E, 2); valid: (Q, E);
-    kernel: (3, 3, C) shared across queues.  Each queue's events are
+    vm_padded: (Q, H+2hh, W+2hw, C); coords: (Q, E, 2); valid: (Q, E);
+    kernel: (kh, kw, C) shared across queues.  Each queue's events are
     applied sequentially (per-event saturation, same as the 1-queue
     oracle); queues are independent, so vmap is exact.
     """

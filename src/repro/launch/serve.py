@@ -46,14 +46,15 @@ def serve_csnn(args) -> int:
     import jax
     import jax.numpy as jnp
 
-    from repro.configs import csnn_paper
+    from repro.configs import csnn_paper, csnn_wide
     from repro.core.csnn import encode_input, init_params, snn_apply_batched
     from repro.core.plan import plan_network
 
     # --stream implies --continuous implies --engine
     args.continuous = args.continuous or args.stream
     args.engine = args.engine or args.continuous
-    cfg = csnn_paper.SMOKE if args.smoke else csnn_paper.FULL
+    mod = csnn_wide if args.arch == "csnn-wide" else csnn_paper
+    cfg = mod.SMOKE if args.smoke else mod.FULL
     if args.stream:  # polarity (OFF/ON) maps onto the 2-channel input path
         cfg = replace(cfg, input_channels=2)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -203,7 +204,7 @@ def main(argv=None):
                     help="print the NetworkPlan and per-layer event counts")
     args = ap.parse_args(argv)
 
-    if args.arch == "csnn-paper":
+    if args.arch in ("csnn-paper", "csnn-wide"):
         return serve_csnn(args)
 
     import jax

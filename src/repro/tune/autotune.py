@@ -112,7 +112,7 @@ def _candidate_layer_plan(lp, c: cand.Candidate, *, per_layer: bool,
         capacity=lp.capacity, pool=lp.pool, channel_block=lp.channel_block,
         block_e=c.block_e, sat_bits=lp.sat_bits, per_layer=per_layer,
         batch_tile=batch_tile, vmem_budget=vmem_budget,
-        event_par=c.event_par, variant=c.variant)
+        event_par=c.event_par, variant=c.variant, geometry=lp.geometry)
 
 
 def _measure_and_pick(cfg, base: dict, config: TuneConfig,

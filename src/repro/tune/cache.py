@@ -28,8 +28,11 @@ from pathlib import Path
 from typing import Optional
 
 # Bump whenever the winners schema or the knob-resolution rules change in
-# a way that invalidates old entries wholesale.
-CACHE_VERSION = 1
+# a way that invalidates old entries wholesale.  v2: parametric conv
+# geometry — layer fingerprints carry explicit kh/kw/stride, so winners
+# measured under the hardwired-3x3 schema can never be replayed onto a
+# plan with a different window.
+CACHE_VERSION = 2
 
 ENV_VAR = "REPRO_PLAN_CACHE"
 _DEFAULT = "~/.cache/repro/plan_cache.json"
@@ -52,11 +55,16 @@ def geometry_descriptor(cfg, base: dict) -> dict:
     if base.get("stats") is not None:
         raise ValueError("resolve stats to explicit capacities before "
                          "fingerprinting (arrays are not cache keys)")
+    from repro.core.geometry import ConvGeometry
     layers = []
     for spec in cfg.layers:
         if isinstance(spec, ConvSpec):
+            geom = ConvGeometry(spec.kernel, spec.kernel)
             layers.append({"kind": "conv", "channels": spec.channels,
-                           "kernel": spec.kernel, "pool": spec.pool})
+                           "kernel": spec.kernel, "pool": spec.pool,
+                           "kh": geom.kh, "kw": geom.kw,
+                           "stride": geom.stride,
+                           "n_banks": geom.n_banks})
         else:
             layers.append({"kind": "fc", "features": spec.features})
 
@@ -73,6 +81,7 @@ def geometry_descriptor(cfg, base: dict) -> dict:
         "sat_bits": base.get("sat_bits"),
         "batch_tile": base.get("batch_tile"),
         "per_layer": base.get("per_layer"),
+        "fc_capacity": base.get("fc_capacity"),
         "t_chunk": base.get("t_chunk"),
         "vmem_budget": base.get("vmem_budget"),
         "ingest": bool(base.get("ingest")

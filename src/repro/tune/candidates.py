@@ -55,7 +55,8 @@ def layer_candidates(lp: LayerPlan, *, batch_tile: int,
     if include_pallas:
         ep = (lp.event_par if lp.event_par > 1
               else autotune_event_par(lp.capacity, vm_tile,
-                                      vm_bytes=vm_bytes, **kw))
+                                      vm_bytes=vm_bytes,
+                                      geometry=lp.geometry, **kw))
         if ep > 1:
             cands.append(Candidate(None, ep, "interlaced-pallas"))
     return cands
