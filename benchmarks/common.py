@@ -10,6 +10,8 @@ fails if the file is missing, and uploads it as an artifact.
 from __future__ import annotations
 
 import json
+import math
+import re
 import time
 from pathlib import Path
 
@@ -18,6 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+# rows tag their dense-relative speedup as "vs_dense=<x>x" inside the
+# derived string; write_bench_json folds them into one summary number
+_VS_DENSE = re.compile(r"vs_dense=([0-9]+(?:\.[0-9]+)?)x")
 
 # every emit() lands here; write_bench_json() snapshots one table's rows
 _ROWS: list[dict] = []
@@ -46,17 +52,28 @@ def write_bench_json(table: str, path: str | Path | None = None) -> Path:
 
     Rows are matched by the ``<table>/`` name prefix; the file carries
     enough environment context (jax version, backend) to compare the
-    trajectory across PRs without re-deriving it from CI logs.
+    trajectory across PRs without re-deriving it from CI logs, plus a
+    top-level ``geomean_vs_dense``: the geometric mean of every row's
+    ``vs_dense=<x>x`` derived tag (``None`` if no row carries one) — the
+    one-number perf trajectory of the event pipeline against its dense
+    baseline.
     """
     rows = [r for r in _ROWS if r["name"].startswith(f"{table}/")]
+    ratios = [float(m.group(1)) for r in rows
+              if (m := _VS_DENSE.search(r.get("derived", "")))]
+    geomean = (round(math.exp(sum(math.log(x) for x in ratios)
+                              / len(ratios)), 3)
+               if ratios and all(x > 0 for x in ratios) else None)
     out = Path(path) if path is not None else Path.cwd() / f"BENCH_{table}.json"
     out.write_text(json.dumps({
         "table": table,
+        "geomean_vs_dense": geomean,
         "rows": rows,
         "env": {"jax": jax.__version__, "backend": jax.default_backend(),
                 "device_count": jax.device_count()},
     }, indent=2) + "\n")
-    print(f"# wrote {out} ({len(rows)} rows)")
+    print(f"# wrote {out} ({len(rows)} rows, "
+          f"geomean_vs_dense={geomean})")
     return out
 
 

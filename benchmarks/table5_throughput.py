@@ -179,6 +179,47 @@ def main(json_out: bool = False):
          f"slots={plan_tuned.total_event_slots};"
          f"vs_interlaced={vs_il:.2f}x;vs_batched={us_batched / us_tuned:.2f}x")
 
+    # fused spike emission (ISSUE 10): every layer pinned "fused-handoff",
+    # so spikes leave each threshold unit already compacted into the next
+    # layer's padded-bank carrier — no dense intermediate, no second O(HW)
+    # compaction pass per (layer, timestep).  Bit-exact vs the reference
+    # batched pipeline (asserted: the carrier provably holds the same kept
+    # events as build_bank_masks) and required to beat the best prior
+    # event-driven row by >= 1.15x — the headline of the fusion.
+    plan_fused = plan_network(cfg, capacity=cap, channel_block=8,
+                              batch_tile=batch,
+                              variant=["fused-handoff"] * len(plan.layers))
+    fused_fn = jax.jit(lambda s: snn_apply_batched(
+        params, s, cfg, plan_fused, collect_stats=False))
+    bit_exact = np.array_equal(np.asarray(fused_fn(spikes)),
+                               np.asarray(batched_fn(spikes)))
+    assert bit_exact, \
+        "fused-handoff pipeline must be bit-exact vs the batched reference"
+    # the 1.15x bar is against the best event-driven row that does NOT
+    # itself use the fused handoff: now that "fused-handoff" sits on the
+    # tuner's candidate axis the tuned row usually IS the fused pipeline
+    # (comparing against it would be fused-vs-fused, identically 1.0x),
+    # in which case the honest prior best is the interlaced row.
+    tuned_is_fused = any(lp.resolve_variant("jax") == "fused-handoff"
+                         for lp in plan_tuned.layers)
+    prior_fn, us_prior = ((il_fn, us_il) if tuned_is_fused
+                          else (tuned_fn, min(us_tuned, us_il)))
+    us_fused = timeit(fused_fn, spikes) / batch
+    vs_prior = us_prior / us_fused
+    for _ in range(2):  # re-measure interleaved before calling a miss
+        if vs_prior >= 1.15:
+            break
+        us_prior = min(us_prior, timeit(prior_fn, spikes) / batch)
+        us_fused = min(us_fused, timeit(fused_fn, spikes) / batch)
+        vs_prior = us_prior / us_fused
+    assert vs_prior >= 1.15, (
+        f"fused-handoff must beat the best non-fused event-driven row by "
+        f">= 1.15x, got {vs_prior:.2f}x")
+    emit("table5/fused_handoff", us_fused,
+         f"bit_exact={bit_exact};vs_prior_best={vs_prior:.2f}x;"
+         f"vs_tuned={us_tuned / us_fused:.2f}x;"
+         f"vs_dense={us_dense / us_fused:.2f}x")
+
     # beyond-paper parametric-geometry demo: the csnn_wide config swaps
     # the first conv layer to a 5x5 window (25 interlace banks) and runs
     # the identical event pipeline — planning, AEQ interlacing, banked

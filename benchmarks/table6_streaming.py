@@ -114,9 +114,11 @@ def main(json_out: bool = False):
              f"events={n};batch={BATCH};capacity={CAPACITY}")
         speedup = us_b / us_s
         speedups.append(speedup)
+        # the binned sort path is this table's dense baseline, so
+        # vs_binned doubles as the vs_dense trajectory tag
         emit(f"streaming/append_{tag}", us_s,
              f"events={n};batch={BATCH};capacity={CAPACITY};"
-             f"vs_binned={speedup:.2f}x")
+             f"vs_binned={speedup:.2f}x;vs_dense={speedup:.2f}x")
     # geomean over the sweep, not per-rate: the win is structural (cumsum
     # vs sort) but small enough at 28x28 that a single-rate timing can
     # drown in scheduler noise on a busy CI host
@@ -159,7 +161,8 @@ def main(json_out: bool = False):
     emit("streaming/chunk_step_binned", us_b,
          f"batch={BATCH};T={cfg.t_steps}")
     emit("streaming/chunk_step_streamed", us_s,
-         f"batch={BATCH};T={cfg.t_steps};vs_binned={us_b / us_s:.2f}x")
+         f"batch={BATCH};T={cfg.t_steps};vs_binned={us_b / us_s:.2f}x;"
+         f"vs_dense={us_b / us_s:.2f}x")
 
     # ---- measured-tuned streamed step: the tuner times both stream
     # finalizations head to head on this geometry (rank-compaction vs a
@@ -205,8 +208,9 @@ def main(json_out: bool = False):
         f"tuned streamed step must not lose to the default streamed step, "
         f"got {vs_streamed:.2f}x")
     emit("streaming/chunk_step_tuned", us_t,
-         f"finalize={plan_tuned.layers[0].stream_finalize or 'ranks'};"
-         f"vs_streamed={vs_streamed:.2f}x;vs_binned={us_b / us_t:.2f}x")
+         f"finalize={plan_tuned.layers[0].resolve_stream_finalize()};"
+         f"vs_streamed={vs_streamed:.2f}x;vs_binned={us_b / us_t:.2f}x;"
+         f"vs_dense={us_b / us_t:.2f}x")
 
     if json_out:
         write_bench_json("streaming")

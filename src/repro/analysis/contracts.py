@@ -45,6 +45,14 @@ plan that skips it) is caught before any device work:
   the contract that makes *cache-loaded* plans trustworthy: the measured
   autotuner's winners re-enter through ``plan_network`` and must land on
   schedules the scheduler can actually dispatch.
+* ``plan-fused-handoff-boundary`` — layers pinned to the fused
+  spike-emission variant consume the producer's padded centre-bank
+  carrier directly, so the handoff geometry must line up end to end:
+  the producer's post-pool fmap equals this layer's input fmap, the
+  MemPot tile is exactly the halo-padded grid the carrier's static
+  placements assume (a mismatch desynchronizes bank rows silently, not
+  loudly), and the AEQ capacity stays within the fmap so the carrier's
+  rank truncation equals the queue truncation.
 * ``plan-validate-agrees`` — ``NetworkPlan.validate(cfg)`` accepts the
   plan (cross-checks the sweep's own construction).
 
@@ -335,6 +343,44 @@ def _check_variant(plan: NetworkPlan, cfg, case: str, rep: Report) -> int:
     return n
 
 
+@contract("plan-fused-handoff-boundary",
+          "fused spike-emission handoff geometry lines up between layers")
+def _check_fused_handoff(plan: NetworkPlan, cfg, case: str,
+                         rep: Report) -> int:
+    n = 0
+    for i, lp in enumerate(plan.layers):
+        if lp.variant != "fused-handoff":
+            continue
+        n += 1
+        geom = _layer_geometry(lp)
+        hh, hw = geom.halo
+        h, w = lp.in_hw
+        want = (h + 2 * hh, w + 2 * hw, lp.channel_block)
+        if tuple(lp.vm_tile) != want:
+            rep.flag("contracts", "plan-fused-handoff-boundary",
+                     _layer_where(case, lp),
+                     f"vm_tile={tuple(lp.vm_tile)} != halo-padded {want}: "
+                     f"the carrier's static bank placements index a "
+                     f"ceil({want[0]}/{geom.kh}) x ceil({want[1]}/{geom.kw}) "
+                     f"macro grid; any other tile desynchronizes the banks")
+        if lp.capacity > h * w:
+            rep.flag("contracts", "plan-fused-handoff-boundary",
+                     _layer_where(case, lp),
+                     f"capacity={lp.capacity} exceeds the {h}x{w} fmap: the "
+                     f"carrier's rank truncation must equal the effective "
+                     f"AEQ truncation min(capacity, H*W)")
+        if i > 0:
+            prev = plan.layers[i - 1]
+            if tuple(prev.out_hw) != (h, w):
+                rep.flag("contracts", "plan-fused-handoff-boundary",
+                         _layer_where(case, lp),
+                         f"producer {prev.name} emits {tuple(prev.out_hw)} "
+                         f"post-pool but this consumer expects in_hw="
+                         f"{(h, w)}: the emitted carrier would carry the "
+                         f"wrong bank grid")
+    return n
+
+
 def audit_plan(plan: NetworkPlan, cfg: Optional[CSNNConfig] = None, *,
                case: str = "plan", report: Optional[Report] = None) -> Report:
     """Run every registered contract over one (plan, cfg) pair."""
@@ -395,6 +441,12 @@ def sweep_cases() -> list[tuple[str, CSNNConfig, dict]]:
         ("paper-pinned-variants", paper,
          dict(capacity=256, channel_block=8, event_par=[1, 4, 4],
               variant=["sequential", "banked-jax", "interlaced-pallas"])),
+        ("paper-fused-handoff", paper,
+         dict(capacity=256, channel_block=8, t_chunk=5,
+              variant=["fused-handoff", "fused-handoff", "fused-handoff"])),
+        ("wide-5x5-fused", wide,
+         dict(capacity=96, channel_block=2, sat_bits=16,
+              variant=[None, "fused-handoff"])),
         ("dvs-ingest-sort-finalize", dvs,
          dict(capacity=128, event_par=None, t_chunk=4, ingest=True,
               variant="banked-jax", stream_finalize="sort")),

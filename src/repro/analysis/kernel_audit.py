@@ -139,6 +139,22 @@ def check_shape_contracts(report: Optional[Report] = None) -> Report:
                 jax.eval_shape(
                     lambda a, b, f_, p=pool: threshold_pool_ref(
                         a, b, f_, v_t=1.0, pool=p), tvm, bias, fired))
+            # fused spike emission (ISSUE 10): the 5-output contract —
+            # bank masks + per-column segment counts under the consumer's
+            # window geometry — must agree kernel vs oracle too
+            geomk = ConvGeometry(kk, kk)
+            compare(
+                f"threshold_pool_pallas[{case},pool={pool},emit]",
+                jax.eval_shape(
+                    lambda a, b, f_, p=pool, bc=c, g=geomk:
+                    threshold_pool_pallas(
+                        a, b, f_, v_t=1.0, pool=p, block_c=bc,
+                        interpret=True, emit_capacity=16, emit_geometry=g),
+                    tvm, bias, fired),
+                jax.eval_shape(
+                    lambda a, b, f_, p=pool, g=geomk: threshold_pool_ref(
+                        a, b, f_, v_t=1.0, pool=p, emit_capacity=16,
+                        emit_geometry=g), tvm, bias, fired))
     return rep
 
 
@@ -171,12 +187,14 @@ def check_value_parity(report: Optional[Report] = None) -> Report:
     adversarial inputs, sequential + interlaced + banked paths."""
     import jax.numpy as jnp
 
-    from repro.core.aeq import build_aeq, build_bank_masks
+    from repro.core.aeq import build_aeq, build_bank_masks, \
+        build_fused_handoff
     from repro.core.event_conv import (apply_events, apply_events_banked,
                                        pad_vm)
     from repro.kernels.event_conv.kernel import event_conv_pallas
     from repro.kernels.event_conv.ops import event_conv
     from repro.kernels.event_conv.ref import event_conv_ref
+    from repro.kernels.threshold_pool.ops import threshold_pool
 
     rep = report if report is not None else Report()
     rng = np.random.default_rng(7)
@@ -230,6 +248,44 @@ def check_value_parity(report: Optional[Report] = None) -> Report:
                          f"kernel:event_conv[{case}]",
                          f"{path} path diverges from the sequential "
                          f"apply_events oracle")
+            else:
+                rep.proved("kernel-value-parity")
+        # fused spike emission (ISSUE 10): the kernel's banked-emission
+        # outputs must match the oracle bit for bit, and both must equal
+        # what aeq.build_fused_handoff would compact from the same spike
+        # map — a capacity below h*w keeps the rank-truncation path live
+        bias = jnp.asarray(rng.standard_normal((c,)).astype(np.float32)
+                           .astype(dtype))
+        fired0 = jnp.asarray((rng.random((h, w, c)) < 0.3)
+                             .astype(np.int8))
+        cap = max(1, (h * w) // 2)
+        for pool in (3, None):
+            outs_k = threshold_pool(
+                vm0, bias, fired0, v_t=0.0, pool=pool, block_c=c,
+                use_kernel=True, interpret=True,
+                emit_capacity=cap, emit_geometry=geom)
+            outs_r = threshold_pool(
+                vm0, bias, fired0, v_t=0.0, pool=pool, block_c=c,
+                use_kernel=False,
+                emit_capacity=cap, emit_geometry=geom)
+            where = f"kernel:threshold_pool[{case},pool={pool},emit]"
+            if any(not np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(outs_k, outs_r)):
+                rep.flag("kernel_audit", "kernel-value-parity", where,
+                         "fused-emission kernel diverges from the oracle "
+                         "(masks/seg_counts not bit-identical)")
+            else:
+                rep.proved("kernel-value-parity")
+            spikes_out = outs_r[2]
+            ho = build_fused_handoff(
+                spikes_out[None, None], cap, geom)
+            want_masks = np.moveaxis(np.asarray(ho.masks[0, :, 0]), 0, -1)
+            if not np.array_equal(np.asarray(outs_r[3]), want_masks):
+                rep.flag("kernel_audit", "kernel-value-parity", where,
+                         "emitted bank masks differ from the "
+                         "build_fused_handoff compaction of the same "
+                         "spike map — the handoff carrier would "
+                         "desynchronize from the consumer's contract")
             else:
                 rep.proved("kernel-value-parity")
     return rep

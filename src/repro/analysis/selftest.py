@@ -85,6 +85,14 @@ def _broken_plans():
          relayer(geometry=ConvGeometry(5, 5))),
         ("variant-bogus", "plan-variant-valid",
          relayer(variant="fused-marvel")),
+        ("fused-handoff-desynced-tile", "plan-fused-handoff-boundary",
+         # fused consumer whose MemPot tile is not the halo-padded grid
+         # the carrier's static bank placements index into
+         relayer(variant="fused-handoff",
+                 vm_tile=(lp.in_hw[0], lp.in_hw[1], lp.channel_block))),
+        ("fused-handoff-capacity-overrun", "plan-fused-handoff-boundary",
+         relayer(variant="fused-handoff",
+                 capacity=lp.in_hw[0] * lp.in_hw[1] + 64)),
         ("variant-interlaced-seq-width", "plan-variant-valid",
          relayer(variant="interlaced-pallas", event_par=1)),
         ("finalize-on-inner-layer", "plan-variant-valid",

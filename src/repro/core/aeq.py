@@ -363,6 +363,151 @@ def build_bank_masks(fmaps: jax.Array, capacity: int,
         seg_counts=seg_counts.reshape(*lead, nb))
 
 
+class FusedHandoff(NamedTuple):
+    """Fused spike-emission carrier between adjacent conv layers.
+
+    masks: (T, C, B, n_banks, HBp+2, WBp+2) bool — the kept events'
+        halo-padded centre-bank occupancy (identical content to
+        :class:`BankedEvents`.masks of the same fmaps) but (a) laid out
+        scan-major for the consumer — leading T for the time scan, then C
+        for the fori over input channels — and (b) carrying ONE extra
+        macro cell of zero padding per side.  That pad ring is what lets
+        the consumer slice every (column, bank) shifted write mask
+        directly out of the carrier
+        (``event_conv.apply_banked_columns_fused``) instead of
+        materializing the n_banks^2 ``shifted_bank_masks`` stack:
+        masks == pad(BankedEvents.masks, 1 macro cell per side) with the
+        (T, B, C) lead transposed to (T, C, B).
+    count: (T, B, C) int32 — spike demand per queue, in the
+        :class:`BankedEvents` layout convention (feeds LayerStats
+        unchanged).
+    """
+
+    masks: jax.Array
+    count: jax.Array
+
+
+def ranked_keep(il: jax.Array, capacity: int, hw: tuple[int, int]
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-free capacity truncation on interlaced occupancy — the
+    cumulative-rank machinery shared by ``stream_queues``,
+    ``build_bank_masks`` and the fused-emission builders.
+
+    il: (..., n_banks, HB, WB) bool centre-bank occupancy of an UNPADDED
+    (H, W) fmap.  Returns (kept occupancy, same shape; count (...,) int32
+    spike demand; seg_counts (..., n_banks) int32 kept events per
+    interlace column).  Within a column, (I, J) raster order equals the
+    paper's (i, j) order, so an event's rank in the (s, i, j) read order
+    is columns-before + actives-before-in-column (exclusive cumsums) and
+    truncation keeps ranks < min(capacity, H*W) — identical to the
+    ``build_aeq_batched`` tail drop.  When the capacity covers the whole
+    fmap the rank computation is statically skipped (nothing can drop).
+    """
+    h, w = hw
+    nb, hb, wb = il.shape[-3:]
+    il_flat = il.reshape(il.shape[:-2] + (hb * wb,))
+    seg_full = jnp.sum(il_flat, axis=-1).astype(jnp.int32)
+    count = jnp.sum(seg_full, axis=-1)
+    seg_off = jnp.cumsum(seg_full, axis=-1) - seg_full        # exclusive
+    kept = jnp.minimum(count, min(capacity, h * w))
+    seg_counts = jnp.clip(kept[..., None] - seg_off, 0, seg_full)
+    if capacity >= h * w:
+        return il, count, seg_counts
+    rank_in_col = jnp.cumsum(il_flat, axis=-1) - il_flat      # exclusive
+    rank = seg_off[..., None] + rank_in_col
+    kept_il = il_flat & (rank < kept[..., None, None])
+    return kept_il.reshape(il.shape), count, seg_counts
+
+
+def place_padded_banks(kept_il: jax.Array, hw: tuple[int, int],
+                       geometry: ConvGeometry = GEOM_3X3) -> jax.Array:
+    """Re-bank unpadded centre occupancy into the padded fused layout.
+
+    kept_il: (..., n_banks, HB, WB) bool over the unpadded fmap (bank
+    s = kw*(i%kh)+(j%kw), macro (i//kh, j//kw)).  Returns
+    (..., n_banks, HBp+2, WBp+2): each column's cells land in the
+    padded-space centre bank ((si+hh)%kh)*kw + (sj+hw)%kw at a static
+    macro offset (1 + (si+hh)//kh, 1 + (sj+hw)//kw) — n_banks static
+    placements replace the deinterlace -> pad -> interlace dense round
+    trip of ``build_bank_masks``, and the result equals its masks with
+    one macro cell of padding per side (tests/test_fused_handoff.py).
+    """
+    h, w = hw
+    kh, kw = geometry.kh, geometry.kw
+    hh, hw_ = geometry.halo
+    nb = geometry.n_banks
+    hb, wb = kept_il.shape[-2:]
+    hbp, wbp = -(-(h + 2 * hh) // kh), -(-(w + 2 * hw_) // kw)
+    mp = jnp.zeros(kept_il.shape[:-3] + (nb, hbp + 2, wbp + 2), jnp.bool_)
+    for s in range(nb):
+        si, sj = divmod(s, kw)
+        tb = ((si + hh) % kh) * kw + (sj + hw_) % kw
+        oi = 1 + (si + hh) // kh      # in {1, 2}: always fits (hb <= hbp)
+        oj = 1 + (sj + hw_) // kw
+        mp = mp.at[..., tb, oi:oi + hb, oj:oj + wb].set(kept_il[..., s, :, :])
+    return mp
+
+
+def build_fused_handoff(spikes: jax.Array, capacity: int,
+                        geometry: ConvGeometry = GEOM_3X3) -> FusedHandoff:
+    """Compact a (B, T, H, W, C) spike chunk straight into the fused
+    handoff carrier — the emission half of the ``"fused-handoff"`` kernel
+    variant.
+
+    One 7-D reshape/transpose interlaces the chunk (no per-map pass), the
+    shared ``ranked_keep`` machinery applies the AEQ capacity truncation,
+    and ``place_padded_banks`` banks the kept centres — so the carrier
+    costs one cheap pass over the spike data where the banked path pays
+    interlace -> ranks -> deinterlace -> pad -> re-interlace and then an
+    n_banks^2 ``shifted_bank_masks`` stack.  Mask content and counts are
+    bit-identical to ``build_bank_masks`` over the same fmaps.
+    """
+    b, t, h, w, c = spikes.shape
+    kh, kw = geometry.kh, geometry.kw
+    nb = geometry.n_banks
+    ph, pw = -h % kh, -w % kw
+    x = jnp.pad(spikes.astype(bool), ((0, 0), (0, 0), (0, ph), (0, pw),
+                                      (0, 0)))
+    hb, wb = (h + ph) // kh, (w + pw) // kw
+    x = x.reshape(b, t, hb, kh, wb, kw, c)
+    # -> (T, C, B, kh, kw, HB, WB) -> (T, C, B, n_banks, HB, WB): same
+    # bank order as ``interlace`` (s = kw*(i%kh) + j%kw)
+    il = x.transpose(1, 6, 0, 3, 5, 2, 4).reshape(t, c, b, nb, hb, wb)
+    kept_il, count, _ = ranked_keep(il, capacity, (h, w))
+    return FusedHandoff(masks=place_padded_banks(kept_il, (h, w), geometry),
+                        count=jnp.swapaxes(count, 1, 2))
+
+
+def fused_handoff_from_banks(banks: jax.Array, capacity: int,
+                             hw: tuple[int, int],
+                             geometry: ConvGeometry = GEOM_3X3
+                             ) -> FusedHandoff:
+    """Fused handoff carrier straight from streamed ingestion banks.
+
+    banks: (B, T, C, n_banks, HB, WB) bool from :class:`StreamState` —
+    already the interlaced centre occupancy ``build_fused_handoff``
+    computes internally, so the streamed fused path needs NO dense
+    ``stream_frames`` round trip at all: rank-truncate the banks and
+    place them into the padded layout.  Bit-exact vs binning the same
+    events and calling ``build_fused_handoff`` (the streaming-equivalence
+    theorem; tests/test_fused_handoff.py).
+    """
+    h, w = hw
+    kh, kw = geometry.kh, geometry.kw
+    nb = geometry.n_banks
+    got_nb, hb, wb = banks.shape[-3:]
+    if got_nb != nb:
+        raise ValueError(f"stream banks must carry {nb} columns for the "
+                         f"{kh}x{kw} geometry, got {got_nb}")
+    if (hb, wb) != (-(-h // kh), -(-w // kw)):
+        raise ValueError(f"stream banks {(hb, wb)} do not match hw={hw} "
+                         f"under the {kh}x{kw} geometry")
+    il = banks.transpose(1, 2, 0, 3, 4, 5)        # (T, C, B, nb, HB, WB)
+    kept_il, count, _ = ranked_keep(il, capacity, (h, w))
+    return FusedHandoff(masks=place_padded_banks(kept_il, (h, w), geometry),
+                        count=jnp.swapaxes(count, 1, 2))
+
+
 def scatter_aeq(queue: EventQueue, shape: tuple[int, int]) -> jax.Array:
     """Inverse of build_aeq: expand an EventQueue back into a binary fmap."""
     fmap = jnp.zeros(shape, jnp.bool_)

@@ -38,7 +38,7 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .aeq import StreamState
+from .aeq import StreamState, build_fused_handoff
 from .encoding import mttfs_thresholds, multi_threshold_encode
 from .plan import NetworkPlan, plan_network
 from .scheduler import (ConvCarry, LayerStats, init_conv_carry,
@@ -251,10 +251,18 @@ def snn_step_chunk(
     only the scans are cut), which is what lets the engine admit new
     requests mid-flight without perturbing in-flight ones.
 
+    Fused spike emission (ISSUE 10): when the NEXT conv layer is pinned
+    to the ``"fused-handoff"`` variant, this loop is where the handoff
+    happens — the producer's pooled output is compacted once into the
+    consumer's :class:`~repro.core.aeq.FusedHandoff` carrier at the layer
+    boundary and passed in place of the dense spike tensor, so the
+    consumer never re-runs the dense->queue compaction pass.
+
     Returns ``state`` or ``(state, [chunk LayerStats, ...])`` with
     ``collect_stats``.
     """
     x, stats, ci = spikes_chunk, [], 0
+    n_conv = len(plan.layers)
     new_convs = []
     for idx, spec in enumerate(cfg.layers):
         if isinstance(spec, ConvSpec):
@@ -270,6 +278,10 @@ def snn_step_chunk(
             new_convs.append(carry)
             stats.append(st)
             ci += 1
+            if (ci < n_conv and plan.layers[ci].resolve_variant(backend)
+                    == "fused-handoff"):
+                nxt = plan.layers[ci]
+                x = build_fused_handoff(x, nxt.capacity, nxt.geometry)
     b, c = x.shape[:2]
     drive = x.reshape(b, c, -1).astype(state.fc_drive.dtype).sum(axis=1)
     state = CSNNState(convs=tuple(new_convs),

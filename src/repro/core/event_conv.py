@@ -390,6 +390,43 @@ def apply_banked_columns(vm_banked: jax.Array, smasks: jax.Array,
     return jnp.stack(banks, axis=-4)
 
 
+def apply_banked_columns_fused(vm_banked: jax.Array, padded_masks: jax.Array,
+                               taps: jax.Array,
+                               geometry: ConvGeometry = GEOM_3X3
+                               ) -> jax.Array:
+    """``apply_banked_columns`` consuming the fused-handoff carrier.
+
+    vm_banked:    (..., n_banks, HB, WB, C) from ``bank_vm``.
+    padded_masks: (..., n_banks, HB+2, WB+2) bool — centre-bank occupancy
+                  with one macro cell of padding per side
+                  (``aeq.build_fused_handoff``).
+    taps:         (n_banks cols, n_banks banks, C) from ``tap_matrix``.
+
+    Each (column s, bank t) shifted write mask is a STATIC slice of the
+    padded carrier — ``padded_masks[..., COL_BANK[s], 1-DI[s,t] :, 1-DJ
+    [s,t] :]`` — which XLA fuses straight into the masked adds, so the
+    n_banks^2 ``shifted_bank_masks`` stack is never materialized (the
+    second O(HW) pass the fused-handoff variant eliminates).  The slices
+    reproduce the shifted masks exactly and the bank-major s-order chain
+    is unchanged, so this is bit-exact vs ``apply_banked_columns`` over
+    ``shifted_bank_masks`` of the unpadded masks — per-event int
+    saturation included (tests/test_fused_handoff.py).
+    """
+    _, di_t, dj_t, col_bank = _interlace_tables(geometry.kh, geometry.kw)
+    nb = geometry.n_banks
+    hb, wb = vm_banked.shape[-3], vm_banked.shape[-2]
+    banks = []
+    for t in range(nb):
+        bank = vm_banked[..., t, :, :, :]
+        for s in range(nb):
+            r0 = 1 - int(di_t[s, t])
+            c0 = 1 - int(dj_t[s, t])
+            m = padded_masks[..., int(col_bank[s]), r0:r0 + hb, c0:c0 + wb]
+            bank = _acc_masked(bank, taps[s, t], m)
+        banks.append(bank)
+    return jnp.stack(banks, axis=-4)
+
+
 def apply_events_banked(vm_padded: jax.Array, masks: jax.Array,
                         kernel: jax.Array) -> jax.Array:
     """Banked-path equivalent of ``apply_events`` for one tile.

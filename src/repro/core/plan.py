@@ -65,10 +65,18 @@ _VM_DTYPES = {None: "float32", 8: "int8", 16: "int16"}
 # time (jax loop, or the sequential Pallas kernel on the pallas backend);
 # "banked-jax" holds the MemPot stack in the 9 interlace banks and applies
 # whole hazard-free columns per vectorized select; "interlaced-pallas"
-# feeds segment-padded queues to event_conv_pallas_interlaced*.  All three
-# are bit-exact — the variant is a pure perf knob, which is what lets the
-# measured autotuner (repro.tune) pick per layer.
-KERNEL_VARIANTS = ("sequential", "banked-jax", "interlaced-pallas")
+# feeds segment-padded queues to event_conv_pallas_interlaced*;
+# "fused-handoff" consumes the producer's fused spike emission directly —
+# the layer input arrives as halo-padded centre-bank occupancy masks
+# (aeq.FusedHandoff, built in the upstream threshold unit) and the conv
+# applies them through static per-(bank, column) slices, skipping the
+# deinterlace -> dense -> recompact round trip entirely (ISSUE 10).  All
+# four are bit-exact — the variant is a pure perf knob, which is what
+# lets the measured autotuner (repro.tune) pick per layer.
+# "fused-handoff" only runs when pinned: resolve_variant never
+# auto-selects it, because it changes the *inter*-layer dataflow.
+KERNEL_VARIANTS = ("sequential", "banked-jax", "interlaced-pallas",
+                   "fused-handoff")
 
 # Streaming-ingestion finalization variants (input layer only): "ranks"
 # is the sort-free exclusive-cumulative-rank path (aeq.stream_queues);
@@ -76,7 +84,14 @@ KERNEL_VARIANTS = ("sequential", "banked-jax", "interlaced-pallas")
 # fused sort (build_aeq_batched) — bit-exact by the streaming-equivalence
 # theorem, and measurably faster at small fmaps where the O(HW log HW)
 # sort beats the rank computation's constant factor (BENCH_streaming).
+# None resolves by fmap size (LayerPlan.resolve_stream_finalize).
 STREAM_FINALIZE = ("ranks", "sort")
+
+# Fmap-size crossover for the None stream_finalize default: at/below this
+# many fmap cells the fused-sort finalization wins (BENCH_streaming
+# measured the 12x12 DVS smoke at 0.83x under "ranks" vs 1.0x+ under
+# "sort"); larger fmaps amortize the rank cumsums and "ranks" wins.
+_FINALIZE_SORT_MAX_HW = 256
 
 
 def pad_capacity(capacity: int) -> int:
@@ -143,7 +158,8 @@ class LayerPlan:
                                   # None = resolve from event_par + backend
     stream_finalize: Optional[str] = None  # streamed-queue finalization
                                   # ("ranks"/"sort"; input layer only,
-                                  # None = "ranks")
+                                  # None = resolve by fmap size —
+                                  # resolve_stream_finalize)
     geometry: ConvGeometry = GEOM_3X3  # conv window + interlace layout
                                   # (kh x kw, n_banks = kh*kw membrane
                                   # banks; the paper's 3x3 by default)
@@ -163,6 +179,20 @@ class LayerPlan:
             return ("interlaced-pallas" if backend == "pallas"
                     else "banked-jax")
         return "sequential"
+
+    def resolve_stream_finalize(self) -> str:
+        """Effective streamed-queue finalization for this (input) layer.
+
+        An explicit :attr:`stream_finalize` (user pin or the measured
+        autotuner's choice) always wins; ``None`` resolves by fmap size —
+        small fmaps take the fused-sort path, larger ones the sort-free
+        ranks path (the measured crossover, see ``STREAM_FINALIZE``).
+        Both finalizations are bit-exact, so the default is pure perf.
+        """
+        if self.stream_finalize is not None:
+            return self.stream_finalize
+        h, w = self.in_hw
+        return "sort" if h * w <= _FINALIZE_SORT_MAX_HW else "ranks"
 
     @property
     def vm_dtype(self):
@@ -273,6 +303,21 @@ class NetworkPlan:
                 raise ValueError(
                     f"{lp!r} ingest_depth={lp.ingest_depth} must be in "
                     f"[1, t_steps={self.t_steps}]")
+            if lp.variant == "fused-handoff":
+                # the fused carrier is built against THIS layer's window:
+                # the producer's emission places banks on the halo-padded
+                # grid derived from (in_hw, geometry), and the consumer
+                # slices assume vm_tile covers exactly that grid
+                h, w = lp.in_hw
+                hh, hw2 = lp.geometry.halo
+                want = (h + 2 * hh, w + 2 * hw2, lp.channel_block)
+                if tuple(lp.vm_tile) != want:
+                    raise ValueError(
+                        f"{lp!r} variant='fused-handoff' needs the "
+                        f"halo-padded vm_tile {want} matching in_hw="
+                        f"{lp.in_hw} under {lp.geometry.describe()}, got "
+                        f"{tuple(lp.vm_tile)} — the handoff bank grid and "
+                        f"the MemPot banks would desynchronize")
             hw, c_in = conv_out_hw(hw, spec), spec.channels
         return self
 
@@ -369,7 +414,8 @@ def plan_conv_layer(
             f"of the segment-padded queue")
     if stream_finalize is not None and stream_finalize not in STREAM_FINALIZE:
         raise ValueError(f"stream_finalize={stream_finalize!r} must be one "
-                         f"of {STREAM_FINALIZE} (or None = 'ranks')")
+                         f"of {STREAM_FINALIZE} (or None = resolve by fmap "
+                         f"size)")
     return LayerPlan(index=index, name=name, in_hw=in_hw, out_hw=out_hw,
                      c_in=c_in, c_out=c_out, pool=pool, capacity=cap,
                      channel_block=cb, block_e=be, vm_tile=vm_tile,

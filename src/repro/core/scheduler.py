@@ -47,6 +47,14 @@ precedence; otherwise ``event_par`` + backend decide):
   (``aeq.segment_pad``) and fed to ``event_conv_pallas_interlaced*``,
   which applies ``event_par`` hazard-free events per
   gather->add->scatter step.
+* ``"fused-handoff"`` — the fused spike-emission path (ISSUE 10): the
+  layer input arrives as the producer's halo-padded centre-bank masks
+  (``aeq.FusedHandoff``, built inside the upstream threshold unit or by
+  ``aeq.build_fused_handoff`` from dense spikes at the network edge) and
+  the conv unit applies them through static per-(bank, column) slices
+  (``event_conv.apply_banked_columns_fused``) — no deinterlace, no dense
+  intermediate, no second compaction pass, and no pre-shifted 81-mask
+  stack (the slices alias one padded carrier).
 
 All variants are bit-exact vs the sequential schedule
 (tests/test_interlaced.py); the choice is a pure perf knob, which is
@@ -59,12 +67,14 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .aeq import (BatchedEventQueue, EventQueue, StreamState,
-                  build_aeq_batched, build_bank_masks, segment_pad,
-                  stream_frames, stream_queues)
-from .event_conv import (apply_banked_columns, apply_events,
-                         apply_events_batched, bank_vm, crop_vm, dense_conv,
-                         pad_vm, shifted_bank_masks, tap_matrix, unbank_vm)
+from .aeq import (BatchedEventQueue, EventQueue, FusedHandoff, StreamState,
+                  build_aeq_batched, build_bank_masks, build_fused_handoff,
+                  fused_handoff_from_banks, segment_pad, stream_frames,
+                  stream_queues)
+from .event_conv import (apply_banked_columns, apply_banked_columns_fused,
+                         apply_events, apply_events_batched, bank_vm, crop_vm,
+                         dense_conv, pad_vm, shifted_bank_masks, tap_matrix,
+                         unbank_vm)
 from .plan import LayerPlan, plan_conv_layer
 from .threshold import threshold_unit
 
@@ -162,10 +172,17 @@ def run_conv_layer_planned(
     vm_dtype = lp.vm_dtype if vm_dtype is None else vm_dtype
     variant = lp.resolve_variant(backend)
     banked = variant == "banked-jax"
+    fused = variant == "fused-handoff"
     geom = lp.geometry
     hh, hw_ = geom.halo
     fmaps = spikes_in.transpose(0, 3, 1, 2)  # (T, C_in, H, W)
-    if banked:
+    if fused:
+        # fused spike-emission path: the padded centre-bank carrier IS the
+        # consumable representation — no pre-shifted mask stack at all
+        ho = build_fused_handoff(spikes_in[None], lp.capacity, geom)
+        smasks = ho.masks[:, :, 0]  # (T, C_in, n_banks, HB+2, WB+2)
+        counts = ho.count[:, 0]     # (T, C_in)
+    elif banked:
         # interlaced event-parallel path: sort-free bank-mask compaction,
         # write masks pre-shifted once and reused by every channel block
         events = build_bank_masks(fmaps, lp.capacity, geom)
@@ -183,16 +200,20 @@ def run_conv_layer_planned(
         block = kernel_block.shape[-1]
         vm0 = pad_vm(jnp.zeros((h, w, block), vm_dtype), geom)  # MemPot, reused (Alg. 1 l.2)
         fired0 = jnp.zeros((h, w, block), jnp.bool_)
-        if banked:  # (C_in, cols, banks, block) tap routing, hoisted
+        if banked or fused:  # (C_in, cols, banks, block) tap routing, hoisted
             taps = jnp.moveaxis(tap_matrix(kernel_block), 2, 0).astype(vm_dtype)
 
         def apply_all_cins(vm, t):
-            if banked:
+            if banked or fused:
+                if fused:
+                    def apply(vb, m, tp):
+                        return apply_banked_columns_fused(vb, m, tp, geom)
+                else:
+                    apply = apply_banked_columns
                 vb = bank_vm(vm, geom)
                 vb = jax.lax.fori_loop(
                     0, c_in,
-                    lambda ci, vb: apply_banked_columns(vb, smasks[t, ci],
-                                                        taps[ci]),
+                    lambda ci, vb: apply(vb, smasks[t, ci], taps[ci]),
                     vb)
                 return unbank_vm(vb, h + 2 * hh, w + 2 * hw_, geom)
 
@@ -387,7 +408,11 @@ def run_conv_layer_batched_chunk(
 ) -> tuple[jax.Array, ConvCarry, LayerStats]:
     """Step one conv layer through a CHUNK of time steps from ``carry``.
 
-    spikes_in: (B, t_chunk, H, W, C_in) bool — any chunk length >= 1.
+    spikes_in: (B, t_chunk, H, W, C_in) bool — any chunk length >= 1; OR
+               an :class:`~repro.core.aeq.FusedHandoff` carrier when the
+               layer is pinned to the ``"fused-handoff"`` variant and the
+               producer already emitted the compacted representation
+               (``csnn.snn_step_chunk`` threads it between layers).
     carry:     the layer's :class:`ConvCarry` at the chunk start (a fresh
                ``init_conv_carry`` at t=0, the previous chunk's result
                otherwise).
@@ -400,8 +425,28 @@ def run_conv_layer_batched_chunk(
     engine's slot-level refill: the engine holds one shared carry batch
     and resets individual rows as slots retire and admit.
     """
-    b_sz, t_steps, h, w, c_in = spikes_in.shape
     variant = lp.resolve_variant(backend)
+    if variant == "fused-handoff":
+        if isinstance(spikes_in, FusedHandoff):
+            ho = spikes_in
+        else:
+            # network edge (or unfused producer): build the carrier here —
+            # same cost class as the banked compaction, still no
+            # pre-shifted mask stack downstream
+            ho = build_fused_handoff(spikes_in, lp.capacity, lp.geometry)
+        t_steps, c_in, b_sz = ho.masks.shape[:3]
+        h, w = lp.in_hw
+        # sparsity from the pre-truncation counts: 0/1 sums in f32 are
+        # exact integers < 2^24, so this is bit-identical to
+        # 1 - mean(dense spikes) without ever materializing the frames
+        total = jnp.sum(ho.count.astype(jnp.float32), axis=(0, 2))
+        sparsity = 1.0 - total / float(t_steps * h * w * c_in)
+        # ho.masks is (t, C_in, B, ...) — already the scan's xs layout
+        return _run_chunk_from_events(
+            None, ho.masks, ho.count, sparsity,
+            (b_sz, t_steps, h, w, c_in), kernels, bias, v_t, lp, carry,
+            variant=variant, backend=backend, vm_dtype=vm_dtype)
+    b_sz, t_steps, h, w, c_in = spikes_in.shape
     banked = variant == "banked-jax"
     # (B, t, H, W, C_in) -> per-(t, b, c_in) event sets, built in one pass
     fmaps = spikes_in.transpose(1, 0, 4, 2, 3)  # (t, B, C_in, H, W)
@@ -457,11 +502,14 @@ def run_conv_layer_batched_chunk_streamed(
     sequential/pallas variants; ``segment_pad`` applies on top exactly as
     in the binned path), and the banked event-parallel variant compacts
     the streamed occupancy with the same ``build_bank_masks`` call the
-    binned path uses.  ``lp.stream_finalize == "sort"`` swaps the
-    rank-based finalization for the binned compaction over the dense bank
-    view (``build_aeq_batched``) — bit-exact by the streaming-equivalence
-    theorem, and the variant the measured autotuner picks at small fmaps
-    where the fused sort beats the rank cumsums' constant factor.
+    binned path uses.  ``lp.resolve_stream_finalize() == "sort"`` swaps
+    the rank-based finalization for the binned compaction over the dense
+    bank view (``build_aeq_batched``) — bit-exact by the
+    streaming-equivalence theorem, and the variant the measured autotuner
+    (and the fmap-size default) picks at small fmaps where the fused sort
+    beats the rank cumsums' constant factor.  The ``"fused-handoff"``
+    variant compacts the streamed banks straight into the padded carrier
+    (``aeq.fused_handoff_from_banks``) — no dense frame view at all.
     Bit-exact vs binning the same events into frames and calling the
     dense-chunk runner either way (tests/test_streaming.py).
     """
@@ -469,6 +517,15 @@ def run_conv_layer_batched_chunk_streamed(
     b_sz, t_steps, c_in = stream.banks.shape[:3]
     variant = lp.resolve_variant(backend)
     banked = variant == "banked-jax"
+    if variant == "fused-handoff":
+        ho = fused_handoff_from_banks(stream.banks, lp.capacity, (h, w),
+                                      lp.geometry)
+        total = jnp.sum(ho.count.astype(jnp.float32), axis=(0, 2))
+        sparsity = 1.0 - total / float(t_steps * h * w * c_in)
+        return _run_chunk_from_events(
+            None, ho.masks, ho.count, sparsity,
+            (b_sz, t_steps, h, w, c_in), kernels, bias, v_t, lp, carry,
+            variant=variant, backend=backend, vm_dtype=vm_dtype)
     # dense view only where the binned path itself is dense (sparsity
     # stat; bank-mask/sort compaction input) — a reshape/transpose, no sort
     frames = stream_frames(stream, (h, w), lp.geometry)  # (B, t, C_in, H, W)
@@ -480,7 +537,7 @@ def run_conv_layer_batched_chunk_streamed(
                               1, 2)
         counts = events.count
     else:
-        if lp.stream_finalize == "sort":
+        if lp.resolve_stream_finalize() == "sort":
             # binned finalization: fused sort over the dense bank view,
             # already in the (t, B, C_in) lead layout the launches index
             queues = build_aeq_batched(frames.transpose(1, 0, 2, 3, 4),
@@ -521,10 +578,12 @@ def _run_chunk_from_events(
 ) -> tuple[jax.Array, ConvCarry, LayerStats]:
     """Shared chunk body: consume pre-built per-(t, b, c_in) event sets
     (queues for the sequential/pallas variants, pre-shifted bank masks for
-    the banked variant) — the part of the chunk runner that is identical
-    whether the events came from dense frames or from the streaming
-    ingestion path."""
+    the banked variant, the padded fused-handoff carrier for the fused
+    variant — both ride the ``smasks`` slot) — the part of the chunk
+    runner that is identical whether the events came from dense frames,
+    the streaming ingestion path, or an upstream fused emission."""
     banked = variant == "banked-jax"
+    fused = variant == "fused-handoff"
     b_sz, t_steps, h, w, c_in = shape
     c_out = kernels.shape[-1]
     channel_block = lp.channel_block
@@ -536,16 +595,20 @@ def _run_chunk_from_events(
     def run_block(kernel_block, bias_block, vm0, fired0):
         # kernel_block: (kh, kw, C_in, Cb); bias_block: (Cb,)
         # vm0: (B, H+2hh, W+2hw, Cb); fired0: (B, H, W, Cb)
-        if banked:  # (C_in, cols, banks, Cb) tap routing, hoisted
+        if banked or fused:  # (C_in, cols, banks, Cb) tap routing, hoisted
             taps = jnp.moveaxis(tap_matrix(kernel_block), 2, 0).astype(vm_dtype)
 
         def apply_all_cins(vm, smasks_t, t):
-            if banked:
+            if banked or fused:
+                if fused:
+                    def apply(vb, m, tp):
+                        return apply_banked_columns_fused(vb, m, tp, geom)
+                else:
+                    apply = apply_banked_columns
                 vb = bank_vm(vm, geom)  # (B, n_banks, hb, wb, Cb)
                 vb = jax.lax.fori_loop(
                     0, c_in,
-                    lambda ci, vb: apply_banked_columns(vb, smasks_t[ci],
-                                                        taps[ci]),
+                    lambda ci, vb: apply(vb, smasks_t[ci], taps[ci]),
                     vb)
                 return unbank_vm(vb, h + 2 * hh, w + 2 * hw_, geom)
 
@@ -587,7 +650,8 @@ def _run_chunk_from_events(
             vm = vm.at[:, hh:h + hh, hw_:w + hw_, :].set(v_new)
             return (vm, fired), spk
 
-        xs = (smasks if banked else jnp.zeros((t_steps, 0), jnp.bool_),
+        xs = (smasks if (banked or fused)
+              else jnp.zeros((t_steps, 0), jnp.bool_),
               jnp.arange(t_steps))
         (vm, fired), spikes = jax.lax.scan(time_step, (vm0, fired0), xs)
         return spikes, vm, fired  # spikes: (t, B, H, W, Cb)

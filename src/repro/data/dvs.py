@@ -119,21 +119,27 @@ def events_to_frames(events: np.ndarray, t_bins: int, hw: tuple[int, int],
 
 
 def events_to_banks(events: np.ndarray, t_bins: int, hw: tuple[int, int],
-                    channels: int = 2) -> np.ndarray:
-    """Scatter raw events straight into the (T, C, 9, HB, WB) bool
+                    channels: int = 2, geometry=None) -> np.ndarray:
+    """Scatter raw events straight into the (T, C, n_banks, HB, WB) bool
     interlace-column banks of :class:`repro.core.aeq.StreamState` — the
     host-side streaming admission: one vectorized assignment per chunk,
-    no threshold encode, no sort (numpy twin of ``aeq.append_events``)."""
+    no threshold encode, no sort (numpy twin of ``aeq.append_events``).
+    ``geometry`` is the first conv layer's window (default 3x3); the bank
+    count and macro grid follow it."""
+    if geometry is None:
+        from repro.core.geometry import GEOM_3X3
+        geometry = GEOM_3X3
+    kh, kw = geometry.kh, geometry.kw
     h, w = hw
-    hb, wb = -(-h // 3), -(-w // 3)
+    hb, wb = -(-h // kh), -(-w // kw)
     ev = np.asarray(events, dtype=np.int64).reshape(-1, 4)
-    banks = np.zeros((t_bins, channels, 9, hb, wb), bool)
+    banks = np.zeros((t_bins, channels, kh * kw, hb, wb), bool)
     if ev.size:
         t, y, x, p = ev.T
         ok = ((t >= 0) & (t < t_bins) & (y >= 0) & (y < h)
               & (x >= 0) & (x < w) & (p >= 0) & (p < channels))
         t, y, x, p = t[ok], y[ok], x[ok], p[ok]
-        banks[t, p, (y % 3) * 3 + x % 3, y // 3, x // 3] = True
+        banks[t, p, (y % kh) * kw + x % kw, y // kh, x // kw] = True
     return banks
 
 

@@ -15,7 +15,16 @@ tests sweep against).
                     gather->add->scatter step, selected by
                     ``LayerPlan.event_par``).
 * threshold_pool  — the thresholding unit (Sec. VI-C): fused bias +
-                    compare + m-TTFS indicator + 3x3 OR-max-pool.
+                    compare + m-TTFS indicator + kxk OR-max-pool, plus
+                    optional fused spike emission (ISSUE 10): with
+                    ``emit_capacity`` set, the unit also returns the
+                    (post-pool) spikes already compacted into the next
+                    layer's padded interlace-bank carrier (occupancy
+                    masks + per-column segment counts, the sort-free
+                    cumulative-rank truncation of ``aeq.ranked_keep``) —
+                    the producer-side queue handoff the ``"fused-handoff"``
+                    scheduler variant consumes without any dense
+                    intermediate.
 
 Both are wired into the Algorithm-1 scheduler via
 core.scheduler.run_conv_layer*(backend="pallas").

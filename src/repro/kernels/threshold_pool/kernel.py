@@ -9,6 +9,14 @@ vectorized tile op; the pool is a reshape-reduce over sublanes.
 Grid: over channel blocks (channels are independent).  The firing
 threshold V_t is layer-static and baked into the kernel as a constant —
 exactly like the synthesized comparator constant on the FPGA.
+
+Fused emission (ISSUE 10): ``emit_capacity`` extends the same VMEM pass
+with the producer-side queue compaction — the output spikes leave the
+unit already as the next layer's fused-handoff bank masks plus
+per-column segment counts (``ref.emit_banked``: sort-free cumulative
+ranks, the ``aeq.stream_queues`` machinery), the TPU analogue of the
+paper's runtime AEQ-builder circuitry sitting right behind the
+comparators.
 """
 from __future__ import annotations
 
@@ -18,13 +26,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.geometry import GEOM_3X3, ConvGeometry
 from repro.kernels.runtime import resolve_interpret
+
+from .ref import emit_banked
 
 _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
 
 
-def _threshold_pool_kernel(vm_ref, bias_ref, fired_ref, vm_out_ref, spikes_ref,
-                           pooled_ref, *, v_t, pool):
+def _threshold_pool_kernel(vm_ref, bias_ref, fired_ref, vm_out_ref,
+                           spikes_ref, pooled_ref, *emit_refs, v_t, pool,
+                           emit_capacity, emit_geometry):
     vm = vm_ref[...]
     bias = bias_ref[...]  # (1, 1, block_c) broadcast over the tile
     sat = _SAT_RANGE.get(vm.dtype)
@@ -40,12 +52,19 @@ def _threshold_pool_kernel(vm_ref, bias_ref, fired_ref, vm_out_ref, spikes_ref,
         h, w, c = spikes.shape
         s = spikes.reshape(h // pool, pool, w // pool, pool, c)
         pooled = jnp.any(jnp.any(s, axis=3), axis=1)
-        pooled_ref[...] = pooled.astype(jnp.int8)
     else:
-        pooled_ref[...] = spikes.astype(jnp.int8)
+        pooled = spikes
+    pooled_ref[...] = pooled.astype(jnp.int8)
+    if emit_capacity is not None:
+        masks_ref, seg_ref = emit_refs
+        masks, seg_counts = emit_banked(pooled, capacity=emit_capacity,
+                                        geometry=emit_geometry)
+        masks_ref[...] = masks.astype(jnp.int8)
+        seg_ref[...] = seg_counts
 
 
-@partial(jax.jit, static_argnames=("v_t", "pool", "block_c", "interpret"))
+@partial(jax.jit, static_argnames=("v_t", "pool", "block_c", "interpret",
+                                   "emit_capacity", "emit_geometry"))
 def threshold_pool_pallas(
     vm: jax.Array,
     bias: jax.Array,
@@ -55,7 +74,9 @@ def threshold_pool_pallas(
     pool: int | None,
     block_c: int = 128,
     interpret: bool | None = None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    emit_capacity: int | None = None,
+    emit_geometry: ConvGeometry = GEOM_3X3,
+):
     """Fused threshold unit over (H, W, C) membrane potentials.
 
     vm:    (H, W, C); H and W must already be multiples of ``pool``.
@@ -64,6 +85,13 @@ def threshold_pool_pallas(
 
     Returns (vm_out, spikes int8 (H,W,C), pooled int8 (H/p, W/p, C)); when
     ``pool`` is None the third output duplicates ``spikes``.
+
+    ``emit_capacity`` additionally emits the fused-handoff compaction of
+    the (post-pool) output inside the same pass — two extra outputs,
+    masks int8 (n_banks, HBp+2, WBp+2, C) and seg_counts int32
+    (n_banks, C) in the ``ref.emit_banked`` layout, with the AEQ capacity
+    truncation applied per channel under ``emit_geometry`` (the NEXT
+    layer's window).  Bit-exact vs the oracle (analysis kernel audit).
     """
     h, w, c = vm.shape
     if pool is not None and (h % pool or w % pool):
@@ -72,23 +100,41 @@ def threshold_pool_pallas(
         raise ValueError(f"C={c} must be a multiple of block_c={block_c} (pad first)")
     ph, pw = (h // pool, w // pool) if pool is not None else (h, w)
     grid = (c // block_c,)
+    in_specs = [
+        pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+        pl.BlockSpec((1, 1, block_c), lambda b: (0, 0, b)),
+        pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+    ]
+    out_specs = [
+        pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+        pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
+        pl.BlockSpec((ph, pw, block_c), lambda b: (0, 0, b)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((h, w, c), vm.dtype),
+        jax.ShapeDtypeStruct((h, w, c), jnp.int8),
+        jax.ShapeDtypeStruct((ph, pw, c), jnp.int8),
+    ]
+    if emit_capacity is not None:
+        geo = emit_geometry
+        hh, hw_ = geo.halo
+        nb = geo.n_banks
+        hbp = -(-(ph + 2 * hh) // geo.kh) + 2
+        wbp = -(-(pw + 2 * hw_) // geo.kw) + 2
+        out_specs += [
+            pl.BlockSpec((nb, hbp, wbp, block_c), lambda b: (0, 0, 0, b)),
+            pl.BlockSpec((nb, block_c), lambda b: (0, b)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((nb, hbp, wbp, c), jnp.int8),
+            jax.ShapeDtypeStruct((nb, c), jnp.int32),
+        ]
     return pl.pallas_call(
-        partial(_threshold_pool_kernel, v_t=v_t, pool=pool),
+        partial(_threshold_pool_kernel, v_t=v_t, pool=pool,
+                emit_capacity=emit_capacity, emit_geometry=emit_geometry),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
-            pl.BlockSpec((1, 1, block_c), lambda b: (0, 0, b)),
-            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
-        ],
-        out_specs=[
-            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
-            pl.BlockSpec((h, w, block_c), lambda b: (0, 0, b)),
-            pl.BlockSpec((ph, pw, block_c), lambda b: (0, 0, b)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((h, w, c), vm.dtype),
-            jax.ShapeDtypeStruct((h, w, c), jnp.int8),
-            jax.ShapeDtypeStruct((ph, pw, c), jnp.int8),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=resolve_interpret(interpret),
     )(vm, bias.reshape(1, 1, c), fired)

@@ -7,6 +7,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.geometry import GEOM_3X3, ConvGeometry
+
 from .kernel import threshold_pool_pallas
 from .ref import threshold_pool_ref
 
@@ -14,7 +16,8 @@ _NEG = {jnp.float32.dtype: -3e38, jnp.bfloat16.dtype: -3e38,
         jnp.int8.dtype: -128, jnp.int16.dtype: -32768}
 
 
-@partial(jax.jit, static_argnames=("v_t", "pool", "block_c", "use_kernel", "interpret"))
+@partial(jax.jit, static_argnames=("v_t", "pool", "block_c", "use_kernel",
+                                   "interpret", "emit_capacity", "emit_geometry"))
 def threshold_pool(
     vm: jax.Array,
     bias: jax.Array,
@@ -25,14 +28,37 @@ def threshold_pool(
     block_c: int = 128,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    emit_capacity: int | None = None,
+    emit_geometry: ConvGeometry = GEOM_3X3,
 ):
     """Fused bias + threshold + m-TTFS indicator + optional OR-max-pool.
 
     vm: (H, W, C) any supported dtype; bias: (C,); fired: (H, W, C) bool/int8.
     Returns (vm_out (H,W,C), fired_out bool (H,W,C), spikes_out bool
     (H,W,C) or pooled (ceil(H/p), ceil(W/p), C)).
+
+    ``emit_capacity`` turns on fused spike emission (ISSUE 10): two extra
+    outputs — bank masks bool (n_banks, HBp+2, WBp+2, C) and seg_counts
+    int32 (n_banks, C) — carrying the (post-pool) output already compacted
+    into the next layer's fused-handoff layout under ``emit_geometry``.
+    The pool padding makes the pooled map exactly (ceil(H/p), ceil(W/p)),
+    so emission needs no spatial crop; padded channels never spike (the
+    ``_NEG`` fill) and are cropped from the channel axis.
     """
+    if vm.ndim != 3:
+        raise ValueError(f"vm must be (H, W, C), got shape {vm.shape}")
+    if vm.dtype not in _NEG:
+        supported = ", ".join(str(d) for d in _NEG)
+        raise ValueError(f"unsupported vm dtype {vm.dtype}; expected one of {supported}")
     h, w, c = vm.shape
+    if bias.shape != (c,):
+        raise ValueError(f"bias must have shape ({c},) to match vm channels, got {bias.shape}")
+    if fired.shape != vm.shape:
+        raise ValueError(f"fired shape {fired.shape} must match vm shape {vm.shape}")
+    if pool is not None and pool < 1:
+        raise ValueError(f"pool must be >= 1, got {pool}")
+    if emit_capacity is not None and emit_capacity < 1:
+        raise ValueError(f"emit_capacity must be >= 1, got {emit_capacity}")
     pw = pool if pool is not None else 1
     pad_h, pad_w = -h % pw, -w % pw
     pad_c = -c % block_c
@@ -41,13 +67,21 @@ def threshold_pool(
     bias_p = jnp.pad(bias, (0, pad_c))
     fired_p = jnp.pad(fired.astype(jnp.int8), ((0, pad_h), (0, pad_w), (0, pad_c)))
     fn = threshold_pool_pallas if use_kernel else threshold_pool_ref
-    kwargs = dict(v_t=v_t, pool=pool)
+    kwargs = dict(v_t=v_t, pool=pool,
+                  emit_capacity=emit_capacity, emit_geometry=emit_geometry)
     if use_kernel:
         kwargs.update(block_c=block_c, interpret=interpret)
-    vm_out, spikes, pooled = fn(vm_p, bias_p, fired_p, **kwargs)
+    out = fn(vm_p, bias_p, fired_p, **kwargs)
+    vm_out, spikes, pooled = out[:3]
     vm_out = vm_out[:h, :w, :c]
     fired_out = spikes[:h, :w, :c] != 0
     if pool is None:
-        return vm_out, fired_out, fired_out
-    oh, ow = -(-h // pool), -(-w // pool)
-    return vm_out, fired_out, pooled[:oh, :ow, :c] != 0
+        spikes_out = fired_out
+    else:
+        oh, ow = -(-h // pool), -(-w // pool)
+        spikes_out = pooled[:oh, :ow, :c] != 0
+    if emit_capacity is None:
+        return vm_out, fired_out, spikes_out
+    masks, seg_counts = out[3], out[4]
+    return (vm_out, fired_out, spikes_out,
+            masks[..., :c] != 0, seg_counts[..., :c])

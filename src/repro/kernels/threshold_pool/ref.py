@@ -4,11 +4,47 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.aeq import place_padded_banks, ranked_keep
+from repro.core.geometry import GEOM_3X3, ConvGeometry
+
 _SAT_RANGE = {jnp.int8.dtype: (-128, 127), jnp.int16.dtype: (-32768, 32767)}
 
 
+def emit_banked(spikes_map: jax.Array, *, capacity: int,
+                geometry: ConvGeometry = GEOM_3X3
+                ) -> tuple[jax.Array, jax.Array]:
+    """Fused spike emission: bank an output spike map as it leaves the
+    threshold unit (ISSUE 10 tentpole, shared by kernel and oracle).
+
+    spikes_map: (H', W', C) bool/int8 — the unit's (post-pool) output.
+    Returns (masks (n_banks, HBp+2, WBp+2, C) bool, seg_counts
+    (n_banks, C) int32): per channel, the next layer's fused-handoff
+    centre-bank occupancy (``aeq.FusedHandoff`` layout, channel-last for
+    the kernel's channel-block grid) and the kept events per interlace
+    column.  Reuses the sort-free cumulative-rank truncation
+    (``aeq.ranked_keep``) and the static bank placement
+    (``aeq.place_padded_banks``) — identical content to
+    ``aeq.build_fused_handoff`` over the same map
+    (tests/test_fused_handoff.py).
+    """
+    sp = spikes_map != 0
+    h, w, c = sp.shape
+    kh, kw = geometry.kh, geometry.kw
+    ph, pw = -h % kh, -w % kw
+    x = jnp.pad(sp, ((0, ph), (0, pw), (0, 0)))
+    hb, wb = (h + ph) // kh, (w + pw) // kw
+    # channel-first interlace (same bank order as ``aeq.interlace``)
+    il = x.reshape(hb, kh, wb, kw, c).transpose(4, 1, 3, 0, 2)
+    il = il.reshape(c, geometry.n_banks, hb, wb)
+    kept_il, _, seg_counts = ranked_keep(il, capacity, (h, w))
+    masks = place_padded_banks(kept_il, (h, w), geometry)
+    return jnp.moveaxis(masks, 0, -1), jnp.moveaxis(seg_counts, 0, -1)
+
+
 def threshold_pool_ref(vm: jax.Array, bias: jax.Array, fired: jax.Array, *,
-                       v_t: float, pool: int | None):
+                       v_t: float, pool: int | None,
+                       emit_capacity: int | None = None,
+                       emit_geometry: ConvGeometry = GEOM_3X3):
     sat = _SAT_RANGE.get(vm.dtype)
     b = bias.reshape(1, 1, -1)
     if sat is not None:
@@ -23,4 +59,9 @@ def threshold_pool_ref(vm: jax.Array, bias: jax.Array, fired: jax.Array, *,
         pooled = jnp.any(s, axis=(1, 3))
     else:
         pooled = spikes
-    return vm_new, spikes.astype(jnp.int8), pooled.astype(jnp.int8)
+    if emit_capacity is None:
+        return vm_new, spikes.astype(jnp.int8), pooled.astype(jnp.int8)
+    masks, seg_counts = emit_banked(pooled, capacity=emit_capacity,
+                                    geometry=emit_geometry)
+    return (vm_new, spikes.astype(jnp.int8), pooled.astype(jnp.int8),
+            masks.astype(jnp.int8), seg_counts)

@@ -255,12 +255,13 @@ class CSNNEngine:
             state = init_state(self._params, self.cfg, self.plan, self._slots)
             if not self.serve_cfg.stream:  # stream admission never encodes
                 self._encode(jnp.zeros((1, h, w, c), jnp.float32))
+            geom = self.plan.layers[0].geometry  # layer-0 window shapes the
             for b in self._buckets:  # one compile per occupancy bucket
                 idx = np.full(b, self._slots, dtype=np.int32)  # all pads
-                if self.serve_cfg.stream:
+                if self.serve_cfg.stream:  # stream banks, whatever the kxk
                     chunk = StreamState(banks=jnp.zeros(
-                        (b, self._t_chunk, c, 9, -(-h // 3), -(-w // 3)),
-                        jnp.bool_))
+                        (b, self._t_chunk, c, geom.n_banks,
+                         -(-h // geom.kh), -(-w // geom.kw)), jnp.bool_))
                 else:
                     chunk = jnp.zeros((b, self._t_chunk, h, w, c), jnp.bool_)
                 state, logits = self._step(state, idx, chunk,
@@ -386,6 +387,7 @@ class CSNNEngine:
         S, tc, T = self._slots, self._t_chunk, self.cfg.t_steps
         h, w = self.cfg.input_hw
         c = self.cfg.input_channels
+        geom = self.plan.layers[0].geometry  # shapes the stream bank layout
         state = init_state(self._params, self.cfg, self.plan, S)
         slot_spk = [None] * S   # per-slot (T, H, W, C) encoded inputs (host)
         slot_t = [0] * S        # input steps consumed per slot
@@ -410,7 +412,7 @@ class CSNNEngine:
             if item[0] is None:
                 if stream:
                     item[0] = events_to_banks(
-                        np.asarray(item[1]), T, (h, w), c)
+                        np.asarray(item[1]), T, (h, w), c, geometry=geom)
                 else:
                     item[0] = np.asarray(
                         self._encode(jnp.asarray(item[1])[None])[0],
@@ -473,8 +475,8 @@ class CSNNEngine:
             b = next(bb for bb in self._buckets if bb >= n_active)
             idx = np.full(b, S, dtype=np.int32)
             chunk = np.zeros(
-                (b, tc, c, 9, -(-h // 3), -(-w // 3)) if stream
-                else (b, tc, h, w, c), dtype=bool)
+                (b, tc, c, geom.n_banks, -(-h // geom.kh), -(-w // geom.kw))
+                if stream else (b, tc, h, w, c), dtype=bool)
             admit_b = np.zeros(b, dtype=bool)
             for j, i in enumerate(act):
                 idx[j] = i

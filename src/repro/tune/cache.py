@@ -31,8 +31,11 @@ from typing import Optional
 # a way that invalidates old entries wholesale.  v2: parametric conv
 # geometry — layer fingerprints carry explicit kh/kw/stride, so winners
 # measured under the hardwired-3x3 schema can never be replayed onto a
-# plan with a different window.
-CACHE_VERSION = 2
+# plan with a different window.  v3: the fused-handoff kernel variant
+# joined the candidate axis and the None stream_finalize default became
+# fmap-size-dependent — winners measured without the fused candidate (or
+# recorded under the old always-"ranks" default) are stale.
+CACHE_VERSION = 3
 
 ENV_VAR = "REPRO_PLAN_CACHE"
 _DEFAULT = "~/.cache/repro/plan_cache.json"

@@ -52,6 +52,9 @@ def layer_candidates(lp: LayerPlan, *, batch_tile: int,
     cands = [Candidate(be, 1, "sequential")
              for be in bes[:max(max_block_candidates, 1)]]
     cands.append(Candidate(None, max(lp.event_par, 1), "banked-jax"))
+    # fused-handoff skips the dense round trip between layers entirely —
+    # like banked-jax it ignores block_e/event_par, so one candidate
+    cands.append(Candidate(None, 1, "fused-handoff"))
     if include_pallas:
         ep = (lp.event_par if lp.event_par > 1
               else autotune_event_par(lp.capacity, vm_tile,

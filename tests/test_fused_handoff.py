@@ -1,0 +1,256 @@
+"""Fused spike emission (ISSUE 10): threshold -> compact queue handoff.
+
+Contracts pinned here:
+
+* the :class:`~repro.core.aeq.FusedHandoff` carrier is exactly
+  ``build_bank_masks`` over the same fmaps with one macro cell of zero
+  padding per side and the (T, B, C) lead transposed to (T, C, B) —
+  truncation included (the shared ``ranked_keep`` machinery);
+* ``fused_handoff_from_banks`` (the streamed builder) is bit-exact vs
+  ``build_fused_handoff`` over the binned frames of the same banks — the
+  streaming-equivalence theorem extended to the fused carrier;
+* the threshold unit's fused emission (``threshold_pool`` with
+  ``emit_capacity``) returns, kernel and oracle alike, the exact masks
+  ``build_fused_handoff`` would compact from its spike output;
+* end to end, the ``"fused-handoff"`` variant is BIT-EXACT vs the
+  ``banked-jax`` path — logits and full carry — across dtypes
+  (float32/int16/int8) x window k in {1, 3, 5} x {batched, chunked,
+  streamed} (the ISSUE 10 acceptance matrix).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aeq import (StreamState, build_bank_masks,
+                            build_fused_handoff, fused_handoff_from_banks)
+from repro.core.csnn import (CSNNConfig, ConvSpec, FCSpec, init_params,
+                             init_state, snn_apply_batched, snn_readout,
+                             snn_step_chunk)
+from repro.core.geometry import ConvGeometry
+from repro.core.plan import plan_network
+from repro.kernels.threshold_pool.ops import threshold_pool
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(k):
+    return CSNNConfig(input_hw=(12, 12),
+                      layers=(ConvSpec(4, kernel=k),
+                              ConvSpec(4, kernel=k, pool=3), FCSpec(3)),
+                      t_steps=4)
+
+
+def _params(cfg, sat_bits, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    if sat_bits is None:
+        return params
+    dtype = {8: jnp.int8, 16: jnp.int16}[sat_bits]
+    return jax.tree.map(
+        lambda x: jnp.clip(jnp.round(x * 16), -100, 100).astype(dtype),
+        params)
+
+
+def _spikes(cfg, batch=2, density=0.3, seed=3):
+    rng = np.random.default_rng(seed)
+    h, w = cfg.input_hw
+    return jnp.asarray(
+        (rng.random((batch, cfg.t_steps, h, w, cfg.input_channels))
+         < density).astype(np.float32))
+
+
+def _random_banks(rng, lead, k, h, w, density):
+    """Random ingestion banks respecting the stream invariant: bank cells
+    past the field edge (i >= h or j >= w — unreachable by
+    ``append_events``) are never occupied.  When k does not divide h/w,
+    unmasked random data would plant phantom events there."""
+    hb, wb = -(-h // k), -(-w // k)
+    banks = rng.random((*lead, k * k, hb, wb)) < density
+    for s in range(k * k):
+        si, sj = divmod(s, k)
+        banks[..., s, -(-(h - si) // k):, :] = False
+        banks[..., s, :, -(-(w - sj) // k):] = False
+    return jnp.asarray(banks)
+
+
+# ------------------------------------------------------- carrier identity
+class TestCarrierIdentity:
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    @pytest.mark.parametrize("cap", [16, 11 * 13])  # truncating / covering
+    def test_equals_padded_bank_masks(self, k, cap):
+        geom = ConvGeometry(k, k)
+        rng = np.random.default_rng(k * 100 + cap)
+        spikes = jnp.asarray(rng.random((2, 3, 11, 13, 2)) < 0.4)
+        ho = build_fused_handoff(spikes, cap, geom)
+        # same fmaps through the banked consumer's reference compaction
+        bm = build_bank_masks(jnp.transpose(spikes, (1, 4, 0, 2, 3)),
+                              cap, geom)
+        want = np.pad(np.asarray(bm.masks),
+                      [(0, 0)] * 4 + [(1, 1), (1, 1)])
+        np.testing.assert_array_equal(np.asarray(ho.masks), want)
+        np.testing.assert_array_equal(
+            np.asarray(ho.count), np.swapaxes(np.asarray(bm.count), 1, 2))
+
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    def test_streamed_builder_matches_binned(self, k):
+        """fused_handoff_from_banks over ingestion banks == binning the
+        same occupancy to frames and building the carrier from those."""
+        geom = ConvGeometry(k, k)
+        h, w = 12, 12
+        rng = np.random.default_rng(k)
+        banks = _random_banks(rng, (2, 3, 2), k, h, w, 0.2)
+        ho_s = fused_handoff_from_banks(banks, 40, (h, w), geom)
+        # deinterlace the banks back to dense (B, T, H, W, C) frames
+        b, t, c, nb, hb, wb = banks.shape
+        frames = np.zeros((b, t, h, w, c), bool)
+        bk = np.asarray(banks)
+        for s in range(nb):
+            si, sj = divmod(s, k)
+            frames[:, :, si::k, sj::k, :] = np.moveaxis(
+                bk[:, :, :, s, : -(-(h - si) // k), : -(-(w - sj) // k)],
+                2, -1)
+        ho_b = build_fused_handoff(jnp.asarray(frames), 40, geom)
+        np.testing.assert_array_equal(np.asarray(ho_s.masks),
+                                      np.asarray(ho_b.masks))
+        np.testing.assert_array_equal(np.asarray(ho_s.count),
+                                      np.asarray(ho_b.count))
+
+    def test_streamed_builder_rejects_mismatched_banks(self):
+        banks = jnp.zeros((1, 2, 1, 9, 4, 4), bool)
+        with pytest.raises(ValueError, match="columns"):
+            fused_handoff_from_banks(banks, 16, (12, 12),
+                                     ConvGeometry(5, 5))
+        with pytest.raises(ValueError, match="do not match"):
+            fused_handoff_from_banks(banks, 16, (20, 20))
+
+
+# ----------------------------------------------------- threshold emission
+class TestFusedEmission:
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    @pytest.mark.parametrize("pool", [None, 3])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int16])
+    def test_kernel_oracle_and_builder_agree(self, k, pool, dtype):
+        geom = ConvGeometry(k, k)
+        h, w, c = 10, 11, 4
+        rng = np.random.default_rng(hash((k, pool, str(dtype))) % 2**32)
+        if dtype == jnp.float32:
+            vm = jnp.asarray(rng.normal(size=(h, w, c)).astype(np.float32))
+            bias = jnp.asarray(rng.normal(size=(c,)).astype(np.float32))
+            v_t = 0.5
+        else:
+            vm = jnp.asarray(rng.integers(-100, 100, (h, w, c)), dtype)
+            bias = jnp.asarray(rng.integers(-10, 10, (c,)), dtype)
+            v_t = 20
+        fired = jnp.asarray(rng.random((h, w, c)) < 0.1)
+        cap = (h * w) // 2  # keeps the rank-truncation path live
+        outs_k = threshold_pool(vm, bias, fired, v_t=v_t, pool=pool,
+                                block_c=c, use_kernel=True,
+                                emit_capacity=cap, emit_geometry=geom)
+        outs_r = threshold_pool(vm, bias, fired, v_t=v_t, pool=pool,
+                                use_kernel=False,
+                                emit_capacity=cap, emit_geometry=geom)
+        assert len(outs_k) == len(outs_r) == 5
+        for a, b in zip(outs_k, outs_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the emitted masks ARE the carrier the consumer expects
+        ho = build_fused_handoff(outs_r[2][None, None], cap, geom)
+        np.testing.assert_array_equal(
+            np.asarray(outs_r[3]),
+            np.moveaxis(np.asarray(ho.masks[0, :, 0]), 0, -1))
+
+    def test_emission_off_keeps_three_outputs(self):
+        vm = jnp.zeros((6, 6, 2))
+        outs = threshold_pool(vm, jnp.zeros((2,)), jnp.zeros((6, 6, 2),
+                                                             bool), v_t=1.0)
+        assert len(outs) == 3
+
+
+# -------------------------- end to end: fused == banked, the full matrix
+class TestFusedPipelineBitExact:
+    """The ISSUE 10 acceptance matrix: fused-handoff vs banked-jax,
+    dtypes x k x {batched, chunked, streamed}, logits AND carry."""
+
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    @pytest.mark.parametrize("sat_bits", [None, 16, 8])
+    def test_batched_and_chunked(self, k, sat_bits):
+        cfg = _cfg(k)
+        params = _params(cfg, sat_bits)
+        sp = _spikes(cfg)
+        n = len(cfg.layers) - 1
+        kw = dict(capacity=64, channel_block=4, batch_tile=2,
+                  sat_bits=sat_bits)
+        banked = plan_network(cfg, **kw, variant="banked-jax", event_par=4)
+        fused = plan_network(cfg, **kw, variant=["fused-handoff"] * n)
+        out_b = np.asarray(snn_apply_batched(params, sp, cfg, banked,
+                                             collect_stats=False))
+        out_f = np.asarray(snn_apply_batched(params, sp, cfg, fused,
+                                             collect_stats=False))
+        np.testing.assert_array_equal(out_f, out_b)
+        # chunked: same knobs with t_chunk=2, stepping the carry
+        banked_c = plan_network(cfg, **kw, t_chunk=2, variant="banked-jax",
+                                event_par=4)
+        fused_c = plan_network(cfg, **kw, t_chunk=2,
+                               variant=["fused-handoff"] * n)
+        states, logits = [], []
+        for plan in (banked_c, fused_c):
+            state = init_state(params, cfg, plan, sp.shape[0])
+            for t0 in range(0, cfg.t_steps, 2):
+                state = snn_step_chunk(params, state, sp[:, t0:t0 + 2],
+                                       cfg, plan)
+            states.append(state)
+            logits.append(np.asarray(snn_readout(params, state, cfg)))
+        np.testing.assert_array_equal(logits[1], logits[0])
+        for a, b in zip(jax.tree_util.tree_leaves(states[1]),
+                        jax.tree_util.tree_leaves(states[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    @pytest.mark.parametrize("sat_bits", [None, 16, 8])
+    def test_streamed(self, k, sat_bits):
+        """StreamState ingestion: the fused layer builds its carrier
+        straight from the interlace banks — no dense frame view at all —
+        and must still match the banked streamed step bit for bit."""
+        cfg = _cfg(k)
+        params = _params(cfg, sat_bits)
+        h, w = cfg.input_hw
+        rng = np.random.default_rng(17 + k)
+        banks = _random_banks(rng, (2, cfg.t_steps, cfg.input_channels),
+                              k, h, w, 0.15)
+        n = len(cfg.layers) - 1
+        kw = dict(capacity=64, channel_block=4, batch_tile=2,
+                  sat_bits=sat_bits, ingest=True, t_chunk=2)
+        banked = plan_network(cfg, **kw, variant="banked-jax", event_par=4)
+        fused = plan_network(cfg, **kw, variant=["fused-handoff"] * n)
+        states, logits = [], []
+        for plan in (banked, fused):
+            state = init_state(params, cfg, plan, banks.shape[0])
+            for t0 in range(0, cfg.t_steps, 2):
+                sp = StreamState(banks=banks[:, t0:t0 + 2])
+                state = snn_step_chunk(params, state, sp, cfg, plan)
+            states.append(state)
+            logits.append(np.asarray(snn_readout(params, state, cfg)))
+        np.testing.assert_array_equal(logits[1], logits[0])
+        for a, b in zip(jax.tree_util.tree_leaves(states[1]),
+                        jax.tree_util.tree_leaves(states[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fused_never_auto_selected(self):
+        """resolve_variant must not pick fused-handoff on its own — it
+        changes the inter-layer dataflow, so only a pin enables it."""
+        cfg = _cfg(3)
+        for ep in (1, 4, None):
+            plan = plan_network(cfg, capacity=64, channel_block=4,
+                                event_par=ep)
+            for lp in plan.layers:
+                assert lp.resolve_variant("jax") != "fused-handoff"
+
+    def test_stream_finalize_default_resolves_by_fmap_size(self):
+        cfg = _cfg(3)  # 12x12 = 144 <= 256 -> "sort"
+        plan = plan_network(cfg, capacity=64, ingest=True)
+        assert plan.layers[0].resolve_stream_finalize() == "sort"
+        big = CSNNConfig()  # paper 28x28 = 784 -> "ranks"
+        bplan = plan_network(big, capacity=256, ingest=True)
+        assert bplan.layers[0].resolve_stream_finalize() == "ranks"
+        pinned = plan_network(cfg, capacity=64, ingest=True,
+                              stream_finalize="ranks")
+        assert pinned.layers[0].resolve_stream_finalize() == "ranks"

@@ -182,7 +182,7 @@ class TestPlanCacheGeometryKey:
         from repro.tune.cache import (CACHE_VERSION, PlanCache, cache_key,
                                       env_descriptor, geometry_descriptor)
 
-        assert CACHE_VERSION == 2
+        assert CACHE_VERSION == 3  # v3: fused-handoff on the candidate axis
         cfg3 = CSNNConfig(input_hw=(12, 12),
                           layers=(ConvSpec(8), ConvSpec(8, pool=3),
                                   FCSpec(10)),

@@ -122,6 +122,62 @@ class TestThresholdPoolKernel:
                                       v_t=10, pool=None)
         assert int(vm_out[0, 0, 0]) == 32767
 
+    def test_non_dividing_pool_window_pads_to_exact_output(self):
+        """H, W not multiples of the pool window: ops pads with the
+        never-spikes fill and the pooled map is exactly (ceil(H/p),
+        ceil(W/p)) — also directly at the kernel level, where the padded
+        operand contract holds by construction."""
+        from repro.kernels.threshold_pool.kernel import threshold_pool_pallas
+        vm = jnp.zeros((7, 8, 2))
+        _, _, pooled = threshold_pool(vm, jnp.full((2,), 5.0),
+                                      jnp.zeros((7, 8, 2), bool),
+                                      v_t=1.0, pool=3)
+        assert pooled.shape == (3, 3, 2)
+        outs = threshold_pool_pallas(jnp.zeros((9, 9, 2)), jnp.zeros((2,)),
+                                     jnp.zeros((9, 9, 2), jnp.int8),
+                                     v_t=1.0, pool=3, block_c=2,
+                                     interpret=True)
+        assert outs[2].shape == (3, 3, 2)
+
+
+class TestThresholdPoolOpsValidation:
+    """Every ``raise ValueError`` branch of threshold_pool/ops.py,
+    asserted by message — the negative-path style of tests/test_plan.py's
+    TestPlanValidationErrors."""
+
+    VM = jnp.zeros((6, 6, 2))
+    BIAS = jnp.zeros((2,))
+    FIRED = jnp.zeros((6, 6, 2), bool)
+
+    def test_rejects_wrong_vm_rank(self):
+        with pytest.raises(ValueError, match=r"vm must be \(H, W, C\)"):
+            threshold_pool(jnp.zeros((6, 6)), self.BIAS, self.FIRED,
+                           v_t=1.0)
+
+    def test_rejects_unsupported_dtype(self):
+        with pytest.raises(ValueError, match="unsupported vm dtype"):
+            threshold_pool(jnp.zeros((6, 6, 2), jnp.int32), self.BIAS,
+                           self.FIRED, v_t=1.0)
+
+    def test_rejects_bias_channel_mismatch(self):
+        with pytest.raises(ValueError, match="bias must have shape"):
+            threshold_pool(self.VM, jnp.zeros((3,)), self.FIRED, v_t=1.0)
+
+    def test_rejects_fired_latch_shape_mismatch(self):
+        with pytest.raises(ValueError, match="fired shape"):
+            threshold_pool(self.VM, self.BIAS, jnp.zeros((5, 6, 2), bool),
+                           v_t=1.0)
+
+    def test_rejects_nonpositive_pool(self):
+        with pytest.raises(ValueError, match="pool must be >= 1"):
+            threshold_pool(self.VM, self.BIAS, self.FIRED, v_t=1.0,
+                           pool=0)
+
+    def test_rejects_nonpositive_emit_capacity(self):
+        with pytest.raises(ValueError, match="emit_capacity must be >= 1"):
+            threshold_pool(self.VM, self.BIAS, self.FIRED, v_t=1.0,
+                           emit_capacity=0)
+
 
 class TestConversionAndPipelineSim:
     def test_normalize_preserves_argmax(self):
